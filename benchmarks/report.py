@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline sections from the saved
+dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.report > results/roofline_report.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import DRYRUN_JSON, roofline_table  # noqa: E402
+
+
+def dryrun_section(cells: list[dict]) -> str:
+    out = ["### §Dry-run — 40 (arch × shape) cells × {16×16, 2×16×16} meshes",
+           "",
+           "Every cell lowers + compiles (SPMD, 256/512 partitions). "
+           "`GB/dev` = per-device argument + temp bytes from "
+           "`compiled.memory_analysis()`; collectives from the compiled HLO.",
+           "",
+           "| arch | shape | mesh | compile s | GB/dev | collectives (raw) | "
+           "x-pod |",
+           "|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("arch") == "tpcc":
+            continue
+        if c.get("skipped"):
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                       f"— | — | *skipped: sub-quadratic path required* | — |")
+            continue
+        mem = c.get("memory", {})
+        gb = ((mem.get("argument_bytes") or 0)
+              + (mem.get("temp_bytes") or 0)) / 1e9
+        cols = c.get("collectives", {})
+        counts = ", ".join(f"{k}×{v}" for k, v in
+                           sorted(cols.get("counts", {}).items())) or "none"
+        xp = cols.get("cross_pod", "—")
+        out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                   f"{c.get('compile_seconds', 0):.1f} | {gb:.1f} | "
+                   f"{counts} | {xp} |")
+    return "\n".join(out)
+
+
+def roofline_section(rows: list[dict]) -> str:
+    out = ["### §Roofline — three terms per cell (TPU v5e: 197 TF/s bf16, "
+           "819 GB/s HBM, 50 GB/s ICI)",
+           "",
+           "Compute/memory terms are analytic (documented formulas — XLA's "
+           "`cost_analysis()` counts scan bodies once, verified); the "
+           "collective term uses loop-scaled bytes parsed from the compiled "
+           "HLO. `useful` = MODEL_FLOPS / total FLOPs (6·N·D dense, "
+           "6·N_active·D MoE; remat and attention overheads lower it).",
+           "",
+           "| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | useful | MFU@roof | GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"*skipped* ({r['reason'][:48]}…) | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_ms']:.2f} ms | {r['t_memory_ms']:.2f} ms | "
+            f"{r['t_collective_ms']:.2f} ms | **{r['bottleneck']}** | "
+            f"{r['useful_frac']:.3f} | {r['mfu_at_roofline']:.3f} | "
+            f"{r['hbm_gb_per_dev']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    with open(DRYRUN_JSON) as f:
+        cells = json.load(f)
+    tpcc_path = os.path.join(os.path.dirname(DRYRUN_JSON), "dryrun_tpcc.json")
+    tpcc = json.load(open(tpcc_path)) if os.path.exists(tpcc_path) else []
+
+    print(dryrun_section(cells))
+    print()
+    if tpcc:
+        print("TPC-C engine (the paper's workload, spec cardinalities, "
+              "warehouse-sharded):")
+        print()
+        print("| mesh | compile s | hot-path collectives |")
+        print("|---|---|---|")
+        for c in tpcc:
+            desc = c["collectives"]["describe"]
+            print(f"| {c['mesh']} | {c['compile_seconds']:.1f} | {desc} |")
+        print()
+    print(roofline_section(roofline_table()))
+
+
+if __name__ == "__main__":
+    main()

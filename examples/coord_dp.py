@@ -1,0 +1,78 @@
+"""Coordination-avoiding data parallelism, demonstrated on a simulated
+multi-pod mesh (8 host devices = 2 pods x 2 data x 2 model).
+
+Shows the paper's execution model applied to training:
+  * sync mode     — gradient all-reduce crosses pods every step;
+  * hierarchical  — the hot path has ZERO cross-pod collectives (verified
+    from the compiled HLO); the deferred merge is the only DCN traffic,
+    amortized over merge_every steps and optionally int8-compressed;
+  * both modes converge (loss goes down either way).
+
+Run:  PYTHONPATH=src python examples/coord_dp.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.models.config import ShapeConfig  # noqa: E402
+from repro.models.sharding import Rules  # noqa: E402
+from repro.optim import adamw, coord  # noqa: E402
+from repro.utils.hlo import collective_stats, cross_pod_collectives  # noqa: E402
+
+POD_SIZE = 4  # devices per pod on the 2x2x2 mesh
+
+
+def main() -> None:
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = registry.get_config("smollm-360m").reduced()
+    rules = Rules(batch=("pod", "data"))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=60)
+    batch_specs = registry.train_input_specs(cfg, ShapeConfig("x", 32, 8, "train"))
+
+    for mode, compress in (("sync", "none"), ("hierarchical", "none"),
+                           ("hierarchical", "int8")):
+        cc = coord.CoordConfig(mode=mode, merge_every=4, compress=compress)
+        setup = coord.build(cfg, rules, mesh, cc, opt_cfg,
+                            lambda c, r: registry.make_loss_fn(c, r, remat=False),
+                            batch_specs)
+
+        text = setup.step_fn.lower(setup.abstract_state,
+                                   batch_specs).compile().as_text()
+        cs = collective_stats(text)
+        xp = cross_pod_collectives(text, POD_SIZE)
+        print(f"\n== {mode} (compress={compress}) ==")
+        print(f"  step HLO: {cs.total_ops} collectives "
+              f"({cs.total_bytes() / 1e6:.2f} MB), cross-pod: {len(xp)}"
+              + ("   <- hot path never leaves the pod" if not xp else ""))
+        if setup.merge_fn is not None:
+            mtext = setup.merge_fn.lower(setup.abstract_state).compile().as_text()
+            mcs = collective_stats(mtext)
+            mxp = cross_pod_collectives(mtext, POD_SIZE)
+            print(f"  merge HLO: {mcs.total_ops} collectives "
+                  f"({mcs.total_bytes() / 1e6:.2f} MB), cross-pod: {len(mxp)}"
+                  f"  [runs every {cc.merge_every} steps]")
+
+        # train a few steps to show convergence
+        state = setup.init_fn(jax.random.PRNGKey(0))
+        batch = registry.make_train_batch(jax.random.PRNGKey(1), cfg, 8, 32)
+        batch = jax.device_put(batch, setup.batch_shardings)
+        losses = []
+        prev_total = 0.0
+        for i in range(8):
+            state = setup.step_fn(state, batch)
+            if setup.merge_fn is not None and (i + 1) % cc.merge_every == 0:
+                state = setup.merge_fn(state)
+            total = float(state.loss_slots.sum())
+            losses.append(total - prev_total)
+            prev_total = total
+        n_pods = state.loss_slots.shape[0]
+        print(f"  loss (per step, summed over {n_pods} pod slot(s)): "
+              f"{losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

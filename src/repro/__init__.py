@@ -1,0 +1,12 @@
+"""repro — Coordination-Avoiding Systems in JAX.
+
+Production-grade reproduction + extension of "Coordination Avoidance in
+Database Systems" (Bailis et al., 2014): invariant-confluence analysis
+(core/), the TPC-C coordination-free engine (txn/), and the technique as a
+first-class feature of a multi-pod training/serving stack (models/, optim/,
+runtime/, launch/) with Pallas TPU kernels (kernels/).
+
+See README.md, DESIGN.md, EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,225 @@
+"""Architecture registry: ``--arch <id>`` -> config, model functions, specs.
+
+Single dispatch point used by the launcher (train/serve/dryrun), the smoke
+tests, and the benchmarks. Every assigned architecture is selectable; each
+family maps onto the shared model API (init_params / loss_fn / decode_step /
+prefill) plus family-specific extra inputs (stub frontends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hymba, kv_cache, moe, rwkv6, transformer, vlm, whisper
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_MODULES = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "hymba-1.5b": "repro.configs.hymba_1b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+ARCHS = tuple(ARCH_MODULES)
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": rwkv6,
+    "hybrid": hymba,
+    "vlm": vlm,
+    "audio": whisper,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[arch]).config()
+
+
+def model_module(cfg: ModelConfig):
+    return FAMILY_MODULES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Shape/cell applicability
+# ---------------------------------------------------------------------------
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is (arch x shape) runnable? Returns (ok, reason-if-not)."""
+    if shape.kind == "long_decode" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 512k decode requires a "
+                       "sub-quadratic/bounded-state path (DESIGN.md "
+                       "§Arch-applicability)")
+    if shape.kind in ("decode", "long_decode") and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocate)
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    batch = {"tokens": f((B, S), jnp.int32), "labels": f((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = f((B, cfg.image_tokens, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        batch["frames"] = f((B, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[Any, Any]:
+    """(cache_specs, token_spec) for serve_step lowering."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    token = f((B,), jnp.int32)
+    if cfg.family == "ssm":
+        return rwkv6.stacked_state(cfg, B, abstract=True), token
+    if cfg.family == "hybrid":
+        return hymba.make_cache(cfg, B, abstract=True), token
+    if cfg.family == "vlm":
+        return vlm.make_cache(cfg, B, S, abstract=True), token
+    if cfg.family == "audio":
+        return whisper.make_cache(cfg, B, S, abstract=True), token
+    return kv_cache.make_cache(cfg, cfg.n_layers, B, S, abstract=True), token
+
+
+def make_train_batch(rng, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Concrete synthetic batch (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+           "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Uniform step functions
+# ---------------------------------------------------------------------------
+
+
+def _maybe_cast(params, cfg: ModelConfig):
+    if not cfg.cast_params:
+        return params
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dt)
+        return x
+    return jax.tree.map(cast, params)
+
+
+def make_loss_fn(cfg: ModelConfig, rules, use_flash: bool = False,
+                 remat: bool = True) -> Callable:
+    mod = model_module(cfg)
+
+    if cfg.family == "ssm":
+        def loss(params, batch):
+            return mod.loss_fn(_maybe_cast(params, cfg), batch, cfg, rules,
+                               use_kernel=False, remat=remat)
+        return loss
+
+    def loss(params, batch):
+        return mod.loss_fn(_maybe_cast(params, cfg), batch, cfg, rules,
+                           use_flash=use_flash, remat=remat)
+    return loss
+
+
+def make_decode_fn(cfg: ModelConfig, rules) -> Callable:
+    mod = model_module(cfg)
+
+    def decode(params, cache, token):
+        return mod.decode_step(params, cache, token, cfg, rules)
+    return decode
+
+
+def init_params(rng, cfg: ModelConfig):
+    return model_module(cfg).init_params(rng, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def exact_param_count(cfg: ModelConfig) -> int:
+    """True parameter count of the implementation (from abstract shapes)."""
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in
+                   jax.tree_util.tree_leaves(abstract_params(cfg))))
+
+
+def exact_active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token: MoE counts top_k experts, else everything."""
+    import numpy as np
+    if not cfg.n_experts:
+        return exact_param_count(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params(cfg))
+    total = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "/moe/w" in keys or keys.endswith("w1") and "moe" in keys:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+def make_prefill_fn(cfg: ModelConfig, rules) -> Callable:
+    """Uniform prefill step: last-token logits over the full prompt.
+
+    dense/moe build and return the KV cache (true prefill); scan-state
+    families (ssm) return their recurrent state; hybrid/vlm/audio lower the
+    backbone forward with last-token logits (cache materialization for those
+    families is exercised by the decode cells).
+    """
+    mod = model_module(cfg)
+
+    if cfg.family in ("dense", "moe"):
+        def prefill(params, batch):
+            return mod.prefill(params, batch["tokens"], cfg, rules)
+        return prefill
+    if cfg.family == "ssm":
+        def prefill(params, batch):
+            return mod.forward(params, batch["tokens"], cfg, rules,
+                               last_only=True)
+        return prefill
+    if cfg.family == "vlm":
+        def prefill(params, batch):
+            return mod.forward(params, batch["tokens"], batch["image_embeds"],
+                               cfg, rules, last_only=True)
+        return prefill
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            return mod.forward(params, batch["tokens"], batch["frames"],
+                               cfg, rules, last_only=True)
+        return prefill
+
+    def prefill(params, batch):  # hybrid
+        return mod.forward(params, batch["tokens"], cfg, rules,
+                           last_only=True)
+    return prefill

@@ -1,0 +1,8 @@
+"""The paper's own workload: TPC-C at spec cardinalities, warehouse-sharded.
+Selectable as --arch tpcc in the dry-run (lowers the New-Order hot path and
+the anti-entropy step instead of train/serve)."""
+from repro.txn.tpcc import TPCCScale
+
+
+def config(n_warehouses: int = 512) -> TPCCScale:
+    return TPCCScale.spec_scale(n_warehouses=n_warehouses)

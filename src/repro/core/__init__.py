@@ -1,0 +1,41 @@
+# The paper's primary contribution: invariant confluence (I-confluence)
+# analysis and coordination planning for replicated state, realized for JAX
+# multi-pod training/serving runtimes.
+#
+#   lattice.py    — merge operators ⊔ (CRDT joins) as jax pytrees
+#   invariants.py — I : DB -> {true,false} predicate model (Table 2 taxonomy)
+#   txn.py        — T : DB -> DB transaction/op model
+#   analyzer.py   — static I-confluence classification (reproduces Table 2)
+#   witness.py    — executable diamond diagrams (Theorem 1, both directions)
+#   systems.py    — concrete replicated systems per invariant class
+#   planner.py    — CoordinationPlan over runtime state trees
+#   merge.py      — jitted anti-entropy merges
+
+from .analyzer import (Confluence, Strategy, Verdict, analyze_application,
+                       analyze_transaction, classify, table2)
+from .invariants import Invariant, InvariantKind
+from .lattice import (EscrowCounter, GCounter, LWWRegister, PNCounter,
+                      TwoPhaseSet, VersionedSlots, get_bottom, get_join,
+                      tree_join_flat)
+from .merge import converged, merge_many, merge_trees
+from .planner import (CoordClass, CoordinationPlan, PlanEntry, StateSpec,
+                      plan_state, plan_states, serving_state_specs,
+                      training_state_specs)
+from .txn import Op, OpKind, Transaction, run_valid_sequence
+from .witness import (DiamondResult, ReplicatedSystem,
+                      check_confluence_empirically, check_convergence,
+                      run_diamond, search_witness)
+
+__all__ = [
+    "Confluence", "Strategy", "Verdict", "analyze_application",
+    "analyze_transaction", "classify", "table2",
+    "Invariant", "InvariantKind",
+    "EscrowCounter", "GCounter", "LWWRegister", "PNCounter", "TwoPhaseSet",
+    "VersionedSlots", "get_bottom", "get_join", "tree_join_flat",
+    "converged", "merge_many", "merge_trees",
+    "CoordClass", "CoordinationPlan", "PlanEntry", "StateSpec", "plan_state",
+    "plan_states", "serving_state_specs", "training_state_specs",
+    "Op", "OpKind", "Transaction", "run_valid_sequence",
+    "DiamondResult", "ReplicatedSystem", "check_confluence_empirically",
+    "check_convergence", "run_diamond", "search_witness",
+]

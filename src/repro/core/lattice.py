@@ -1,0 +1,412 @@
+"""Join-semilattices (CRDTs) — the paper's merge operator ``⊔``.
+
+The paper (§3) models database state as a bag of versioned mutations with a
+commutative, associative, idempotent merge. JAX requires static shapes, so we
+realize the same algebra with *dense lattices*: fixed-shape arrays whose join
+is elementwise and whose "bottom" is an identity element. Every lattice here
+satisfies, and is property-tested for (tests/test_lattice.py):
+
+    join(a, b) == join(b, a)                    (commutativity)
+    join(a, join(b, c)) == join(join(a, b), c)  (associativity)
+    join(a, a) == a                             (idempotence)
+    join(a, bottom) == a                        (identity)
+
+These are exactly the requirements of Definition 3 (convergence) — replicas
+that exchange state and join it converge regardless of delivery order or
+duplication.
+
+All lattice states are NamedTuples of jnp arrays, hence pytrees, hence usable
+directly inside jit/pjit/shard_map and as leaves of the runtime state tree
+that the coordination planner (planner.py) reasons about.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Lattice registry: name -> (join, bottom) so the planner & merge compiler can
+# look joins up by state-spec metadata instead of closures.
+# ---------------------------------------------------------------------------
+
+_JOINS: dict[str, Callable[[Any, Any], Any]] = {}
+_BOTTOMS: dict[str, Callable[..., Any]] = {}
+
+
+def register_lattice(name: str, join: Callable, bottom: Callable) -> None:
+    if name in _JOINS:
+        raise ValueError(f"lattice {name!r} already registered")
+    _JOINS[name] = join
+    _BOTTOMS[name] = bottom
+
+
+def get_join(name: str) -> Callable:
+    try:
+        return _JOINS[name]
+    except KeyError:
+        raise KeyError(f"unknown lattice {name!r}; known: {sorted(_JOINS)}")
+
+
+def get_bottom(name: str) -> Callable:
+    return _BOTTOMS[name]
+
+
+# ---------------------------------------------------------------------------
+# Scalar/array lattices
+# ---------------------------------------------------------------------------
+
+
+def max_join(a: Array, b: Array) -> Array:
+    """MaxReg: monotone registers (step counters, high-water marks)."""
+    return jnp.maximum(a, b)
+
+
+def min_join(a: Array, b: Array) -> Array:
+    return jnp.minimum(a, b)
+
+
+def or_join(a: Array, b: Array) -> Array:
+    """GSet over a fixed universe, encoded as a boolean membership mask."""
+    return jnp.logical_or(a, b)
+
+
+def and_join(a: Array, b: Array) -> Array:
+    return jnp.logical_and(a, b)
+
+
+def sum_join(a: Array, b: Array) -> Array:
+    """NOT a lattice join (not idempotent) — provided for *delta* merges.
+
+    Gradients/metric deltas are merged by summation of disjoint contributions;
+    idempotence is recovered at the protocol level because each replica's
+    delta is consumed exactly once per merge epoch (see optim/coord.py). The
+    planner treats ``sum`` merges as CRDT G-counters whose per-replica slots
+    have already been materialized (each replica contributes its own slot).
+    """
+    return a + b
+
+
+register_lattice("max", max_join, lambda shape=(), dtype=jnp.int32: jnp.full(shape, jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf, dtype))
+register_lattice("min", min_join, lambda shape=(), dtype=jnp.int32: jnp.full(shape, jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else jnp.inf, dtype))
+register_lattice("or", or_join, lambda shape=(), dtype=jnp.bool_: jnp.zeros(shape, dtype))
+register_lattice("and", and_join, lambda shape=(), dtype=jnp.bool_: jnp.ones(shape, dtype))
+register_lattice("sum", sum_join, lambda shape=(), dtype=jnp.float32: jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# GCounter / PNCounter — per-replica slot counters (paper §5.2 ADTs)
+# ---------------------------------------------------------------------------
+
+
+class GCounter(NamedTuple):
+    """Grow-only counter: ``slots[r]`` is replica *r*'s local contribution.
+
+    value() = sum of slots; join = slotwise max (each replica's slot is
+    monotone under local increments, so max recovers the latest contribution
+    from every replica regardless of merge order/duplication).
+    """
+
+    slots: Array  # [num_replicas, *value_shape]
+
+    @staticmethod
+    def make(num_replicas: int, value_shape: tuple = (), dtype=jnp.float32) -> "GCounter":
+        return GCounter(jnp.zeros((num_replicas, *value_shape), dtype))
+
+    def increment(self, replica: Array | int, amount: Array | float = 1) -> "GCounter":
+        amount = jnp.asarray(amount, self.slots.dtype)
+        return GCounter(self.slots.at[replica].add(amount))
+
+    def value(self) -> Array:
+        return self.slots.sum(axis=0)
+
+    @staticmethod
+    def join(a: "GCounter", b: "GCounter") -> "GCounter":
+        return GCounter(jnp.maximum(a.slots, b.slots))
+
+
+class PNCounter(NamedTuple):
+    """Increment/decrement counter = pair of GCounters (paper §5.2).
+
+    Convergent (all ops reflected after merge) but — exactly as the paper
+    warns — does NOT by itself preserve threshold invariants; that is the
+    analyzer's job.
+    """
+
+    pos: GCounter
+    neg: GCounter
+
+    @staticmethod
+    def make(num_replicas: int, value_shape: tuple = (), dtype=jnp.float32) -> "PNCounter":
+        return PNCounter(GCounter.make(num_replicas, value_shape, dtype),
+                         GCounter.make(num_replicas, value_shape, dtype))
+
+    def increment(self, replica, amount=1) -> "PNCounter":
+        return self._replace(pos=self.pos.increment(replica, amount))
+
+    def decrement(self, replica, amount=1) -> "PNCounter":
+        return self._replace(neg=self.neg.increment(replica, amount))
+
+    def value(self) -> Array:
+        return self.pos.value() - self.neg.value()
+
+    @staticmethod
+    def join(a: "PNCounter", b: "PNCounter") -> "PNCounter":
+        return PNCounter(GCounter.join(a.pos, b.pos), GCounter.join(a.neg, b.neg))
+
+
+register_lattice("gcounter", GCounter.join, GCounter.make)
+register_lattice("pncounter", PNCounter.join, PNCounter.make)
+
+
+# ---------------------------------------------------------------------------
+# LWW register — destructive merge the paper cautions about (§5.2 Lost Update)
+# ---------------------------------------------------------------------------
+
+
+class LWWRegister(NamedTuple):
+    """Last-writer-wins register: join keeps the higher (ts, replica) stamp.
+
+    Provided deliberately: the paper uses LWW to illustrate Lost Update. The
+    witness tests demonstrate the anomaly; the analyzer never *recommends*
+    LWW for counter-like state.
+    """
+
+    value: Array
+    ts: Array       # logical timestamp
+    replica: Array  # tie-break
+
+    @staticmethod
+    def make(value, ts=0, replica=0) -> "LWWRegister":
+        return LWWRegister(jnp.asarray(value), jnp.asarray(ts, jnp.int64),
+                           jnp.asarray(replica, jnp.int32))
+
+    def write(self, value, ts, replica) -> "LWWRegister":
+        value = jnp.asarray(value, self.value.dtype)
+        newer = (ts > self.ts) | ((ts == self.ts) & (replica > self.replica))
+        return LWWRegister(jnp.where(newer, value, self.value),
+                           jnp.maximum(self.ts, jnp.asarray(ts, self.ts.dtype)),
+                           jnp.where(newer, replica, self.replica).astype(self.replica.dtype))
+
+    @staticmethod
+    def join(a: "LWWRegister", b: "LWWRegister") -> "LWWRegister":
+        b_newer = (b.ts > a.ts) | ((b.ts == a.ts) & (b.replica > a.replica))
+        return LWWRegister(jnp.where(b_newer, b.value, a.value),
+                           jnp.maximum(a.ts, b.ts),
+                           jnp.where(b_newer, b.replica, a.replica))
+
+
+register_lattice("lww", LWWRegister.join, LWWRegister.make)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase set (add + tombstone) — cascading-delete support (§5.1 FKs)
+# ---------------------------------------------------------------------------
+
+
+class TwoPhaseSet(NamedTuple):
+    """Fixed-universe 2P-set: once removed, an element never reappears.
+
+    ``added`` and ``removed`` are both grow-only masks; membership is
+    ``added & ~removed``. This realizes the paper's cascading-delete result:
+    deletion merges monotonically (a dangling reference removed on one replica
+    stays removed after merge).
+    """
+
+    added: Array    # bool mask over universe
+    removed: Array  # bool mask over universe
+
+    @staticmethod
+    def make(universe: int) -> "TwoPhaseSet":
+        return TwoPhaseSet(jnp.zeros(universe, jnp.bool_), jnp.zeros(universe, jnp.bool_))
+
+    def add(self, idx) -> "TwoPhaseSet":
+        return self._replace(added=self.added.at[idx].set(True))
+
+    def remove(self, idx) -> "TwoPhaseSet":
+        return self._replace(removed=self.removed.at[idx].set(True))
+
+    def members(self) -> Array:
+        return self.added & ~self.removed
+
+    @staticmethod
+    def join(a: "TwoPhaseSet", b: "TwoPhaseSet") -> "TwoPhaseSet":
+        return TwoPhaseSet(a.added | b.added, a.removed | b.removed)
+
+
+register_lattice("2pset", TwoPhaseSet.join, TwoPhaseSet.make)
+
+
+# ---------------------------------------------------------------------------
+# Escrow counter — paper §8 "Amortizing coordination" (O'Neil's escrow method)
+# ---------------------------------------------------------------------------
+
+
+class EscrowCounter(NamedTuple):
+    """A global budget pre-partitioned into per-replica shares.
+
+    Non-I-confluent decrements against a ``value >= floor`` invariant become
+    coordination-free while each replica spends only from its own share:
+    spending is local, the invariant holds globally by construction
+    (sum(shares) == budget - floor), and replicas only coordinate to
+    *refresh* shares (an amortized, off-critical-path operation).
+
+    join = slotwise max of spent (spent is per-replica monotone).
+    """
+
+    shares: Array  # [R] allocated share per replica (static between refreshes)
+    spent: Array   # [R] monotone local spend
+
+    @staticmethod
+    def make(num_replicas: int, budget: float, floor: float = 0.0,
+             dtype=jnp.float32) -> "EscrowCounter":
+        headroom = jnp.asarray(budget - floor, dtype)
+        shares = jnp.full((num_replicas,), headroom / num_replicas, dtype)
+        return EscrowCounter(shares, jnp.zeros((num_replicas,), dtype))
+
+    def try_spend(self, replica, amount) -> tuple["EscrowCounter", Array]:
+        """Local, coordination-free spend. Returns (state, ok)."""
+        amount = jnp.asarray(amount, self.spent.dtype)
+        ok = self.spent[replica] + amount <= self.shares[replica]
+        new_spent = jnp.where(ok, self.spent[replica] + amount, self.spent[replica])
+        return self._replace(spent=self.spent.at[replica].set(new_spent)), ok
+
+    def remaining(self) -> Array:
+        return (self.shares - self.spent).sum()
+
+    def refresh(self) -> "EscrowCounter":
+        """The amortized coordination point: rebalance unspent headroom."""
+        headroom = (self.shares - self.spent).sum()
+        n = self.shares.shape[0]
+        return EscrowCounter(jnp.full((n,), headroom / n, self.shares.dtype),
+                             jnp.zeros_like(self.spent))
+
+    @staticmethod
+    def join(a: "EscrowCounter", b: "EscrowCounter") -> "EscrowCounter":
+        return EscrowCounter(jnp.minimum(a.shares, b.shares),
+                             jnp.maximum(a.spent, b.spent))
+
+
+register_lattice("escrow", EscrowCounter.join, EscrowCounter.make)
+
+
+# ---------------------------------------------------------------------------
+# Versioned slots — the dense-JAX stand-in for the paper's bag-of-versions
+# ---------------------------------------------------------------------------
+
+
+class VersionedSlots(NamedTuple):
+    """A table of fixed capacity whose rows carry (valid, version, payload).
+
+    * insert-only tables: valid is a grow-only mask (or-join);
+    * updatable tables: join keeps the payload with the higher version
+      (replica-namespaced versions keep them unique — §5.1 "choose some
+      value").
+
+    This is the store primitive of repro.txn.store and the fused Pallas merge
+    kernel (kernels/lattice_merge.py) operates on exactly this layout.
+    """
+
+    valid: Array    # [cap] bool
+    version: Array  # [cap] int64 (replica-namespaced: ts * R + replica)
+    payload: Array  # [cap, width] payload columns
+
+    @staticmethod
+    def make(capacity: int, width: int, dtype=jnp.float32) -> "VersionedSlots":
+        return VersionedSlots(jnp.zeros((capacity,), jnp.bool_),
+                              jnp.full((capacity,), -1, jnp.int64),
+                              jnp.zeros((capacity, width), dtype))
+
+    def upsert(self, idx, version, row) -> "VersionedSlots":
+        version = jnp.asarray(version, jnp.int64)
+        newer = version > self.version[idx]
+        row = jnp.asarray(row, self.payload.dtype)
+        return VersionedSlots(
+            self.valid.at[idx].set(True),
+            self.version.at[idx].max(version),
+            self.payload.at[idx].set(jnp.where(newer, row, self.payload[idx])),
+        )
+
+    @staticmethod
+    def join(a: "VersionedSlots", b: "VersionedSlots") -> "VersionedSlots":
+        b_newer = b.version > a.version
+        return VersionedSlots(
+            a.valid | b.valid,
+            jnp.maximum(a.version, b.version),
+            jnp.where(b_newer[:, None], b.payload, a.payload),
+        )
+
+
+register_lattice("versioned", VersionedSlots.join, VersionedSlots.make)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level merge: apply a named join leafwise over matching pytrees
+# ---------------------------------------------------------------------------
+
+
+def tree_join(join_names: PyTree, a: PyTree, b: PyTree) -> PyTree:
+    """Join two state trees leaf-by-leaf.
+
+    ``join_names`` mirrors the *top-level structure* of the state tree with a
+    string lattice name at each logical leaf (a whole GCounter counts as one
+    logical leaf).
+    """
+
+    is_leaf = lambda x: isinstance(x, str)
+    names, treedef = jax.tree_util.tree_flatten(join_names, is_leaf=is_leaf)
+    a_groups = treedef.flatten_up_to(a)
+    b_groups = treedef.flatten_up_to(b)
+    out = [get_join(n)(x, y) for n, x, y in zip(names, a_groups, b_groups)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def jitted_tree_join(join_names_tuple: tuple, a: PyTree, b: PyTree) -> PyTree:
+    """Jit-compiled tree_join_flat with the lattice names as static args."""
+    return tree_join_flat(join_names_tuple, a, b)
+
+
+def tree_join_flat(names: tuple, a: PyTree, b: PyTree) -> PyTree:
+    """Join where ``names`` aligns with the *logical groups* of ``a``.
+
+    Logical groups are discovered by flattening ``a`` one NamedTuple level at
+    a time; for plain-array trees each array is one group.
+    """
+    a_leaves, treedef = jax.tree_util.tree_flatten(
+        a, is_leaf=lambda x: isinstance(x, (GCounter, PNCounter, LWWRegister,
+                                            TwoPhaseSet, EscrowCounter,
+                                            VersionedSlots)))
+    b_leaves = treedef.flatten_up_to(b)
+    if len(names) != len(a_leaves):
+        raise ValueError(f"{len(names)} names for {len(a_leaves)} state groups")
+    out = [get_join(n)(x, y) for n, x, y in zip(names, a_leaves, b_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Property helpers used by the hypothesis suite
+# ---------------------------------------------------------------------------
+
+
+def check_lattice_laws(join: Callable, samples: list, eq: Callable | None = None) -> None:
+    """Assert commutativity/associativity/idempotence over concrete samples."""
+    def default_eq(x, y):
+        fx = jax.tree_util.tree_leaves(x)
+        fy = jax.tree_util.tree_leaves(y)
+        return all(jnp.array_equal(u, v) for u, v in zip(fx, fy))
+
+    eq = eq or default_eq
+    for a in samples:
+        assert eq(join(a, a), a), "idempotence violated"
+        for b in samples:
+            assert eq(join(a, b), join(b, a)), "commutativity violated"
+            for c in samples:
+                assert eq(join(a, join(b, c)), join(join(a, b), c)), \
+                    "associativity violated"

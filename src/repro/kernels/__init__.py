@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py:
+#   flash_attention.py — tiled causal/GQA attention (prefill hot spot)
+#   rwkv6_scan.py      — chunked data-dependent-decay WKV scan
+#   lattice_merge.py   — fused versioned-table join ⊔ + invariant audit
+from . import ops, ref

@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute in
+``interpret=True`` mode, which runs the kernel body in Python for
+correctness. ``FORCE_INTERPRET`` can pin interpret mode for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .lattice_merge import lattice_merge_kernel
+from .rwkv6_scan import rwkv6_scan_kernel
+
+FORCE_INTERPRET: bool | None = None
+
+
+def _interpret() -> bool:
+    if FORCE_INTERPRET is not None:
+        return FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """GQA flash attention. q: [B,S,H,hd]; k/v: [B,S,KV,hd]."""
+    S = q.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    return flash_attention_kernel(q, k, v, causal=causal, block_q=max(bq, 1),
+                                  block_k=max(bk, 1), interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 64):
+    """Chunked RWKV-6 WKV scan. Returns (out, final_state)."""
+    T = r.shape[1]
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    return rwkv6_scan_kernel(r, k, v, w, u, s0, chunk=max(c, 1),
+                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "block_rows"))
+def lattice_merge(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
+                  lo: float = -jnp.inf, hi: float = jnp.inf,
+                  block_rows: int = 256):
+    """Fused versioned-table join + threshold audit."""
+    R = a_valid.shape[0]
+    br = min(block_rows, R)
+    while R % br:
+        br //= 2
+    return lattice_merge_kernel(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
+                                lo, hi, block_rows=max(br, 1),
+                                interpret=_interpret())

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, causal: bool = True
+                        ) -> Array:
+    """GQA attention. q: [B,S,H,hd]; k/v: [B,S,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qh = q.reshape(B, S, KV, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qh, kf) * (hd ** -0.5)
+    if causal:
+        i = jnp.arange(S)
+        mask = i[:, None] >= i[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+                   s0: Array) -> tuple[Array, Array]:
+    """Naive per-token WKV recurrence (the definitional oracle).
+
+    r/k/v/w: [B,T,H,hd]; u: [H,hd]; s0: [B,H,hd,hd] -> (out, s_T).
+    """
+    B, T, H, hd = r.shape
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # [B,H,hd]
+        cur = jnp.einsum("bhk,bhk->bh", rt, kt * u[None])
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s) + cur[..., None] * vt
+        s = s * wt[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3).astype(jnp.float32) for x in (r, k, v, w))
+    s_final, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), s_final
+
+
+def lattice_merge_ref(a_valid: Array, a_ver: Array, a_pay: Array,
+                      b_valid: Array, b_ver: Array, b_pay: Array,
+                      lo: float, hi: float
+                      ) -> tuple[Array, Array, Array, Array]:
+    """VersionedSlots join ⊔ fused with a per-row threshold invariant check.
+
+    Join: valid = a|b; version = max; payload = higher-version-wins.
+    Invariant: every valid merged row's payload lies in [lo, hi] — the
+    violation mask is what a transactionally-available replica uses to abort
+    (paper Definition 2) and what anti-entropy audits after merge.
+
+    Returns (valid, version, payload, violation_mask[rows]).
+    """
+    b_newer = b_ver > a_ver
+    valid = a_valid | b_valid
+    version = jnp.maximum(a_ver, b_ver)
+    payload = jnp.where(b_newer[:, None], b_pay, a_pay)
+    bad = (payload < lo) | (payload > hi)
+    violation = valid & bad.any(axis=-1)
+    return valid, version, payload, violation

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analyses.
+
+This is the scale proof the CPU container can give: for each of the 40
+(arch x shape) cells, ``jax.jit(step).lower(**specs).compile()`` must succeed
+on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh — sharding
+mismatches, compile-time OOMs, or unsupported collectives are bugs. The
+compiled artifacts feed EXPERIMENTS.md:
+
+  * memory_analysis()  -> bytes per device (does it fit 16 GB HBM?)
+  * cost_analysis()    -> HLO FLOPs / bytes for the roofline terms
+  * compiled.as_text() -> collective inventory + bytes (utils/hlo.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tpcc --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.sharding import Rules, param_pspecs
+from repro.optim import adamw, coord
+from repro.utils.hlo import collective_stats, cross_pod_collectives
+
+from .mesh import make_production_mesh
+
+
+def _rules(mesh, layout: str = "tp") -> Rules:
+    batch = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if layout == "sp":
+        # sequence parallelism, no tensor parallelism: activations shard the
+        # sequence over the model axis; weights replicate (small models)
+        return Rules(batch=batch, seq="model", model=None, expert=None,
+                     layer_opt="data")
+    return Rules(batch=batch, model="model", expert="model", layer_opt="data")
+
+
+def _shape_divisible(n: int, mesh, axes: tuple) -> bool:
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return n % size == 0
+
+
+def lower_train(arch: str, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                coord_mode: str = "sync", merge_every: int = 8,
+                compress: str = "none", remat: bool = True,
+                microbatch: int = 1):
+    rules = _rules(mesh)
+    batch_specs = registry.train_input_specs(cfg, shape)
+    cc = coord.CoordConfig(mode=coord_mode, merge_every=merge_every,
+                           compress=compress, microbatch=microbatch)
+    setup = coord.build(
+        cfg, rules, mesh, cc,
+        adamw.AdamWConfig(clip_mode="escrow"),
+        lambda c, r: registry.make_loss_fn(c, r, use_flash=False, remat=remat),
+        batch_specs)
+    lowered = setup.step_fn.lower(setup.abstract_state, batch_specs)
+    merged_lowered = (setup.merge_fn.lower(setup.abstract_state)
+                      if setup.merge_fn is not None else None)
+    return lowered, merged_lowered
+
+
+def _serving_params_abs(cfg: ModelConfig):
+    """Serving lowers weights in the compute dtype (bf16), not f32 masters."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, dt)
+        return l
+    return jax.tree.map(cast, registry.abstract_params(cfg))
+
+
+def lower_prefill(arch: str, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  layout: str = "tp"):
+    rules = _rules(mesh, layout)
+    batch_specs = registry.train_input_specs(cfg, shape)
+    batch_specs.pop("labels")
+    prefill = registry.make_prefill_fn(cfg, rules)
+    params_abs = _serving_params_abs(cfg)
+    pspecs = param_pspecs(params_abs, rules)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch_sh = jax.tree.map(lambda _: NamedSharding(mesh, P(batch_axes)),
+                            batch_specs)
+    with jax.set_mesh(mesh):
+        return jax.jit(prefill, in_shardings=(param_sh, batch_sh)).lower(
+            params_abs, batch_specs), None
+
+
+def _cache_shardings(cfg: ModelConfig, cache_specs, mesh, batch: int):
+    """Shard caches: batch over (pod, data) when divisible; KV/head-like dims
+    over model when divisible; else replicate that dim."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_size = mesh.shape.get("model", 1)
+    batch_ok = _shape_divisible(batch, mesh, batch_axes)
+
+    def spec_for(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        # find the batch dim (== batch) and a model-shardable dim
+        for i, d in enumerate(leaf.shape):
+            if d == batch and batch_ok and spec[i] is None and batch_axes:
+                spec[i] = batch_axes
+                break
+        for i in range(nd - 1, -1, -1):
+            if spec[i] is None and leaf.shape[i] % model_size == 0 \
+                    and leaf.shape[i] >= model_size and i >= 2:
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)),
+                        cache_specs)
+
+
+def lower_decode(arch: str, cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = _rules(mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not _shape_divisible(shape.global_batch, mesh, batch_axes):
+        # long_500k (batch=1): model parallelism only, batch replicated
+        rules = dataclasses.replace(rules, batch=None)
+    decode = registry.make_decode_fn(cfg, rules)
+    params_abs = _serving_params_abs(cfg)
+    cache_specs, token_spec = registry.decode_input_specs(cfg, shape)
+
+    pspecs = param_pspecs(params_abs, rules)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    cache_sh = _cache_shardings(cfg, cache_specs, mesh, shape.global_batch)
+    token_sh = NamedSharding(
+        mesh, P(batch_axes) if _shape_divisible(shape.global_batch, mesh,
+                                                batch_axes) else P())
+    with jax.set_mesh(mesh):
+        return jax.jit(decode, in_shardings=(param_sh, cache_sh, token_sh)
+                       ).lower(params_abs, cache_specs, token_spec), None
+
+
+def lower_tpcc(mesh, batch_per_shard: int = 16):
+    """The paper's own workload at spec cardinalities."""
+    from repro.configs.tpcc import config as tpcc_config
+    from repro.txn.engine import Engine
+
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    scale = tpcc_config(n_warehouses=2 * n_shards)
+    eng = Engine(scale, mesh, axes)
+    return eng.lowered_neworder(batch_per_shard), None
+
+
+# ---------------------------------------------------------------------------
+
+
+def analyze(lowered, mesh, label: str, trip_counts=(),
+            compile_seconds_budget: float = 1800) -> dict:
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    out = {"label": label, "compile_seconds": round(compile_s, 2)}
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        out["cost"] = {k: cost.get(k) for k in
+                       ("flops", "bytes accessed", "transcendentals",
+                        "optimal_seconds") if k in cost}
+    except Exception as e:  # pragma: no cover
+        out["cost"] = {"error": str(e)}
+
+    text = compiled.as_text()
+    stats = collective_stats(text)
+    from benchmarks.roofline import loop_scaled_collective_bytes
+    out["collectives"] = {
+        "counts": dict(stats.counts),
+        "bytes": stats.total_bytes(),
+        "loop_scaled_bytes": loop_scaled_collective_bytes(text, trip_counts),
+        "describe": stats.describe(),
+    }
+    if "pod" in mesh.shape:
+        pod_size = 1
+        for a in mesh.shape:
+            if a != "pod":
+                pod_size *= mesh.shape[a]
+        xp = cross_pod_collectives(text, pod_size)
+        out["collectives"]["cross_pod"] = len(xp)
+        _, xbytes = loop_scaled_collective_bytes(text, trip_counts, pod_size)
+        out["collectives"]["cross_pod_scaled_bytes"] = xbytes
+    return out
+
+
+def apply_overrides(cfg: ModelConfig, overrides: str) -> ModelConfig:
+    """--set key=value[,key=value...] config overrides (perf iterations)."""
+    if not overrides:
+        return cfg
+    kv = {}
+    for pair in overrides.split(","):
+        k, v = pair.split("=")
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        kv[k] = v
+    return dataclasses.replace(cfg, **kv)
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
+             coord_mode: str = "sync", remat: bool = True,
+             overrides: str = "", merge_every: int = 8,
+             compress: str = "none", microbatch: int = 1,
+             layout: str = "tp") -> dict:
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+            "coord_mode": coord_mode, "overrides": overrides,
+            "layout": layout}
+    if arch == "tpcc":
+        try:
+            lowered, _ = lower_tpcc(mesh)
+            cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
+            cell["ok"] = True
+        except Exception as e:
+            cell.update(ok=False, error=f"{type(e).__name__}: {e}",
+                        trace=traceback.format_exc()[-2000:])
+        return cell
+
+    cfg = apply_overrides(registry.get_config(arch), overrides)
+    shape = SHAPES[shape_name]
+    ok, why = registry.cell_supported(cfg, shape)
+    if not ok:
+        cell.update(ok=True, skipped=True, reason=why)
+        return cell
+    try:
+        from benchmarks.roofline import trip_counts_for
+        trips = trip_counts_for(cfg, shape)
+        if shape.kind == "train" and microbatch > 1:
+            trips = [microbatch] + trips  # grad-accumulation loop is level 0
+        if shape.kind == "train":
+            lowered, merge_lowered = lower_train(arch, cfg, shape, mesh,
+                                                 coord_mode=coord_mode,
+                                                 merge_every=merge_every,
+                                                 compress=compress,
+                                                 remat=remat,
+                                                 microbatch=microbatch)
+        elif shape.kind == "prefill":
+            lowered, merge_lowered = lower_prefill(arch, cfg, shape, mesh,
+                                                   layout=layout)
+        else:
+            lowered, merge_lowered = lower_decode(arch, cfg, shape, mesh)
+        cell.update(analyze(lowered, mesh, f"{arch}/{shape_name}", trips))
+        if merge_lowered is not None:
+            cell["merge"] = analyze(merge_lowered, mesh, "merge", ())
+        cell["ok"] = True
+    except Exception as e:
+        cell.update(ok=False, error=f"{type(e).__name__}: {e}",
+                    trace=traceback.format_exc()[-2000:])
+    return cell
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, 'all', or 'tpcc'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--coord", default="sync",
+                    choices=["sync", "hierarchical", "local_sgd"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--set", dest="overrides", default="",
+                    help="config overrides, e.g. attn_impl=chunked")
+    ap.add_argument("--merge-every", type=int, default=8)
+    ap.add_argument("--compress", default="none")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--layout", default="tp", choices=["tp", "sp"],
+                    help="prefill activation layout: tensor- or seq-parallel")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = list(registry.ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        label = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            if arch == "tpcc":
+                cell = run_cell("tpcc", "-", mesh, label)
+                results.append(cell)
+                print(json.dumps(cell)[:400], flush=True)
+                continue
+            for shape_name in shapes:
+                cell = run_cell(arch, shape_name, mesh, label,
+                                coord_mode=args.coord,
+                                remat=not args.no_remat,
+                                overrides=args.overrides,
+                                merge_every=args.merge_every,
+                                compress=args.compress,
+                                microbatch=args.microbatch,
+                                layout=args.layout)
+                results.append(cell)
+                print(json.dumps({k: v for k, v in cell.items()
+                                  if k != "trace"})[:600], flush=True)
+
+    n_fail = sum(1 for c in results if not c.get("ok"))
+    print(f"\n{len(results)} cells, {n_fail} failures")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

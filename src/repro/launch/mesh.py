@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only launch/dryrun.py (which sets XLA_FLAGS first) ever builds the
+512-way meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(pods: int = 1, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    return jax.make_mesh((pods, data, model), ("pod", "data", "model"))

@@ -1,0 +1,105 @@
+"""Training launcher.
+
+Examples (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 20 --batch 8 --seq 64
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --reduced \\
+      --coord hierarchical --merge-every 4 --compress int8 --devices 8 \\
+      --mesh 2,2,2
+
+On real hardware drop --reduced/--devices and pass the pod mesh, e.g.
+--mesh 2,16,16.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--coord", default="sync",
+                    choices=["sync", "hierarchical", "local_sgd"])
+    ap.add_argument("--merge-every", type=int, default=8)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--clip-mode", default="escrow",
+                    choices=["escrow", "exact", "none"])
+    ap.add_argument("--mesh", default="1,1,1",
+                    help="pod,data,model sizes (comma separated)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host platform device count (simulation)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--restore", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the coordination plan and exit")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import dataclasses
+
+    import jax
+
+    from repro.configs import registry
+    from repro.models.sharding import Rules
+    from repro.optim import adamw, coord
+    from repro.runtime import train as train_rt
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.attn != "naive":
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn)
+
+    pod, data, model = (int(x) for x in args.mesh.split(","))
+    mesh = jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    rules = Rules(batch=("pod", "data")) if (pod * data * model) > 1 \
+        else Rules.disabled()
+
+    tc = train_rt.TrainConfig(
+        steps=args.steps, log_every=args.log_every,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt",
+        seq_len=args.seq, global_batch=args.batch,
+        coord=coord.CoordConfig(mode=args.coord,
+                                merge_every=args.merge_every,
+                                compress=args.compress),
+        opt=adamw.AdamWConfig(lr=args.lr, clip_mode=args.clip_mode,
+                              warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps),
+        remat=not args.reduced)
+
+    plan = train_rt.coordination_plan(tc)
+    print(plan.summary())
+    if args.plan_only:
+        return 0
+
+    def log(m):
+        print(f"step {m['step']:5d}  loss {m['loss_mean']:.4f}  "
+              f"tokens {m['tokens']:.0f}  grad_norm {m['grad_norm_last']:.3f}",
+              flush=True)
+
+    state, summary = train_rt.run(cfg, mesh, rules, tc,
+                                  restore_from=args.restore or None,
+                                  on_step=log)
+    print(f"done: {summary['step']} steps in {summary['wall_seconds']:.1f}s "
+          f"({summary['tokens'] / max(summary['wall_seconds'], 1e-9):.0f} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,329 @@
+"""Hymba (arXiv:2411.13676): hybrid-head blocks — attention heads and
+selective-SSM (mamba-style) heads run *in parallel* on the same input, their
+normalized outputs averaged — plus a SwiGLU FFN.
+
+TPU adaptation:
+  * the selective SSM (diagonal A per channel, data-dependent Δ, B_t, C_t and
+    a depthwise causal conv) is evaluated **chunkwise**: within a chunk the
+    (C_i·B_j) Gram matrix is a dense MXU matmul and per-channel decays fold
+    into an exp-of-cumsum mask; chunk-to-chunk state is a lax.scan carry —
+    identical machinery to rwkv6.py, with the decay on the channel (value)
+    dimension instead of the key dimension.
+  * attention uses sliding windows (config.sliding_window); the handful of
+    global-attention layers in the released checkpoint are approximated by
+    the same window (DESIGN.md §9: the SSM path carries global context) —
+    this keeps the layer stack scan-uniform and makes long_500k decode carry
+    O(window + d·state) memory per layer.
+
+Serving cache = ring KV (window) + SSM state + conv tail.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kv_cache as kvc
+from . import layers as L
+from .config import ModelConfig
+from .sharding import Rules
+
+Array = jax.Array
+
+CONV_K = 4  # depthwise causal conv kernel width (mamba standard)
+
+
+def ssm_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    N = cfg.ssm_state or 16
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, d)) * d ** -0.5).astype(jnp.float32),
+        "w_x": (jax.random.normal(ks[1], (d, 2 * N + 1)) * d ** -0.5).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(jnp.float32),
+        "a_log": jnp.zeros((d,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((d,), jnp.float32),
+        "dt_bias": jnp.full((1,), -2.0, jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (CONV_K, d)) * 0.3).astype(jnp.float32),
+    }
+
+
+class SSMState(NamedTuple):
+    h: Array         # [B, d, N] ssm state
+    conv: Array      # [B, CONV_K-1, d] conv tail
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int) -> SSMState:
+    N = cfg.ssm_state or 16
+    return SSMState(jnp.zeros((batch, cfg.d_model, N), jnp.float32),
+                    jnp.zeros((batch, CONV_K - 1, cfg.d_model), jnp.float32))
+
+
+def _causal_conv(x: Array, w: Array, tail: Array) -> tuple[Array, Array]:
+    """Depthwise causal conv over T. x: [B,T,d]; w: [K,d]; tail: [B,K-1,d]."""
+    B, T, d = x.shape
+    xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # [B, T+K-1, d]
+    out = jnp.zeros_like(x)
+    for i in range(CONV_K):
+        out = out + xx[:, i:i + T] * w[i].astype(x.dtype)
+    new_tail = xx[:, -(CONV_K - 1):].astype(jnp.float32)
+    return jax.nn.silu(out), new_tail
+
+
+def ssm_chunked(dx: Array, Bm: Array, Cm: Array, w: Array, h0: Array,
+                chunk: int) -> tuple[Array, Array]:
+    """Chunked selective scan (per-channel decay).
+
+    dx: [B,T,d] (Δ·x), Bm/Cm: [B,T,N], w: [B,T,d] decay in (0,1),
+    h0: [B,d,N]. Returns (y [B,T,d], h_T).
+    """
+    B, T, d = dx.shape
+    N = Bm.shape[-1]
+    C = min(chunk, T)
+    while T % C:  # largest feasible chunk <= requested
+        C -= 1
+    n = T // C
+
+    dxc = dx.reshape(B, n, C, d)
+    bc = Bm.reshape(B, n, C, N)
+    cc = Cm.reshape(B, n, C, N)
+    wc = w.reshape(B, n, C, d).astype(jnp.float32)
+    logw = jnp.log(jnp.clip(wc, 1e-9, 1.0))
+    cum = jnp.cumsum(logw, axis=2)  # [B,n,C,d]
+
+    idx = jnp.arange(C)
+    incl = idx[:, None] >= idx[None, :]  # j <= i (inclusive: h_i includes x_i)
+
+    def step(h, xs):
+        dxb, bb, cb, cumb = xs  # [B,C,d], [B,C,N], [B,C,N], [B,C,d]
+        dxf = dxb.astype(jnp.float32)
+        bf = bb.astype(jnp.float32)
+        cf = cb.astype(jnp.float32)
+        total = cumb[:, -1]  # [B,d]
+
+        # incoming state: y_in_i[c] = prod_{t<=i} w * (C_i · h0[c,:])
+        ch = jnp.einsum("bin,bdn->bid", cf, h)          # [B,C,d]
+        y = jnp.exp(cumb) * ch
+
+        # intra-chunk: y_i[c] += sum_{j<=i} exp(cum_i - cum_j)[c] dx_j[c] (C_i·B_j)
+        gram = jnp.einsum("bin,bjn->bij", cf, bf)       # [B,C,C]
+        diff = cumb[:, :, None] - cumb[:, None, :]      # [B,C(i),C(j),d]
+        decay = jnp.exp(jnp.where(incl[None, :, :, None], diff, -jnp.inf))
+        y = y + jnp.einsum("bij,bijd,bjd->bid", gram, decay, dxf)
+
+        # state carry: h' = exp(total) h + sum_j exp(cum_last - cum_j) dx_j B_j
+        dout = jnp.exp(total[:, None] - cumb)           # [B,C,d]
+        h_new = h * jnp.exp(total)[:, :, None] + \
+            jnp.einsum("bjd,bjn->bdn", dxf * dout, bf)
+        return h_new, y
+
+    xs = (dxc.transpose(1, 0, 2, 3), bc.transpose(1, 0, 2, 3),
+          cc.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d)
+    return y.astype(dx.dtype), h_final
+
+
+def ssm_apply(p: dict, x: Array, st: SSMState, cfg: ModelConfig,
+              rules: Rules) -> tuple[Array, SSMState]:
+    """x: [B,T,d] -> (y, new state)."""
+    B, T, d = x.shape
+    N = cfg.ssm_state or 16
+    u = jnp.einsum("btd,df->btf", x, p["w_in"].astype(x.dtype))
+    u = rules.act(u, "batch", None, "model")
+    u, new_tail = _causal_conv(u, p["conv_w"], st.conv)
+
+    xproj = jnp.einsum("btd,dk->btk", u, p["w_x"].astype(u.dtype))
+    Bm, Cm, dt = xproj[..., :N], xproj[..., N:2 * N], xproj[..., 2 * N:]
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,1]
+    A = -jnp.exp(p["a_log"])[None, None]                            # [1,1,d]
+    w = jnp.exp(delta * A)                                          # [B,T,d]
+    dx = (delta * u.astype(jnp.float32)).astype(u.dtype)
+
+    y, h_new = ssm_chunked(dx, Bm, Cm, w, st.h, cfg.ssm_chunk)
+    y = y + u * p["d_skip"].astype(u.dtype)
+    out = jnp.einsum("btd,df->btf", y, p["w_out"].astype(x.dtype))
+    return rules.act(out, "batch", None, None), SSMState(h_new, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid block
+# ---------------------------------------------------------------------------
+
+
+def layer_init(rng, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "in_norm": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "ssm": ssm_init(k2, cfg),
+        "attn_out_norm": L.rmsnorm_init(cfg.d_model),
+        "ssm_out_norm": L.rmsnorm_init(cfg.d_model),
+        "mlp_norm": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = L.embedding_init(k_emb, cfg)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    return params
+
+
+def layer_apply(lp: dict, x: Array, st: SSMState, cfg: ModelConfig,
+                rules: Rules, positions: Array, use_flash: bool
+                ) -> tuple[Array, SSMState]:
+    xn = L.rmsnorm(lp["in_norm"], x, cfg.norm_eps)
+    attn_out = L.attention_apply(lp["attn"], xn, cfg, rules, positions,
+                                 causal=True, window=cfg.sliding_window,
+                                 use_flash=use_flash)
+    ssm_out, st_new = ssm_apply(lp["ssm"], xn, st, cfg, rules)
+    fused = 0.5 * (L.rmsnorm(lp["attn_out_norm"], attn_out, cfg.norm_eps)
+                   + L.rmsnorm(lp["ssm_out_norm"], ssm_out, cfg.norm_eps))
+    x = x + fused
+    h = L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps),
+                    cfg.act, rules)
+    return x + h, st_new
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, rules: Rules,
+            use_flash: bool = False, remat: bool = True,
+            last_only: bool = False) -> Array:
+    B, T = tokens.shape
+    x = L.embed(params, tokens, cfg, rules)
+    positions = jnp.arange(T)
+    N = cfg.ssm_state or 16
+    Lw = cfg.n_layers
+    h0 = jnp.zeros((Lw, B, cfg.d_model, N), jnp.float32)
+    c0 = jnp.zeros((Lw, B, CONV_K - 1, cfg.d_model), jnp.float32)
+
+    def apply_one(carry, xs):
+        lp, h, c = xs
+        y, st = layer_apply(lp, carry, SSMState(h, c), cfg, rules, positions,
+                            use_flash)
+        return y, None
+
+    body = jax.checkpoint(
+        apply_one, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else apply_one
+
+    x, _ = jax.lax.scan(body, x, (params["layers"], h0, c0))
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.logits(params, x, cfg, rules)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, rules: Rules,
+            use_flash: bool = False, remat: bool = True) -> Array:
+    lg = forward(params, batch["tokens"], cfg, rules, use_flash, remat)
+    return L.cross_entropy(lg, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: ring KV (window) + SSM state per layer
+# ---------------------------------------------------------------------------
+
+
+class HymbaCache(NamedTuple):
+    kv: kvc.KVCache  # ring caches of capacity = sliding_window
+    h: Array         # [L, B, d, N]
+    conv: Array      # [L, B, CONV_K-1, d]
+
+
+def make_cache(cfg: ModelConfig, batch: int, abstract: bool = False
+               ) -> HymbaCache:
+    cap = cfg.sliding_window or 2048
+    kv = kvc.make_cache(cfg, cfg.n_layers, batch, cap, abstract=abstract)
+    N = cfg.ssm_state or 16
+    hs = (cfg.n_layers, batch, cfg.d_model, N)
+    cs = (cfg.n_layers, batch, CONV_K - 1, cfg.d_model)
+    if abstract:
+        return HymbaCache(kv, jax.ShapeDtypeStruct(hs, jnp.float32),
+                          jax.ShapeDtypeStruct(cs, jnp.float32))
+    return HymbaCache(kv, jnp.zeros(hs, jnp.float32), jnp.zeros(cs, jnp.float32))
+
+
+def _decode_ssm(p: dict, x1: Array, h: Array, conv_tail: Array,
+                cfg: ModelConfig) -> tuple[Array, Array, Array]:
+    """One-token selective scan. x1: [B,1,d]."""
+    N = cfg.ssm_state or 16
+    u = jnp.einsum("btd,df->btf", x1, p["w_in"].astype(x1.dtype))
+    u, new_tail = _causal_conv(u, p["conv_w"], conv_tail)
+    xproj = jnp.einsum("btd,dk->btk", u, p["w_x"].astype(u.dtype))
+    Bm, Cm, dt = xproj[..., :N], xproj[..., N:2 * N], xproj[..., 2 * N:]
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])[None, None]
+    w = jnp.exp(delta * A)[:, 0]                              # [B,d]
+    dx = (delta * u.astype(jnp.float32))[:, 0]                # [B,d]
+    h_new = h * w[..., None] + dx[..., None] * Bm.astype(jnp.float32)[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm.astype(jnp.float32)[:, 0])
+    y = y[:, None].astype(x1.dtype) + u * p["d_skip"].astype(u.dtype)
+    out = jnp.einsum("btd,df->btf", y, p["w_out"].astype(x1.dtype))
+    return out, h_new, new_tail
+
+
+def decode_step(params: dict, cache: HymbaCache, token: Array,
+                cfg: ModelConfig, rules: Rules) -> tuple[Array, HymbaCache]:
+    B = token.shape[0]
+    x = L.embed(params, token[:, None], cfg, rules)
+    pos = cache.kv.pos
+    window = cfg.sliding_window or cache.kv.capacity
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    has_scale = cache.kv.k_scale is not None
+
+    def one_layer(lp, lkv: kvc.LayerKV, h, conv_tail, xx):
+        xn = L.rmsnorm(lp["in_norm"], xx, cfg.norm_eps)
+        # attention over ring cache
+        q = L._proj(xn, lp["attn"]["wq"], lp["attn"].get("wq_b")).reshape(B, 1, H, hd)
+        k = L._proj(xn, lp["attn"]["wk"], lp["attn"].get("wk_b")).reshape(B, 1, KV, hd)
+        v = L._proj(xn, lp["attn"]["wv"], lp["attn"].get("wv_b")).reshape(B, 1, KV, hd)
+        q = L.apply_rope(q, pos[None, None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[None, None], cfg.rope_theta)
+        lkv = kvc.write(lkv, k, v, pos)
+        k_all, v_all = kvc.read(lkv, xx.dtype)
+        cap = k_all.shape[1]
+        slots = jnp.arange(cap)
+        ring_pos = jnp.where(slots <= (pos % cap), slots, slots - cap) + \
+            (pos // cap) * cap
+        valid = (slots < jnp.minimum(pos + 1, cap)) & (ring_pos > pos - window)
+        out = L.attend(q, k_all, v_all, pos[None], ring_pos, causal=False,
+                       kv_mask=jnp.broadcast_to(valid[None], (B, cap)))
+        attn_out = jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, H * hd),
+                              lp["attn"]["wo"].astype(xx.dtype))
+        ssm_out, h_new, tail_new = _decode_ssm(lp["ssm"], xn, h, conv_tail, cfg)
+        fused = 0.5 * (L.rmsnorm(lp["attn_out_norm"], attn_out, cfg.norm_eps)
+                       + L.rmsnorm(lp["ssm_out_norm"], ssm_out, cfg.norm_eps))
+        xx = xx + fused
+        hmlp = L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], xx, cfg.norm_eps),
+                           cfg.act, rules)
+        return xx + hmlp, lkv, h_new, tail_new
+
+    if has_scale:
+        def body(carry, xs):
+            lp, lk, lv, lks, lvs, h, ct = xs
+            y, lkv, hn, tn = one_layer(lp, kvc.LayerKV(lk, lv, lks, lvs), h, ct, carry)
+            return y, (lkv.k, lkv.v, lkv.k_scale, lkv.v_scale, hn, tn)
+        x, (nk, nv, nks, nvs, nh, nc) = jax.lax.scan(
+            body, x, (params["layers"], cache.kv.k, cache.kv.v,
+                      cache.kv.k_scale, cache.kv.v_scale, cache.h, cache.conv))
+        new_kv = kvc.KVCache(nk, nv, nks, nvs, pos + 1)
+    else:
+        def body(carry, xs):
+            lp, lk, lv, h, ct = xs
+            y, lkv, hn, tn = one_layer(lp, kvc.LayerKV(lk, lv, None, None), h, ct, carry)
+            return y, (lkv.k, lkv.v, hn, tn)
+        x, (nk, nv, nh, nc) = jax.lax.scan(
+            body, x, (params["layers"], cache.kv.k, cache.kv.v,
+                      cache.h, cache.conv))
+        new_kv = kvc.KVCache(nk, nv, None, None, pos + 1)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params, x, cfg, rules)[:, 0]
+    return lg, HymbaCache(new_kv, nh, nc)

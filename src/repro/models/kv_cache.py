@@ -1,0 +1,104 @@
+"""KV caches for decode: dense (bf16/f32) or int8-quantized, ring-indexed.
+
+Layout is scan-friendly: leading layer dim L, so the layer scan threads one
+slice per layer. Quantization is per (token, kv-head): int8 payload plus an
+f32 scale — the memory lever that brings decode_32k of MHA whales (qwen1.5-32b)
+under the v5e HBM budget (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array                  # [L, B, S, KV, hd] kv_dtype (int8 when quantized)
+    v: Array                  # [L, B, S, KV, hd]
+    k_scale: Optional[Array]  # [L, B, S, KV] f32 (int8 only)
+    v_scale: Optional[Array]  # [L, B, S, KV] f32
+    pos: Array                # [] int32: number of tokens written
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def make_cache(cfg: ModelConfig, n_layers: int, batch: int, capacity: int,
+               abstract: bool = False) -> KVCache:
+    hd = cfg.resolved_head_dim()
+    kv_dt = jnp.dtype(cfg.kv_dtype)
+    quant = kv_dt == jnp.int8
+    shape = (n_layers, batch, capacity, cfg.n_kv_heads, hd)
+    sshape = (n_layers, batch, capacity, cfg.n_kv_heads)
+    if abstract:
+        f = jax.ShapeDtypeStruct
+        return KVCache(f(shape, kv_dt), f(shape, kv_dt),
+                       f(sshape, jnp.float32) if quant else None,
+                       f(sshape, jnp.float32) if quant else None,
+                       f((), jnp.int32))
+    return KVCache(jnp.zeros(shape, kv_dt), jnp.zeros(shape, kv_dt),
+                   jnp.zeros(sshape, jnp.float32) if quant else None,
+                   jnp.zeros(sshape, jnp.float32) if quant else None,
+                   jnp.zeros((), jnp.int32))
+
+
+def quantize(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8: x [..., hd] -> (q, scale[...])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+class LayerKV(NamedTuple):
+    """One layer's slice of the cache as threaded through the scan."""
+
+    k: Array
+    v: Array
+    k_scale: Optional[Array]
+    v_scale: Optional[Array]
+
+
+def layer_slices(cache: KVCache) -> LayerKV:
+    return LayerKV(cache.k, cache.v, cache.k_scale, cache.v_scale)
+
+
+def write(layer: LayerKV, k_new: Array, v_new: Array, pos: Array) -> LayerKV:
+    """Insert [B, S_new, KV, hd] at ring position ``pos`` (mod capacity)."""
+    cap = layer.k.shape[1]
+    idx = pos % cap
+    quant = layer.k.dtype == jnp.int8
+    if quant:
+        kq, ks = quantize(k_new)
+        vq, vs = quantize(v_new)
+        return LayerKV(
+            jax.lax.dynamic_update_slice(layer.k, kq, (0, idx, 0, 0)),
+            jax.lax.dynamic_update_slice(layer.v, vq, (0, idx, 0, 0)),
+            jax.lax.dynamic_update_slice(layer.k_scale, ks, (0, idx, 0)),
+            jax.lax.dynamic_update_slice(layer.v_scale, vs, (0, idx, 0)))
+    return LayerKV(
+        jax.lax.dynamic_update_slice(layer.k, k_new.astype(layer.k.dtype),
+                                     (0, idx, 0, 0)),
+        jax.lax.dynamic_update_slice(layer.v, v_new.astype(layer.v.dtype),
+                                     (0, idx, 0, 0)),
+        None, None)
+
+
+def read(layer: LayerKV, dtype) -> tuple[Array, Array]:
+    """Full-capacity dequantized K/V: [B, S, KV, hd]."""
+    if layer.k.dtype == jnp.int8:
+        return (dequantize(layer.k, layer.k_scale, dtype),
+                dequantize(layer.v, layer.v_scale, dtype))
+    return layer.k.astype(dtype), layer.v.astype(dtype)

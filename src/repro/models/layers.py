@@ -1,0 +1,313 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Pure-functional (params are explicit pytrees), scan-friendly (per-layer
+params carry no python state), and sharding-annotated through
+:class:`~repro.models.sharding.Rules`.
+
+Attention dispatches to the Pallas flash kernel (repro.kernels) for prefill
+when enabled, with the pure-jnp path as both fallback and oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .sharding import Rules
+
+Array = jax.Array
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["norm_scale"]
+    return out.astype(dt)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"norm_scale": jnp.ones((d,), jnp.float32),
+            "norm_bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: dict, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * params["norm_scale"] \
+        + params["norm_bias"]
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]              # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / bidirectional / sliding-window / cross)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ModelConfig, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(jnp.float32),
+        "wk": (jax.random.normal(k2, (d, KV * hd)) * s).astype(jnp.float32),
+        "wv": (jax.random.normal(k3, (d, KV * hd)) * s).astype(jnp.float32),
+        "wo": (jax.random.normal(k4, (H * hd, d)) * s).astype(jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["wq_b"] = jnp.zeros((H * hd,), jnp.float32)
+        p["wk_b"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["wv_b"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def mask_logits(logits: Array, q_pos: Array, k_pos: Array,
+                causal: bool, window: int) -> Array:
+    """logits: [B, H, Sq, Sk]; q_pos/k_pos: [Sq]/[Sk] absolute positions."""
+    ok = jnp.ones(logits.shape[-2:], jnp.bool_)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, logits.dtype)
+    return jnp.where(ok, logits, neg)
+
+
+def attend_chunked(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                   causal: bool, window: int, block_k: int) -> Array:
+    """Online-softmax attention streaming K/V blocks (flash-style memory:
+    O(Sq * block_k) live scores instead of O(Sq * Sk)); pure jnp, so it
+    lowers for any backend and differentiates (the Pallas kernel is the
+    TPU-native twin). q: [B,Sq,H,hd]; k/v: [B,Sk,KV,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    nblk = Sk // bk
+
+    qh = (q.reshape(B, Sq, KV, group, hd).astype(jnp.float32)
+          * (hd ** -0.5))
+    kb = k.reshape(B, nblk, bk, KV, hd)
+    vb = v.reshape(B, nblk, bk, KV, hd)
+    kpb = k_pos.reshape(nblk, bk)
+
+    neg = jnp.finfo(jnp.float32).min
+
+    def step(carry, xs):
+        m, l, acc = carry                      # [B,KV,g,Sq], ., [B,KV,g,Sq,hd]
+        kblk, vblk, kp = xs                    # [B,bk,KV,hd], ., [bk]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qh, kblk.astype(jnp.float32))
+        ok = jnp.ones((Sq, bk), jnp.bool_)
+        if causal:
+            ok &= kp[None, :] <= q_pos[:, None]
+        if window:
+            ok &= kp[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(ok[None, None, None], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, group, Sq), neg, jnp.float32)
+    l0 = jnp.zeros((B, KV, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, group, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attend(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+           causal: bool = True, window: int = 0,
+           kv_mask: Optional[Array] = None,
+           use_flash: bool = False, impl: str = "naive",
+           block_k: int = 512) -> Array:
+    """Grouped-query attention.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]. Returns [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+
+    if use_flash and Sq > 1 and kv_mask is None and not window:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal)
+
+    if impl == "chunked" and Sq > 1 and kv_mask is None:
+        return attend_chunked(q, k, v, q_pos, k_pos, causal, window, block_k)
+
+    qh = q.reshape(B, Sq, KV, group, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qh, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    logits = logits.reshape(B, KV * group, Sq, k.shape[1])
+    logits = mask_logits(logits, q_pos, k_pos, causal, window)
+    if kv_mask is not None:  # [B, Sk] validity (e.g. decode cache occupancy)
+        neg = jnp.finfo(jnp.float32).min
+        logits = jnp.where(kv_mask[:, None, None, :], logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = probs.reshape(B, KV, group, Sq, k.shape[1])
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_apply(params: dict, x: Array, cfg: ModelConfig, rules: Rules,
+                    positions: Array, causal: bool = True,
+                    window: int = 0, use_flash: bool = False,
+                    kv_override: tuple[Array, Array] | None = None,
+                    kv_mask: Optional[Array] = None) -> Array:
+    """Self-attention (or cross-attention when kv_override supplies K/V
+    source states already projected)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    q = _proj(x, params["wq"], params.get("wq_b")).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = _proj(x, params["wk"], params.get("wk_b")).reshape(B, S, KV, hd)
+        v = _proj(x, params["wv"], params.get("wv_b")).reshape(B, S, KV, hd)
+        k_pos = positions
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+        q = apply_rope(q, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        k_pos = jnp.arange(k.shape[1])
+        # cross-attention: no RoPE on media/encoder tokens (tagged layout)
+    q = rules.act(q, "batch", "seq", "model", None)
+    k = rules.act(k, "batch", None, "model", None)
+    v = rules.act(v, "batch", None, "model", None)
+
+    out = attend(q, k, v, positions, k_pos, causal=causal, window=window,
+                 kv_mask=kv_mask,
+                 use_flash=use_flash and kv_override is None,
+                 impl=cfg.attn_impl, block_k=cfg.attn_block_k)
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsf,fd->bsd", out, params["wo"].astype(out.dtype))
+    return rules.act(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d: int, ff: int, act: str) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {"w1": (jax.random.normal(k1, (d, ff)) * s_in).astype(jnp.float32),
+         "w2": (jax.random.normal(k2, (ff, d)) * s_out).astype(jnp.float32)}
+    if act == "silu":
+        p["w3"] = (jax.random.normal(k3, (d, ff)) * s_in).astype(jnp.float32)
+    return p
+
+
+def mlp_apply(params: dict, x: Array, act: str, rules: Rules) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"].astype(x.dtype))
+    if act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w3"].astype(x.dtype))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    h = rules.act(h, "batch", "seq", "model")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(x.dtype))
+    return rules.act(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(rng, cfg: ModelConfig) -> dict:
+    vp = cfg.padded_vocab()
+    k1, k2 = jax.random.split(rng)
+    p = {"embed": {"tokens": (jax.random.normal(k1, (vp, cfg.d_model))
+                              * 0.02).astype(jnp.float32)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k2, (cfg.d_model, vp))
+                        * cfg.d_model ** -0.5).astype(jnp.float32)
+    return p
+
+
+def embed(params: dict, tokens: Array, cfg: ModelConfig, rules: Rules) -> Array:
+    x = params["embed"]["tokens"].astype(dtype_of(cfg))[tokens]
+    return rules.act(x, "batch", "seq", None)
+
+
+def logits(params: dict, x: Array, cfg: ModelConfig, rules: Rules) -> Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["tokens"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    out = jnp.einsum("bsd,dv->bsv", x, w)
+    vp = out.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab tail (never predicted/summed)
+        neg = jnp.asarray(jnp.finfo(jnp.float32).min, out.dtype)
+        out = jnp.where(jnp.arange(vp) < cfg.vocab, out, neg)
+    return rules.act(out, "batch", "seq", "model")
+
+
+def cross_entropy(lg: Array, labels: Array) -> Array:
+    """Mean token cross-entropy in f32."""
+    lg = lg.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

@@ -1,0 +1,318 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay linear attention, in chunked-scan form.
+
+Per head (head size N), per token t:
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t          (state: N x N)
+    o_t = r_t @ (diag(u) @ k_t^T v_t + S_{t-1})     (bonus u on current token)
+
+with data-dependent decay w_t = exp(-exp(decay(x_t))) in (0, 1).
+
+TPU adaptation: the recurrence is O(T) sequential; we evaluate it chunkwise —
+within a chunk of length C the contribution of in-chunk tokens is a dense
+[C, C] masked matmul (MXU-friendly), and the chunk-to-chunk state carry is a
+jax.lax.scan over T/C steps. The Pallas kernel (kernels/rwkv6_scan.py)
+implements the fused within-chunk part; this module is also the pure-jnp
+oracle. Token-shift and channel-mix follow the paper's structure.
+
+Serving: O(1) state per layer ((N x N per head) + token-shift vectors), so
+long_500k decode carries no KV cache at all — the arch runs the long-context
+cell by construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .sharding import Rules
+
+Array = jax.Array
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.ssm_state or 64               # rwkv6 head size (official: 64)
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def time_mix_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        "wr": (jax.random.normal(ks[0], (d, d)) * s).astype(jnp.float32),
+        "wk": (jax.random.normal(ks[1], (d, d)) * s).astype(jnp.float32),
+        "wv": (jax.random.normal(ks[2], (d, d)) * s).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[3], (d, d)) * s).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[4], (d, d)) * s).astype(jnp.float32),
+        "decay_w": (jax.random.normal(ks[5], (d,)) * 0.1 - 4.0).astype(jnp.float32),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),
+        # token-shift interpolation weights (data-independent part of ddlerp)
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+    }
+
+
+def channel_mix_init(rng, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_in": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(jnp.float32),
+        "w_out": (jax.random.normal(k2, (ff, d)) * ff ** -0.5).astype(jnp.float32),
+        "mix_c": jnp.full((d,), 0.5, jnp.float32),
+    }
+
+
+def layer_init(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "att_norm": L.rmsnorm_init(cfg.d_model),
+        "rwkv": time_mix_init(k1, cfg),
+        "ffn_norm": L.rmsnorm_init(cfg.d_model),
+        "cmix": channel_mix_init(k2, cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = L.embedding_init(k_emb, cfg)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    return params
+
+
+def token_shift(x: Array, prev: Array) -> tuple[Array, Array]:
+    """Shift sequence right by one; ``prev`` is the last token of the
+    previous segment ([B, d]). Returns (shifted, new_prev)."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+class RWKVState(NamedTuple):
+    s: Array       # [B, H, hd, hd] wkv state
+    shift_a: Array  # [B, d] token-shift memory (time mix)
+    shift_c: Array  # [B, d] token-shift memory (channel mix)
+
+
+def init_state(cfg: ModelConfig, batch: int, abstract: bool = False) -> RWKVState:
+    H, hd = _heads(cfg)
+    if abstract:
+        f = jax.ShapeDtypeStruct
+        return RWKVState(f((batch, H, hd, hd), jnp.float32),
+                         f((batch, cfg.d_model), jnp.float32),
+                         f((batch, cfg.d_model), jnp.float32))
+    return RWKVState(jnp.zeros((batch, H, hd, hd), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), jnp.float32))
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, w: Array, u: Array,
+                s0: Array, chunk: int) -> tuple[Array, Array]:
+    """Chunked data-dependent-decay linear attention (the ref oracle).
+
+    r/k/v: [B, T, H, hd]; w: [B, T, H, hd] decay in (0,1); u: [H, hd];
+    s0: [B, H, hd, hd] (k-dim x v-dim). Returns (out [B,T,H,hd], s_T).
+    """
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    while T % C:  # largest feasible chunk <= requested
+        C -= 1
+    n_chunks = T // C
+
+    rc = r.reshape(B, n_chunks, C, H, hd)
+    kc = k.reshape(B, n_chunks, C, H, hd)
+    vc = v.reshape(B, n_chunks, C, H, hd)
+    wc = w.reshape(B, n_chunks, C, H, hd).astype(jnp.float32)
+
+    logw = jnp.log(jnp.clip(wc, 1e-9, 1.0))          # [B,n,C,H,hd]
+    cum = jnp.cumsum(logw, axis=2)                    # inclusive cumsum
+
+    def chunk_step(s, xs):
+        rcb, kcb, vcb, cumb, logwb = xs               # [B, C, H, hd] each
+        rf = rcb.astype(jnp.float32)
+        kf = kcb.astype(jnp.float32)
+        vf = vcb.astype(jnp.float32)
+        # decay products
+        total = cumb[:, -1]                           # [B, H, hd] sum of logw
+        d_in = jnp.exp(cumb - logwb)                  # prod of w before token i
+        d_out = jnp.exp(total[:, None] - cumb)        # prod of w after token i
+
+        # inter-chunk: r_i decayed against incoming state
+        r_in = rf * d_in                              # [B,C,H,hd]
+        out = jnp.einsum("bchk,bhkv->bchv", r_in, s)
+
+        # intra-chunk: pairwise decays A[i,j] = prod_{j<t<i} w (j < i strictly)
+        # via exp(cum_{i-1} - cum_j) elementwise on the k dim; mask inside the
+        # exp so j >= i never overflows (would give inf * 0 = NaN).
+        iidx = jnp.arange(C)
+        strict = (iidx[:, None] > iidx[None, :])  # [C(i), C(j)]
+        diff = (cumb - logwb)[:, :, None] - cumb[:, None, :, :, :]
+        a = jnp.exp(jnp.where(strict[None, :, :, None, None], diff, -jnp.inf))
+        # a: [B, C(i), C(j), H, hd]
+        scores = jnp.einsum("bihk,bjhk,bijhk->bijh", rf, kf, a)
+        out = out + jnp.einsum("bijh,bjhv->bihv", scores, vf)
+
+        # current-token bonus u
+        cur = jnp.einsum("bihk,bihk->bih", rf, kf * u[None, None])
+        out = out + cur[..., None] * vf
+
+        # state update: s' = diag(prod w) s + sum_j d_out_j k_j^T v_j
+        k_dec = kf * d_out
+        s_new = s * jnp.exp(total)[:, :, :, None] + \
+            jnp.einsum("bchk,bchv->bhkv", k_dec, vf)
+        return s_new, out
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3, 4),
+          logw.transpose(1, 0, 2, 3, 4))
+    s_final, outs = jax.lax.scan(chunk_step, s0.astype(jnp.float32), xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    return out.astype(r.dtype), s_final
+
+
+def time_mix_apply(p: dict, x: Array, state_s: Array, shift_prev: Array,
+                   cfg: ModelConfig, rules: Rules,
+                   use_kernel: bool = False) -> tuple[Array, Array, Array]:
+    """x: [B, T, d] -> (out, new_state, new_shift_prev)."""
+    B, T, d = x.shape
+    H, hd = _heads(cfg)
+    xs, new_prev = token_shift(x, shift_prev.astype(x.dtype))
+
+    def mix(name):
+        m = p[f"mix_{name}"].astype(x.dtype)
+        return x * m + xs * (1 - m)
+
+    r = jnp.einsum("btd,df->btf", mix("r"), p["wr"].astype(x.dtype))
+    k = jnp.einsum("btd,df->btf", mix("k"), p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,df->btf", mix("v"), p["wv"].astype(x.dtype))
+    g = jnp.einsum("btd,df->btf", mix("g"), p["wg"].astype(x.dtype))
+    r = rules.act(r, "batch", None, "model")
+    k = rules.act(k, "batch", None, "model")
+    v = rules.act(v, "batch", None, "model")
+
+    # data-dependent decay: w_t = exp(-exp(decay_w + f(x_t)))
+    decay_in = mix("w").astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay_w"][None, None] + 0.1 * decay_in))
+
+    rh = r.reshape(B, T, H, hd)
+    kh = k.reshape(B, T, H, hd)
+    vh = v.reshape(B, T, H, hd)
+    wh = w.reshape(B, T, H, hd)
+
+    if use_kernel and T > 1:
+        from repro.kernels import ops as kops
+        out, s_new = kops.rwkv6_scan(rh, kh, vh, wh, p["bonus_u"], state_s,
+                                     chunk=cfg.ssm_chunk)
+    else:
+        out, s_new = wkv_chunked(rh, kh, vh, wh, p["bonus_u"], state_s,
+                                 chunk=cfg.ssm_chunk if T > 1 else 1)
+    out = out.reshape(B, T, d) * jax.nn.silu(g)
+    out = jnp.einsum("btd,df->btf", out, p["wo"].astype(x.dtype))
+    return rules.act(out, "batch", None, None), s_new, new_prev
+
+
+def channel_mix_apply(p: dict, x: Array, shift_prev: Array,
+                      rules: Rules) -> tuple[Array, Array]:
+    xs, new_prev = token_shift(x, shift_prev.astype(x.dtype))
+    m = p["mix_c"].astype(x.dtype)
+    xi = x * m + xs * (1 - m)
+    h = jnp.einsum("btd,df->btf", xi, p["w_in"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(h))
+    h = rules.act(h, "batch", None, "model")
+    out = jnp.einsum("btf,fd->btd", h, p["w_out"].astype(x.dtype))
+    return rules.act(out, "batch", None, None), new_prev
+
+
+def layer_apply(lp: dict, x: Array, st: RWKVState, cfg: ModelConfig,
+                rules: Rules, use_kernel: bool) -> tuple[Array, RWKVState]:
+    h, s_new, sa = time_mix_apply(lp["rwkv"],
+                                  L.rmsnorm(lp["att_norm"], x, cfg.norm_eps),
+                                  st.s, st.shift_a, cfg, rules, use_kernel)
+    x = x + h
+    h, sc = channel_mix_apply(lp["cmix"],
+                              L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps),
+                              st.shift_c, rules)
+    return x + h, RWKVState(s_new, sa, sc)
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, rules: Rules,
+            use_kernel: bool = False, remat: bool = True,
+            state0: RWKVState | None = None,
+            last_only: bool = False) -> tuple[Array, RWKVState]:
+    B, T = tokens.shape
+    x = L.embed(params, tokens, cfg, rules)
+    st0 = state0 or init_state(cfg, B)
+
+    def apply_one(carry, xs):
+        lp, s, sa, sc = xs
+        y, st = layer_apply(lp, carry, RWKVState(s, sa, sc), cfg, rules,
+                            use_kernel)
+        return y, (st.s, st.shift_a, st.shift_c)
+
+    body = jax.checkpoint(
+        apply_one, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else apply_one
+
+    # per-layer states: stack leading dim L
+    Lw = cfg.n_layers
+    s_stack = jnp.broadcast_to(st0.s, (Lw, *st0.s.shape)) if state0 is None \
+        else state0.s
+    sa_stack = jnp.zeros((Lw, B, cfg.d_model), jnp.float32) if state0 is None \
+        else state0.shift_a
+    sc_stack = jnp.zeros((Lw, B, cfg.d_model), jnp.float32) if state0 is None \
+        else state0.shift_c
+
+    x, (ns, nsa, nsc) = jax.lax.scan(
+        body, x, (params["layers"], s_stack, sa_stack, sc_stack))
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.logits(params, x, cfg, rules), RWKVState(ns, nsa, nsc)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, rules: Rules,
+            use_kernel: bool = False, remat: bool = True) -> Array:
+    lg, _ = forward(params, batch["tokens"], cfg, rules, use_kernel, remat)
+    return L.cross_entropy(lg, batch["labels"])
+
+
+def stacked_state(cfg: ModelConfig, batch: int, abstract: bool = False) -> RWKVState:
+    """Per-layer state stack [L, ...] — the 'cache' for serving."""
+    one = init_state(cfg, batch, abstract=abstract)
+    Lw = cfg.n_layers
+    if abstract:
+        f = jax.ShapeDtypeStruct
+        return RWKVState(f((Lw, *one.s.shape), jnp.float32),
+                         f((Lw, *one.shift_a.shape), jnp.float32),
+                         f((Lw, *one.shift_c.shape), jnp.float32))
+    return RWKVState(jnp.broadcast_to(one.s, (Lw, *one.s.shape)),
+                     jnp.broadcast_to(one.shift_a, (Lw, *one.shift_a.shape)),
+                     jnp.broadcast_to(one.shift_c, (Lw, *one.shift_c.shape)))
+
+
+def decode_step(params: dict, state: RWKVState, token: Array,
+                cfg: ModelConfig, rules: Rules) -> tuple[Array, RWKVState]:
+    """One-token step: the recurrence in its O(1) form. state is stacked [L,...]."""
+    B = token.shape[0]
+    x = L.embed(params, token[:, None], cfg, rules)
+
+    def body(carry, xs):
+        lp, s, sa, sc = xs
+        y, st = layer_apply(lp, carry, RWKVState(s, sa, sc), cfg, rules, False)
+        return y, (st.s, st.shift_a, st.shift_c)
+
+    x, (ns, nsa, nsc) = jax.lax.scan(
+        body, x, (params["layers"], state.s, state.shift_a, state.shift_c))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params, x, cfg, rules)[:, 0]
+    return lg, RWKVState(ns, nsa, nsc)

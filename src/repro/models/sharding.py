@@ -1,0 +1,165 @@
+"""Sharding rules: logical axes -> mesh axes, Megatron-style TP + DP (+pod).
+
+Models are written against *logical* axis names; the launch layer supplies a
+:class:`Rules` instance binding them to mesh axes. Tests pass
+``Rules.disabled()`` so the same code runs on one CPU device with zero
+constraint overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Binding of logical tensor axes to mesh axis names."""
+
+    batch: Optional[tuple] = ("pod", "data")  # activation batch dim
+    seq: Optional[str] = None                 # sequence dim (SP when set)
+    model: Optional[str] = "model"            # TP dim (heads / ffn / vocab)
+    expert: Optional[str] = "model"           # EP dim (expert axis)
+    layer_opt: Optional[str] = "data"         # extra axis for optimizer state
+    enabled: bool = True
+
+    @staticmethod
+    def disabled() -> "Rules":
+        return Rules(batch=None, seq=None, model=None, expert=None,
+                     layer_opt=None, enabled=False)
+
+    @staticmethod
+    def single_pod() -> "Rules":
+        return Rules(batch=("data",))
+
+    # -- activation constraints ------------------------------------------------
+    def act(self, x, *logical):
+        """Constrain an activation. logical entries: 'batch'|'seq'|'model'|
+        'expert'|None."""
+        if not self.enabled:
+            return x
+        spec = []
+        for l in logical:
+            if l == "batch":
+                spec.append(self.batch)
+            elif l == "seq":
+                spec.append(self.seq)
+            elif l == "model":
+                spec.append(self.model)
+            elif l == "expert":
+                spec.append(self.expert)
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs by path pattern.
+# ---------------------------------------------------------------------------
+
+# Patterns are matched against '/'-joined pytree key paths. First match wins.
+# All backbone params carry a leading scan (layer) dimension.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / output head: vocab sharded over model axis
+    (r"embed/tokens$", ("model", None)),
+    (r"lm_head$", (None, "model")),
+    # attention projections
+    (r"attn/wq(_b)?$", (None, None, "model")),
+    (r"attn/wk(_b)?$", (None, None, "model")),
+    (r"attn/wv(_b)?$", (None, None, "model")),
+    (r"attn/wo$", (None, "model", None)),
+    (r"attn/.*bias.*$", (None, "model")),
+    # dense mlp
+    (r"mlp/w1$", (None, None, "model")),
+    (r"mlp/w3$", (None, None, "model")),
+    (r"mlp/w2$", (None, "model", None)),
+    # moe: router replicated, experts sharded on the expert axis
+    (r"moe/router$", (None, None, None)),
+    (r"moe/w1$", (None, "expert", None, None)),
+    (r"moe/w3$", (None, "expert", None, None)),
+    (r"moe/w2$", (None, "expert", None, None)),
+    # rwkv / ssm: project to model-sharded inner dim
+    (r"ssm/w_x$", (None, None, None)),   # [d, 2N+1]: tiny, odd -> replicated
+    (r"(rwkv|ssm)/(wr|wk|wv|wg|w_in)$", (None, None, "model")),
+    (r"(rwkv|ssm)/(wo|w_out)$", (None, "model", None)),
+    (r"(rwkv|ssm)/.*decay.*$", (None, "model")),
+    (r"(rwkv|ssm)/.*", (None,)),  # small per-channel tensors: replicated
+    # norms & scalars: replicated
+    (r".*norm.*$", None),
+    (r".*scale.*$", None),
+]
+
+
+def _spec_for(path: str, ndim: int, rules: Rules) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if logical is None:
+                return P()
+            axes = []
+            for l in logical:
+                if l == "model":
+                    axes.append(rules.model)
+                elif l == "expert":
+                    axes.append(rules.expert)
+                else:
+                    axes.append(None)
+            # pad/trim to ndim (scan dim may or may not be present)
+            while len(axes) < ndim:
+                axes.insert(0, None)
+            axes = axes[-ndim:] if len(axes) > ndim else axes
+            return P(*axes)
+    return P()  # default: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params, rules: Rules):
+    """PartitionSpec tree for a parameter pytree (or its eval_shape)."""
+    if not rules.enabled:
+        return jax.tree.map(lambda _: P(), params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_spec_for(_path_str(p), getattr(v, "ndim", 0), rules)
+             for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_pspecs(params, rules: Rules, data_size: int | None = None):
+    """Optimizer-moment specs: like params, plus ZeRO-1 sharding of the scan
+    (layer) dimension over the data axis when the dimension divides evenly.
+
+    ``data_size``: size of the ``rules.layer_opt`` mesh axis; when given, a
+    leading dim is only claimed if divisible (scan dims like n_layers=22 stay
+    replicated rather than forcing uneven shards).
+    """
+    if not rules.enabled:
+        return jax.tree.map(lambda _: P(), params)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    data_axis = rules.layer_opt
+    specs = []
+    for p, v in flat:
+        spec = _spec_for(_path_str(p), getattr(v, "ndim", 0), rules)
+        entries = list(spec)
+        while len(entries) < getattr(v, "ndim", 0):
+            entries.append(None)
+        # ZeRO-1: claim the leading (scan/vocab) dim for the data axis if free
+        dim0 = v.shape[0] if getattr(v, "ndim", 0) >= 2 else 0
+        divisible = data_size is None or (dim0 and dim0 % data_size == 0)
+        if data_axis and entries and entries[0] is None and dim0 and divisible:
+            entries[0] = data_axis
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,226 @@
+"""Dense decoder-only transformer (llama/qwen family) with scan-over-layers.
+
+Covers qwen1.5-32b, smollm-360m, tinyllama-1.1b, minitron-8b; the MoE variant
+swaps the FFN (moe.py), and hymba/vlm/whisper compose these blocks with extra
+branches. The layer stack is a single jax.lax.scan over stacked parameters so
+the traced/compiled HLO stays O(1) in depth (compile-time requirement for the
+40-cell dry-run).
+
+API (shared across families):
+  init_params(rng, cfg)                      -> param pytree
+  forward(params, tokens, cfg, rules, ...)   -> [B, S, V] logits
+  loss_fn(params, batch, cfg, rules, ...)    -> scalar loss (f32)
+  prefill(params, tokens, cfg, rules, ...)   -> (last-token logits, KVCache)
+  decode_step(params, cache, token, cfg, ..) -> (logits, KVCache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kv_cache as kvc
+from . import layers as L
+from .config import ModelConfig
+from .sharding import Rules
+
+Array = jax.Array
+
+
+def layer_init(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "mlp_norm": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = L.embedding_init(k_emb, cfg)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    return params
+
+
+def _layer_window(cfg: ModelConfig) -> int:
+    return cfg.sliding_window
+
+
+def layer_apply(lp: dict, x: Array, cfg: ModelConfig, rules: Rules,
+                positions: Array, use_flash: bool) -> Array:
+    h = L.attention_apply(lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps),
+                          cfg, rules, positions, causal=True,
+                          window=_layer_window(cfg), use_flash=use_flash)
+    x = x + h
+    h = L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps),
+                    cfg.act, rules)
+    return x + h
+
+
+def _stack(params: dict, x: Array, cfg: ModelConfig, rules: Rules,
+           positions: Array, use_flash: bool, remat: bool) -> Array:
+    def apply_one(carry, lp):
+        return layer_apply(lp, carry, cfg, rules, positions, use_flash)
+
+    if remat:
+        apply_one = jax.checkpoint(
+            apply_one, policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, _ = jax.lax.scan(lambda c, lp: (apply_one(c, lp), None), x,
+                        params["layers"])
+    return x
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, rules: Rules,
+            use_flash: bool = False, remat: bool = True,
+            last_only: bool = False) -> Array:
+    B, S = tokens.shape
+    x = L.embed(params, tokens, cfg, rules)
+    positions = jnp.arange(S)
+    x = _stack(params, x, cfg, rules, positions, use_flash, remat)
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.logits(params, x, cfg, rules)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, rules: Rules,
+            use_flash: bool = False, remat: bool = True) -> Array:
+    lg = forward(params, batch["tokens"], cfg, rules, use_flash, remat)
+    return L.cross_entropy(lg, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def _decode_layer(lp: dict, layer_kv: kvc.LayerKV, x: Array,
+                  cfg: ModelConfig, rules: Rules, pos: Array,
+                  window: int) -> tuple[Array, kvc.LayerKV]:
+    """One token (x: [B, 1, d]) against this layer's cache."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    xa = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+    q = L._proj(xa, lp["attn"]["wq"], lp["attn"].get("wq_b")).reshape(B, 1, H, hd)
+    k = L._proj(xa, lp["attn"]["wk"], lp["attn"].get("wk_b")).reshape(B, 1, KV, hd)
+    v = L._proj(xa, lp["attn"]["wv"], lp["attn"].get("wv_b")).reshape(B, 1, KV, hd)
+    q = L.apply_rope(q, pos[None, None], cfg.rope_theta)[:, 0:1]
+    k = L.apply_rope(k, pos[None, None], cfg.rope_theta)[:, 0:1]
+
+    layer_kv = kvc.write(layer_kv, k, v, pos)
+    k_all, v_all = kvc.read(layer_kv, x.dtype)
+    cap = k_all.shape[1]
+    slots = jnp.arange(cap)
+    written = jnp.minimum(pos + 1, cap)
+    ring_pos = jnp.where(slots <= (pos % cap), slots, slots - cap) + \
+        (pos // cap) * cap  # absolute position each ring slot currently holds
+    valid = slots < written
+    if window:
+        valid &= ring_pos > (pos - window)
+    kv_mask = jnp.broadcast_to(valid[None, :], (B, cap))
+
+    out = L.attend(q, k_all, v_all, pos[None], ring_pos, causal=False,
+                   window=0, kv_mask=kv_mask)
+    out = out.reshape(B, 1, H * hd)
+    h = jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"].astype(out.dtype))
+    x = x + h
+    h = L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps),
+                    cfg.act, rules)
+    return x + h, layer_kv
+
+
+def decode_step(params: dict, cache: kvc.KVCache, token: Array,
+                cfg: ModelConfig, rules: Rules) -> tuple[Array, kvc.KVCache]:
+    """Generate logits for one new token; token: [B]."""
+    B = token.shape[0]
+    x = L.embed(params, token[:, None], cfg, rules)
+    pos = cache.pos
+    window = cfg.sliding_window
+    has_scale = cache.k_scale is not None
+
+    if has_scale:
+        def body(carry, xs):
+            lp, lk, lv, lks, lvs = xs
+            y, lkv = _decode_layer(lp, kvc.LayerKV(lk, lv, lks, lvs), carry,
+                                   cfg, rules, pos, window)
+            return y, (lkv.k, lkv.v, lkv.k_scale, lkv.v_scale)
+
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v,
+                      cache.k_scale, cache.v_scale))
+        new_cache = kvc.KVCache(nk, nv, nks, nvs, pos + 1)
+    else:
+        def body(carry, xs):
+            lp, lk, lv = xs
+            y, lkv = _decode_layer(lp, kvc.LayerKV(lk, lv, None, None), carry,
+                                   cfg, rules, pos, window)
+            return y, (lkv.k, lkv.v)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v))
+        new_cache = kvc.KVCache(nk, nv, None, None, pos + 1)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params, x, cfg, rules)[:, 0]
+    return lg, new_cache
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, rules: Rules,
+            capacity: Optional[int] = None, use_flash: bool = False
+            ) -> tuple[Array, kvc.KVCache]:
+    """Process a full prompt, building the KV cache."""
+    B, S = tokens.shape
+    cap = capacity or S
+    cache = kvc.make_cache(cfg, cfg.n_layers, B, cap)
+    x = L.embed(params, tokens, cfg, rules)
+    positions = jnp.arange(S)
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def body(carry, xs):
+        lp, lk, lv, lks, lvs = xs
+        has_scale = lks is not None
+        xa = L.rmsnorm(lp["attn_norm"], carry, cfg.norm_eps)
+        q = L._proj(xa, lp["attn"]["wq"], lp["attn"].get("wq_b")).reshape(B, S, H, hd)
+        k = L._proj(xa, lp["attn"]["wk"], lp["attn"].get("wk_b")).reshape(B, S, KV, hd)
+        v = L._proj(xa, lp["attn"]["wv"], lp["attn"].get("wv_b")).reshape(B, S, KV, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        layer_kv = kvc.LayerKV(lk, lv, lks, lvs)
+        layer_kv = kvc.write(layer_kv, k, v, jnp.asarray(0, jnp.int32))
+        out = L.attend(q, k, v, positions, positions, causal=True,
+                       window=cfg.sliding_window, use_flash=use_flash,
+                       impl=cfg.attn_impl, block_k=cfg.attn_block_k)
+        out = out.reshape(B, S, H * hd)
+        h = jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"].astype(out.dtype))
+        x2 = carry + h
+        h = L.mlp_apply(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x2, cfg.norm_eps),
+                        cfg.act, rules)
+        return x2 + h, (layer_kv.k, layer_kv.v, layer_kv.k_scale, layer_kv.v_scale)
+
+    has_scale = cache.k_scale is not None
+    xs = (params["layers"], cache.k, cache.v,
+          cache.k_scale if has_scale else None,
+          cache.v_scale if has_scale else None)
+    if not has_scale:
+        def body2(carry, xs2):
+            lp, lk, lv = xs2
+            y, (nk, nv, _, _) = body(carry, (lp, lk, lv, None, None))
+            return y, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(body2, x, (params["layers"], cache.k, cache.v))
+        cache = kvc.KVCache(nk, nv, None, None, jnp.asarray(S, jnp.int32))
+    else:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
+        cache = kvc.KVCache(nk, nv, nks, nvs, jnp.asarray(S, jnp.int32))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params, x[:, -1:], cfg, rules)[:, 0]
+    return lg, cache

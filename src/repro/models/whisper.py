@@ -1,0 +1,244 @@
+"""whisper-tiny backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings [B, n_frames, d_model] (what the two conv layers
+would produce from the log-mel spectrogram). Encoder: bidirectional
+self-attention + GELU MLP with sinusoidal positions. Decoder: causal
+self-attention + cross-attention over encoder output.
+
+Whisper uses plain LayerNorm and absolute positions; we use sinusoidal
+embeddings on both sides (deviation from learned decoder positions noted in
+DESIGN.md §9 — required for the assigned 32k decode shapes, far beyond the
+checkpoint's 448-token table).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kv_cache as kvc
+from . import layers as L
+from .config import ModelConfig
+from .sharding import Rules
+
+Array = jax.Array
+
+
+def sinusoid(n: int, d: int) -> Array:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10_000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1),
+                       jnp.float32)
+
+
+def enc_layer_init(rng, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": L.layernorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "mlp_norm": L.layernorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def dec_layer_init(rng, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "attn_norm": L.layernorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "xattn_norm": L.layernorm_init(cfg.d_model),
+        "xattn": L.attention_init(k2, cfg),
+        "mlp_norm": L.layernorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    params = L.embedding_init(k_emb, cfg)
+    params["enc_layers"] = jax.vmap(lambda k: enc_layer_init(k, cfg))(enc_keys)
+    params["dec_layers"] = jax.vmap(lambda k: dec_layer_init(k, cfg))(dec_keys)
+    params["enc_norm"] = L.layernorm_init(cfg.d_model)
+    params["final_norm"] = L.layernorm_init(cfg.d_model)
+    return params
+
+
+def encode(params: dict, frames: Array, cfg: ModelConfig, rules: Rules,
+           remat: bool = True) -> Array:
+    """frames: [B, T_f, d] precomputed frame embeddings (stub frontend)."""
+    B, Tf, d = frames.shape
+    x = frames + sinusoid(Tf, d)[None].astype(frames.dtype)
+    positions = jnp.arange(Tf)
+
+    def block(c, lp_):
+        h = L.attention_apply(lp_["attn"],
+                              L.layernorm(lp_["attn_norm"], c, cfg.norm_eps),
+                              cfg, rules, positions, causal=False)
+        c = c + h
+        h = L.mlp_apply(lp_["mlp"],
+                        L.layernorm(lp_["mlp_norm"], c, cfg.norm_eps),
+                        "gelu", rules)
+        return c + h
+
+    if remat:
+        block = jax.checkpoint(block,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, _ = jax.lax.scan(lambda c, lp: (block(c, lp), None), x,
+                        params["enc_layers"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def dec_layer_apply(lp: dict, x: Array, enc_kv: tuple[Array, Array],
+                    cfg: ModelConfig, rules: Rules, positions: Array,
+                    use_flash: bool) -> Array:
+    h = L.attention_apply(lp["attn"], L.layernorm(lp["attn_norm"], x, cfg.norm_eps),
+                          cfg, rules, positions, causal=True, use_flash=use_flash)
+    x = x + h
+    h = L.attention_apply(lp["xattn"], L.layernorm(lp["xattn_norm"], x, cfg.norm_eps),
+                          cfg, rules, positions, causal=False,
+                          kv_override=enc_kv)
+    x = x + h
+    h = L.mlp_apply(lp["mlp"], L.layernorm(lp["mlp_norm"], x, cfg.norm_eps),
+                    "gelu", rules)
+    return x + h
+
+
+def _enc_kv(lp, enc_out, cfg):
+    B, Tf, _ = enc_out.shape
+    hd = cfg.resolved_head_dim()
+    KV = cfg.n_kv_heads
+    k = L._proj(enc_out, lp["xattn"]["wk"], lp["xattn"].get("wk_b")).reshape(B, Tf, KV, hd)
+    v = L._proj(enc_out, lp["xattn"]["wv"], lp["xattn"].get("wv_b")).reshape(B, Tf, KV, hd)
+    return k, v
+
+
+def forward(params: dict, tokens: Array, frames: Array, cfg: ModelConfig,
+            rules: Rules, use_flash: bool = False, remat: bool = True,
+            last_only: bool = False) -> Array:
+    enc_out = encode(params, frames, cfg, rules, remat)
+    B, S = tokens.shape
+    x = L.embed(params, tokens, cfg, rules)
+    x = x + sinusoid(S, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def block(c, lp_):
+        kv = _enc_kv(lp_, enc_out, cfg)
+        return dec_layer_apply(lp_, c, kv, cfg, rules, positions, use_flash)
+
+    if remat:
+        block = jax.checkpoint(block,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, _ = jax.lax.scan(lambda c, lp: (block(c, lp), None), x,
+                        params["dec_layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    return L.logits(params, x, cfg, rules)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, rules: Rules,
+            use_flash: bool = False, remat: bool = True) -> Array:
+    lg = forward(params, batch["tokens"], batch["frames"], cfg, rules,
+                 use_flash, remat)
+    return L.cross_entropy(lg, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+class WhisperCache(NamedTuple):
+    kv: kvc.KVCache  # decoder self-attn caches [L_dec, B, cap, KV, hd]
+    ck: Array        # [L_dec, B, T_f, KV, hd] cross K (static)
+    cv: Array        # [L_dec, B, T_f, KV, hd]
+
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int,
+               abstract: bool = False) -> WhisperCache:
+    kv = kvc.make_cache(cfg, cfg.n_layers, batch, capacity, abstract=abstract)
+    hd = cfg.resolved_head_dim()
+    cs = (cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, hd)
+    if abstract:
+        f = jax.ShapeDtypeStruct
+        return WhisperCache(kv, f(cs, jnp.dtype(cfg.dtype)),
+                            f(cs, jnp.dtype(cfg.dtype)))
+    z = jnp.zeros(cs, jnp.dtype(cfg.dtype))
+    return WhisperCache(kv, z, z)
+
+
+def build_cross_kv(params: dict, enc_out: Array, cfg: ModelConfig
+                   ) -> tuple[Array, Array]:
+    def one(lp):
+        return _enc_kv(lp, enc_out, cfg)
+    return jax.vmap(one)(params["dec_layers"])
+
+
+def decode_step(params: dict, cache: WhisperCache, token: Array,
+                cfg: ModelConfig, rules: Rules) -> tuple[Array, WhisperCache]:
+    B = token.shape[0]
+    pos = cache.kv.pos
+    x = L.embed(params, token[:, None], cfg, rules)
+    cap = cache.kv.capacity
+    pe = sinusoid(cap, cfg.d_model)
+    x = x + jax.lax.dynamic_slice(pe, (pos % cap, 0), (1, cfg.d_model))[None].astype(x.dtype)
+    has_scale = cache.kv.k_scale is not None
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def one_layer(lp, lkv, ck, cv, xx):
+        xa = L.layernorm(lp["attn_norm"], xx, cfg.norm_eps)
+        q = L._proj(xa, lp["attn"]["wq"], lp["attn"].get("wq_b")).reshape(B, 1, H, hd)
+        k = L._proj(xa, lp["attn"]["wk"], lp["attn"].get("wk_b")).reshape(B, 1, KV, hd)
+        v = L._proj(xa, lp["attn"]["wv"], lp["attn"].get("wv_b")).reshape(B, 1, KV, hd)
+        lkv = kvc.write(lkv, k, v, pos)
+        k_all, v_all = kvc.read(lkv, xx.dtype)
+        slots = jnp.arange(cap)
+        valid = slots < jnp.minimum(pos + 1, cap)
+        out = L.attend(q, k_all, v_all, pos[None], slots, causal=False,
+                       kv_mask=jnp.broadcast_to(valid[None], (B, cap)))
+        xx = xx + jnp.einsum("bsf,fd->bsd", out.reshape(B, 1, H * hd),
+                             lp["attn"]["wo"].astype(xx.dtype))
+        # cross attention over the (static) encoder K/V
+        xq = L.layernorm(lp["xattn_norm"], xx, cfg.norm_eps)
+        q2 = L._proj(xq, lp["xattn"]["wq"], lp["xattn"].get("wq_b")).reshape(B, 1, H, hd)
+        out2 = L.attend(q2, ck.astype(xx.dtype), cv.astype(xx.dtype),
+                        pos[None], jnp.arange(ck.shape[1]), causal=False)
+        xx = xx + jnp.einsum("bsf,fd->bsd", out2.reshape(B, 1, H * hd),
+                             lp["xattn"]["wo"].astype(xx.dtype))
+        h = L.mlp_apply(lp["mlp"], L.layernorm(lp["mlp_norm"], xx, cfg.norm_eps),
+                        "gelu", rules)
+        return xx + h, lkv
+
+    if has_scale:
+        def body(carry, xs):
+            lp, lk, lv, lks, lvs, ck, cv = xs
+            y, lkv = one_layer(lp, kvc.LayerKV(lk, lv, lks, lvs), ck, cv, carry)
+            return y, (lkv.k, lkv.v, lkv.k_scale, lkv.v_scale)
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache.kv.k, cache.kv.v,
+                      cache.kv.k_scale, cache.kv.v_scale, cache.ck, cache.cv))
+        new_kv = kvc.KVCache(nk, nv, nks, nvs, pos + 1)
+    else:
+        def body(carry, xs):
+            lp, lk, lv, ck, cv = xs
+            y, lkv = one_layer(lp, kvc.LayerKV(lk, lv, None, None), ck, cv, carry)
+            return y, (lkv.k, lkv.v)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache.kv.k, cache.kv.v,
+                      cache.ck, cache.cv))
+        new_kv = kvc.KVCache(nk, nv, None, None, pos + 1)
+
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    lg = L.logits(params, x, cfg, rules)[:, 0]
+    return lg, WhisperCache(new_kv, cache.ck, cache.cv)

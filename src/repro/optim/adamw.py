@@ -1,0 +1,112 @@
+"""AdamW in pure JAX, pytree-native, with escrow/exact gradient clipping.
+
+Clipping modes map to the coordination plan (core/planner.py):
+  * "exact"  — true global-norm clip; in sync data-parallel mode the global
+    norm falls out of the already-reduced gradients (no extra collective);
+    in deferred/pod-replica modes it would require a cross-pod all-reduce,
+    so the planner forbids it there;
+  * "escrow" — paper §8: each of R replicas clips against its share
+    tau/sqrt(R) of the clip budget; ||g_global|| <= tau is then guaranteed by
+    the triangle-free L2 composition of disjoint shards (sum of squares),
+    with zero coordination;
+  * "none".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    clip_mode: str = "escrow"   # exact | escrow | none
+    num_replicas: int = 1       # escrow share divisor (R)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_grads(grads: PyTree, cfg: AdamWConfig) -> tuple[PyTree, jax.Array]:
+    """Returns (clipped grads, pre-clip norm)."""
+    norm = global_norm(grads)
+    if cfg.clip_mode == "none":
+        return grads, norm
+    if cfg.clip_mode == "escrow":
+        # local share of the global budget (paper §8): tau_local = tau/sqrt(R)
+        budget = cfg.clip_norm / jnp.sqrt(jnp.asarray(cfg.num_replicas,
+                                                      jnp.float32))
+    else:  # exact
+        budget = jnp.asarray(cfg.clip_norm, jnp.float32)
+    scale = jnp.minimum(1.0, budget / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+           params: PyTree) -> tuple[PyTree, AdamWState, dict]:
+    grads, pre_norm = clip_grads(grads, cfg)
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    lr = lr_at(cfg, count)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": pre_norm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, count), metrics

@@ -1,0 +1,62 @@
+"""Gradient/parameter compression for the cross-pod (DCN) merge.
+
+The deferred merge of the coordination plan is the only cross-pod traffic;
+compressing it shrinks the roofline's collective term directly:
+
+  * "none" — f32 psum/pmean;
+  * "bf16" — halve wire bytes; error feedback optional at the call site;
+  * "int8" — per-leaf symmetric quantization with a pmax-shared scale, then
+    an all-gather of int8 payloads and a local dequantized mean (int8 cannot
+    be summed on the wire without overflow, and all-gather moves exactly
+    P x N bytes — at P pods <= 4 this beats an f32 all-reduce 4x/2x).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def pmean_tree(tree: PyTree, axis: str) -> PyTree:
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis), tree)
+
+
+def pmean_bf16(tree: PyTree, axis: str) -> PyTree:
+    """bf16 on the wire via all-gather + local f32 mean.
+
+    (An all-reduce that *computes* in bf16 is avoided: reduction error grows
+    with pod count and XLA CPU lacks the kernel; gather moves the same bytes
+    at small pod counts and reduces exactly.)
+    """
+    def one(x):
+        gathered = jax.lax.all_gather(x.astype(jnp.bfloat16), axis)
+        return gathered.astype(jnp.float32).mean(axis=0).astype(x.dtype)
+    return jax.tree.map(one, tree)
+
+
+def pmean_int8(tree: PyTree, axis: str, axis_size: int) -> PyTree:
+    """Quantize -> all_gather(int8) -> local dequantized mean."""
+    def one(x):
+        x32 = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(x32))
+        scale = jax.lax.pmax(scale, axis)          # shared scale (scalar wire)
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(x32 / scale * 127.0), -127, 127).astype(jnp.int8)
+        gathered = jax.lax.all_gather(q, axis)     # [P, ...] int8 on the wire
+        mean = gathered.astype(jnp.float32).mean(axis=0) * (scale / 127.0)
+        return mean.astype(x.dtype)
+    return jax.tree.map(one, tree)
+
+
+def merge_mean(tree: PyTree, axis: str, axis_size: int, compress: str) -> PyTree:
+    if compress == "none":
+        return pmean_tree(tree, axis)
+    if compress == "bf16":
+        return pmean_bf16(tree, axis)
+    if compress == "int8":
+        return pmean_int8(tree, axis, axis_size)
+    raise ValueError(f"unknown compression {compress!r}")

@@ -1,0 +1,124 @@
+"""Training runtime: coordination-planned loop with checkpoint/restart and
+straggler-tolerant merge cadence.
+
+The loop consults the CoordinationPlan (core/planner.py): gradient merges
+follow the plan's ``merge_every`` (deferred modes), metrics are read only at
+log boundaries (G-counter slots), checkpoints use temp-ID saves with
+commit-time sequential renaming, and restart resumes from the newest
+complete manifest on an arbitrary mesh (elastic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import planner
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models.config import ModelConfig
+from repro.models.sharding import Rules
+from repro.optim import adamw, coord
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 50
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = no checkpoints
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 0
+    coord: coord.CoordConfig = dataclasses.field(default_factory=coord.CoordConfig)
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    remat: bool = True
+    use_flash: bool = False
+
+
+def coordination_plan(cfg: TrainConfig) -> planner.CoordinationPlan:
+    """The static I-confluence analysis of this training configuration."""
+    return planner.plan_states(planner.training_state_specs(
+        coord_mode=cfg.coord.mode, merge_every=cfg.coord.merge_every,
+        exact_clip=(cfg.opt.clip_mode == "exact")))
+
+
+def validate_plan(cfg: TrainConfig) -> None:
+    """Refuse configurations the analyzer marks unsafe: exact global-norm
+    clipping needs a synchronous all-reduce, which deferred modes forbid."""
+    if cfg.coord.deferred and cfg.opt.clip_mode == "exact":
+        plan = coordination_plan(cfg)
+        entry = plan.entry("grad_norm")
+        raise ValueError(
+            "coordination plan violation: exact clipping is "
+            f"{entry.coord_class.value} but mode={cfg.coord.mode} defers "
+            "cross-replica coordination; use clip_mode='escrow' (paper §8)")
+
+
+def run(model_cfg: ModelConfig, mesh, rules: Rules, cfg: TrainConfig,
+        *, restore_from: Optional[str] = None,
+        on_step: Optional[Callable] = None) -> tuple[coord.TrainState, dict]:
+    """Train for cfg.steps; returns (final state, summary metrics)."""
+    from repro.configs import registry
+
+    validate_plan(cfg)
+    n_pods = mesh.shape.get(cfg.coord.pod_axis, 1)
+    n_data = mesh.shape.get("data", 1)
+
+    batch_specs = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+        for k, v in registry.make_train_batch(
+            jax.random.PRNGKey(0), model_cfg, cfg.global_batch,
+            cfg.seq_len).items()
+    }
+    setup = coord.build(
+        model_cfg, rules, mesh, cfg.coord, cfg.opt,
+        lambda c, r: registry.make_loss_fn(c, r, use_flash=cfg.use_flash,
+                                           remat=cfg.remat),
+        batch_specs)
+
+    pipe = Pipeline(DataConfig(model_cfg.vocab, cfg.seq_len, cfg.global_batch,
+                               cfg.seed, n_shards=n_pods * n_data), model_cfg)
+
+    state = setup.init_fn(jax.random.PRNGKey(cfg.seed))
+    start_step = 0
+    if restore_from:
+        man = ckpt.latest_manifest(restore_from)
+        if man is not None and ckpt.is_complete(man, setup.abstract_state):
+            state = ckpt.restore(restore_from, man, setup.abstract_state,
+                                 setup.state_shardings)
+            start_step = man.step
+            pipe.restore({"cursors": [man.step * pipe.per_shard]
+                          * pipe.cfg.n_shards, "n_shards": pipe.cfg.n_shards})
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, cfg.steps):
+        batch = jax.device_put(pipe.next_batch(), setup.batch_shardings)
+        state = setup.step_fn(state, batch)
+        if setup.merge_fn is not None and \
+                (step + 1) % cfg.coord.merge_every == 0:
+            state = setup.merge_fn(state)   # deferred cross-pod anti-entropy
+        if (step + 1) % cfg.log_every == 0:
+            m = setup.read_metrics(state)   # G-counter log-boundary read
+            history.append(m)
+            if on_step:
+                on_step(m)
+        if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+            man = ckpt.save(cfg.ckpt_dir, state, step + 1)
+            if ckpt.is_complete(man, setup.abstract_state):
+                ckpt.assign_sequential(cfg.ckpt_dir, man)
+
+    # final merge so replicas converge before the run ends (Definition 3)
+    if setup.merge_fn is not None:
+        state = setup.merge_fn(state)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    wall = time.perf_counter() - t0
+
+    summary = setup.read_metrics(state)
+    summary["wall_seconds"] = wall
+    summary["history"] = history
+    return state, summary

@@ -1,0 +1,7 @@
+# TPC-C substrate: the paper's §6.2 proof-of-concept as a sharded JAX system.
+from .tpcc import (TPCCScale, TPCCState, NewOrderBatch, PaymentBatch,
+                   StockDelta, init_state, generate_neworder, generate_payment,
+                   apply_neworder, apply_payment, apply_delivery,
+                   check_consistency, tpcc_invariants)
+from .engine import Engine, RunStats, run_closed_loop, single_host_engine
+from .twopc import TwoPCEngine, run_closed_loop_2pc

@@ -1,0 +1,121 @@
+"""Columnar, versioned, masked store — the dense-JAX database substrate.
+
+The paper models database state as a bag of versioned mutations; JAX demands
+static shapes. A :class:`Table` is a fixed-capacity columnar structure:
+
+* ``columns``  — dict of name -> [capacity, ...] arrays
+* ``valid``    — [capacity] bool (live rows)
+* ``version``  — [capacity] int64, replica-namespaced stamps
+
+Insert-only tables merge by or-join on ``valid``; updatable tables merge by
+higher-version-wins per row (LWW at row granularity with unique stamps).
+Counter-like columns should instead live in delta form and merge by sum (see
+repro.txn.engine's remote-delta outboxes) — the analyzer decides which.
+
+Tables are pytrees and can be sharded with pjit/shard_map directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# int64 when x64 is enabled (production); int32 otherwise (CPU tests) —
+# version stamps only need to outlast the run horizon.
+VERSION_DTYPE = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    columns: dict[str, Array]
+    valid: Array
+    version: Array
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.valid, self.version)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-2]))
+        return cls(cols, children[-2], children[-1])
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def make(capacity: int, schema: Mapping[str, Any]) -> "Table":
+        """schema: name -> dtype or (shape_suffix, dtype)."""
+        cols = {}
+        for name, spec in schema.items():
+            if isinstance(spec, tuple):
+                suffix, dtype = spec
+            else:
+                suffix, dtype = (), spec
+            cols[name] = jnp.zeros((capacity, *suffix), dtype)
+        return Table(cols, jnp.zeros((capacity,), jnp.bool_),
+                     jnp.full((capacity,), -1, VERSION_DTYPE))
+
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[0]
+
+    def count(self) -> Array:
+        return self.valid.sum()
+
+    # -- row operations (vectorized; idx may be an array) --------------------
+    def insert(self, idx: Array, rows: Mapping[str, Array],
+               version: Array) -> "Table":
+        """Insert rows at ``idx`` (first-writer-wins on already-valid rows)."""
+        fresh = ~self.valid[idx]
+        cols = dict(self.columns)
+        for name, vals in rows.items():
+            old = cols[name][idx]
+            sel = fresh.reshape(fresh.shape + (1,) * (old.ndim - fresh.ndim))
+            cols[name] = cols[name].at[idx].set(jnp.where(sel, vals, old))
+        return Table(cols,
+                     self.valid.at[idx].set(True),
+                     self.version.at[idx].max(jnp.asarray(version, VERSION_DTYPE)))
+
+    def update(self, idx: Array, rows: Mapping[str, Array],
+               version: Array) -> "Table":
+        """Overwrite columns at ``idx`` if the new version is higher."""
+        version = jnp.asarray(version, VERSION_DTYPE)
+        newer = version > self.version[idx]
+        cols = dict(self.columns)
+        for name, vals in rows.items():
+            old = cols[name][idx]
+            sel = newer.reshape(newer.shape + (1,) * (old.ndim - newer.ndim))
+            cols[name] = cols[name].at[idx].set(jnp.where(sel, vals, old))
+        return Table(cols, self.valid.at[idx].set(True),
+                     self.version.at[idx].max(version))
+
+    def delete(self, idx: Array) -> "Table":
+        return dataclasses.replace(self, valid=self.valid.at[idx].set(False))
+
+    # -- merge (⊔) ------------------------------------------------------------
+    @staticmethod
+    def join(a: "Table", b: "Table") -> "Table":
+        """Row-wise higher-version-wins; valid = or-join.
+
+        With replica-namespaced versions this is commutative/associative/
+        idempotent (property-tested in tests/test_store.py).
+        """
+        b_newer = b.version > a.version
+        cols = {}
+        for name in a.columns:
+            sel = b_newer.reshape(b_newer.shape + (1,) * (a.columns[name].ndim - 1))
+            cols[name] = jnp.where(sel, b.columns[name], a.columns[name])
+        return Table(cols, a.valid | b.valid, jnp.maximum(a.version, b.version))
+
+
+def namespaced_version(counter: Array, replica: Array | int,
+                       num_replicas: int) -> Array:
+    """Unique, replica-namespaced version stamps (§5.1 'choose some value')."""
+    return jnp.asarray(counter, VERSION_DTYPE) * num_replicas + replica

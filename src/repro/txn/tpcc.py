@@ -1,0 +1,493 @@
+"""TPC-C in JAX — schema, transaction generators, vectorized effects, and the
+twelve consistency criteria (paper §6.2).
+
+Everything is dense and fixed-shape so the whole workload jits and shards:
+state arrays carry a leading warehouse dimension ``W`` and are partitioned
+over the device mesh by warehouse (the standard TPC-C partitioning the paper
+assumes: "under standard partitioning strategies, this synchronous
+coordination can be limited to ... each district's order sequence (on a
+single server)").
+
+Scaled-down defaults keep CPU tests fast; the dry-run lowers the full-scale
+configuration (100k items) without allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.invariants import Invariant, InvariantKind
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCCScale:
+    n_warehouses: int = 4
+    districts: int = 10          # districts per warehouse (spec: 10)
+    customers: int = 64          # customers per district (spec: 3000)
+    n_items: int = 256           # item catalog (spec: 100_000)
+    order_capacity: int = 128    # order slots per district (ring)
+    max_lines: int = 15          # order lines per order (spec: 5..15)
+
+    @staticmethod
+    def spec_scale(n_warehouses: int = 256) -> "TPCCScale":
+        """Full TPC-C cardinalities (used by the dry-run only)."""
+        return TPCCScale(n_warehouses=n_warehouses, districts=10,
+                         customers=3000, n_items=100_000,
+                         order_capacity=8192, max_lines=15)
+
+
+class TPCCState(NamedTuple):
+    """All tables, warehouse-major. Shardable on dim 0 everywhere."""
+
+    # WAREHOUSE
+    w_ytd: Array        # [W]
+    w_tax: Array        # [W]
+    # DISTRICT
+    d_next_o_id: Array  # [W, D] int32 — THE sequential counter (§6.2)
+    d_ytd: Array        # [W, D]
+    d_tax: Array        # [W, D]
+    h_amount_sum: Array  # [W, D] materialized history sum (criteria 8, 9)
+    # CUSTOMER
+    c_balance: Array       # [W, D, C]
+    c_ytd_payment: Array   # [W, D, C]
+    c_payment_cnt: Array   # [W, D, C] int32
+    c_delivery_cnt: Array  # [W, D, C] int32
+    c_discount: Array      # [W, D, C]
+    c_delivered_sum: Array  # [W, D, C] materialized sum of delivered OL amounts
+    # STOCK
+    s_quantity: Array    # [W, I] int32
+    s_ytd: Array         # [W, I]
+    s_order_cnt: Array   # [W, I] int32
+    s_remote_cnt: Array  # [W, I] int32
+    # ITEM (read-only; replicated per shard for locality)
+    i_price: Array       # [W, I]
+    # ORDER / NEW-ORDER / ORDER-LINE (ring-buffered per district)
+    o_valid: Array    # [W, D, OC] bool
+    o_c_id: Array     # [W, D, OC] int32
+    o_ol_cnt: Array   # [W, D, OC] int32
+    o_carrier: Array  # [W, D, OC] int32 (-1 = null: undelivered)
+    o_entry_d: Array  # [W, D, OC] int32 (logical timestamp)
+    no_valid: Array   # [W, D, OC] bool — NEW-ORDER table presence
+    ol_valid: Array      # [W, D, OC, L] bool
+    ol_i_id: Array       # [W, D, OC, L] int32
+    ol_supply_w: Array   # [W, D, OC, L] int32
+    ol_qty: Array        # [W, D, OC, L] int32
+    ol_amount: Array     # [W, D, OC, L]
+    ol_delivered: Array  # [W, D, OC, L] bool
+
+
+def init_state(scale: TPCCScale, seed: int = 0, dtype=jnp.float32) -> TPCCState:
+    rng = np.random.default_rng(seed)
+    W, D, C = scale.n_warehouses, scale.districts, scale.customers
+    I, OC, L = scale.n_items, scale.order_capacity, scale.max_lines
+    price = rng.uniform(1.0, 100.0, size=(I,)).astype(np.float32)
+    return TPCCState(
+        w_ytd=jnp.zeros((W,), dtype),
+        w_tax=jnp.asarray(rng.uniform(0.0, 0.2, (W,)).astype(np.float32)),
+        d_next_o_id=jnp.zeros((W, D), jnp.int32),
+        d_ytd=jnp.zeros((W, D), dtype),
+        d_tax=jnp.asarray(rng.uniform(0.0, 0.2, (W, D)).astype(np.float32)),
+        h_amount_sum=jnp.zeros((W, D), dtype),
+        c_balance=jnp.zeros((W, D, C), dtype),
+        c_ytd_payment=jnp.zeros((W, D, C), dtype),
+        c_payment_cnt=jnp.zeros((W, D, C), jnp.int32),
+        c_delivery_cnt=jnp.zeros((W, D, C), jnp.int32),
+        c_discount=jnp.asarray(rng.uniform(0.0, 0.5, (W, D, C)).astype(np.float32)),
+        c_delivered_sum=jnp.zeros((W, D, C), dtype),
+        s_quantity=jnp.asarray(rng.integers(10, 101, (W, I)).astype(np.int32)),
+        s_ytd=jnp.zeros((W, I), dtype),
+        s_order_cnt=jnp.zeros((W, I), jnp.int32),
+        s_remote_cnt=jnp.zeros((W, I), jnp.int32),
+        i_price=jnp.asarray(np.broadcast_to(price, (W, I)).copy()),
+        o_valid=jnp.zeros((W, D, OC), jnp.bool_),
+        o_c_id=jnp.zeros((W, D, OC), jnp.int32),
+        o_ol_cnt=jnp.zeros((W, D, OC), jnp.int32),
+        o_carrier=jnp.full((W, D, OC), -1, jnp.int32),
+        o_entry_d=jnp.zeros((W, D, OC), jnp.int32),
+        no_valid=jnp.zeros((W, D, OC), jnp.bool_),
+        ol_valid=jnp.zeros((W, D, OC, L), jnp.bool_),
+        ol_i_id=jnp.zeros((W, D, OC, L), jnp.int32),
+        ol_supply_w=jnp.zeros((W, D, OC, L), jnp.int32),
+        ol_qty=jnp.zeros((W, D, OC, L), jnp.int32),
+        ol_amount=jnp.zeros((W, D, OC, L), dtype),
+        ol_delivered=jnp.zeros((W, D, OC, L), jnp.bool_),
+    )
+
+
+def state_shape_dtypes(scale: TPCCScale) -> TPCCState:
+    """ShapeDtypeStruct stand-in for the dry-run (no allocation)."""
+    concrete = jax.eval_shape(lambda: init_state(TPCCScale(
+        n_warehouses=scale.n_warehouses, districts=scale.districts,
+        customers=scale.customers, n_items=scale.n_items,
+        order_capacity=scale.order_capacity, max_lines=scale.max_lines)))
+    return concrete
+
+
+# ---------------------------------------------------------------------------
+# Transaction inputs
+# ---------------------------------------------------------------------------
+
+
+class NewOrderBatch(NamedTuple):
+    w: Array          # [B] home warehouse
+    d: Array          # [B] district
+    c: Array          # [B] customer
+    n_lines: Array    # [B] 5..15
+    i_id: Array       # [B, L] item ids
+    supply_w: Array   # [B, L] supplying warehouse (1% remote in spec)
+    qty: Array        # [B, L] 1..10
+    ts: Array         # [B] logical entry timestamp
+
+
+class PaymentBatch(NamedTuple):
+    w: Array       # [B]
+    d: Array       # [B]
+    c: Array       # [B]
+    amount: Array  # [B]
+
+
+def generate_neworder(rng: np.random.Generator, scale: TPCCScale, batch: int,
+                      remote_frac: float = 0.01,
+                      w_lo: int = 0, w_hi: int | None = None,
+                      ts0: int = 0) -> NewOrderBatch:
+    """Random New-Order inputs for home warehouses in [w_lo, w_hi)."""
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    L = scale.max_lines
+    w = rng.integers(w_lo, w_hi, batch).astype(np.int32)
+    n_lines = rng.integers(5, L + 1, batch).astype(np.int32)
+    i_id = rng.integers(0, scale.n_items, (batch, L)).astype(np.int32)
+    remote = rng.random((batch, L)) < remote_frac
+    other = rng.integers(0, scale.n_warehouses, (batch, L)).astype(np.int32)
+    supply = np.where(remote, other, w[:, None]).astype(np.int32)
+    return NewOrderBatch(
+        w=jnp.asarray(w),
+        d=jnp.asarray(rng.integers(0, scale.districts, batch).astype(np.int32)),
+        c=jnp.asarray(rng.integers(0, scale.customers, batch).astype(np.int32)),
+        n_lines=jnp.asarray(n_lines),
+        i_id=jnp.asarray(i_id),
+        supply_w=jnp.asarray(supply),
+        qty=jnp.asarray(rng.integers(1, 11, (batch, L)).astype(np.int32)),
+        ts=jnp.asarray((ts0 + np.arange(batch)).astype(np.int32)),
+    )
+
+
+def generate_payment(rng: np.random.Generator, scale: TPCCScale, batch: int,
+                     w_lo: int = 0, w_hi: int | None = None) -> PaymentBatch:
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    return PaymentBatch(
+        w=jnp.asarray(rng.integers(w_lo, w_hi, batch).astype(np.int32)),
+        d=jnp.asarray(rng.integers(0, scale.districts, batch).astype(np.int32)),
+        c=jnp.asarray(rng.integers(0, scale.customers, batch).astype(np.int32)),
+        amount=jnp.asarray(rng.uniform(1.0, 5000.0, batch).astype(np.float32)),
+    )
+
+
+def neworder_input_specs(scale: TPCCScale, batch: int) -> NewOrderBatch:
+    L = scale.max_lines
+    f = jax.ShapeDtypeStruct
+    return NewOrderBatch(
+        w=f((batch,), jnp.int32), d=f((batch,), jnp.int32),
+        c=f((batch,), jnp.int32), n_lines=f((batch,), jnp.int32),
+        i_id=f((batch, L), jnp.int32), supply_w=f((batch, L), jnp.int32),
+        qty=f((batch, L), jnp.int32), ts=f((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Remote stock deltas (the RAMP-style asynchronous write set)
+# ---------------------------------------------------------------------------
+
+
+class StockDelta(NamedTuple):
+    """COO outbox of stock updates destined for non-local warehouses.
+
+    Fixed capacity R = B * L; ``valid`` marks live entries. Merging outboxes
+    is delta-CRDT style: each entry is consumed exactly once by its owner
+    during anti-entropy (engine.anti_entropy), after which the outbox clears.
+    """
+
+    dst_w: Array  # [R] int32 destination warehouse
+    i_id: Array   # [R] int32
+    qty: Array    # [R] int32 ordered quantity
+    valid: Array  # [R] bool
+
+
+def _empty_delta(capacity: int) -> StockDelta:
+    return StockDelta(jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.bool_))
+
+
+def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
+                        qty: Array, mask: Array, remote: Array) -> TPCCState:
+    """Owner-side stock effect (TPC-C §2.4.2.2): decrement with restock.
+
+    S_QUANTITY' = q - qty if q - qty >= 10 else q - qty + 91 ; S_YTD += qty;
+    S_ORDER_CNT += 1 ; S_REMOTE_CNT += remote. All via scatter-add/compare —
+    commutative counters except S_QUANTITY, whose restock rule is applied by
+    the owning shard at merge time (order-dependent but unconstrained by the
+    twelve consistency criteria; see DESIGN.md §9).
+    """
+    w_idx = jnp.where(mask, w_idx, 0)
+    i_idx = jnp.where(mask, i_idx, 0)
+    qty_m = jnp.where(mask, qty, 0)
+    one_m = jnp.where(mask, 1, 0).astype(jnp.int32)
+    rem_m = jnp.where(mask & remote, 1, 0).astype(jnp.int32)
+
+    s_ytd = state.s_ytd.at[w_idx, i_idx].add(qty_m.astype(state.s_ytd.dtype))
+    s_ocnt = state.s_order_cnt.at[w_idx, i_idx].add(one_m)
+    s_rcnt = state.s_remote_cnt.at[w_idx, i_idx].add(rem_m)
+    # decrement-then-restock: apply total decrement, then add 91 while < 10.
+    s_q = state.s_quantity.at[w_idx, i_idx].add(-qty_m)
+    deficit = jnp.maximum(0, jnp.ceil((10 - s_q) / 91.0)).astype(jnp.int32)
+    s_q = jnp.where(s_q < 10, s_q + deficit * 91, s_q)
+    return state._replace(s_quantity=s_q, s_ytd=s_ytd,
+                          s_order_cnt=s_ocnt, s_remote_cnt=s_rcnt)
+
+
+# ---------------------------------------------------------------------------
+# New-Order (the paper's measured transaction)
+# ---------------------------------------------------------------------------
+
+
+def apply_neworder(state: TPCCState, batch: NewOrderBatch,
+                   scale: TPCCScale,
+                   w_lo: int = 0, w_hi: int | None = None
+                   ) -> tuple[TPCCState, StockDelta, Array]:
+    """Vectorized coordination-avoiding New-Order.
+
+    Effects (paper §6.2):
+      * sequential o_id per district — a *batched* atomic increment-and-get:
+        each transaction's o_id = d_next_o_id + its rank among same-district
+        transactions in the batch (prefix counting), then the counter advances
+        by the per-district count. This is the only synchronization and it is
+        local to the district's owning shard.
+      * ORDER / NEW-ORDER / ORDER-LINE inserts — foreign-key inserts,
+        I-confluent (Table 2), installed locally.
+      * STOCK updates — local supply lines applied in place; remote lines
+        (supply_w outside [w_lo, w_hi)) are emitted as a StockDelta outbox for
+        asynchronous anti-entropy (RAMP-style; no synchronous coordination).
+
+    Returns (new_state, remote outbox, per-txn total amounts).
+    """
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    B, L = batch.i_id.shape
+    D, OC = scale.districts, scale.order_capacity
+    wl = batch.w - w_lo  # shard-local home-warehouse index
+
+    # ---- sequential ID assignment (batched increment-and-get) -------------
+    key = batch.w * D + batch.d                                    # [B]
+    same = (key[None, :] == key[:, None])                          # [B, B]
+    lower = jnp.tril(jnp.ones((B, B), jnp.bool_), k=-1)
+    rank = (same & lower).sum(axis=1).astype(jnp.int32)            # [B]
+    o_id = state.d_next_o_id[wl, batch.d] + rank              # [B]
+    per_txn_one = jnp.ones((B,), jnp.int32)
+    d_next = state.d_next_o_id.at[wl, batch.d].add(per_txn_one)
+
+    slot = o_id % OC                                               # [B]
+
+    # ---- ORDER + NEW-ORDER inserts ----------------------------------------
+    line_idx = jnp.arange(L)[None, :]
+    line_valid = line_idx < batch.n_lines[:, None]                 # [B, L]
+
+    o_valid = state.o_valid.at[wl, batch.d, slot].set(True)
+    o_c_id = state.o_c_id.at[wl, batch.d, slot].set(batch.c)
+    o_ol_cnt = state.o_ol_cnt.at[wl, batch.d, slot].set(batch.n_lines)
+    o_carrier = state.o_carrier.at[wl, batch.d, slot].set(-1)
+    o_entry_d = state.o_entry_d.at[wl, batch.d, slot].set(batch.ts)
+    no_valid = state.no_valid.at[wl, batch.d, slot].set(True)
+
+    # ---- ORDER-LINE inserts ------------------------------------------------
+    price = state.i_price[wl[:, None], batch.i_id]            # [B, L]
+    amount = price * batch.qty.astype(price.dtype)
+    amount = jnp.where(line_valid, amount, 0.0)
+
+    wB = jnp.repeat(wl[:, None], L, 1)
+    dB = jnp.repeat(batch.d[:, None], L, 1)
+    sB = jnp.repeat(slot[:, None], L, 1)
+    lB = jnp.broadcast_to(line_idx, (B, L))
+    ol_valid = state.ol_valid.at[wB, dB, sB, lB].set(line_valid)
+    ol_i_id = state.ol_i_id.at[wB, dB, sB, lB].set(batch.i_id)
+    ol_supply = state.ol_supply_w.at[wB, dB, sB, lB].set(batch.supply_w)
+    ol_qty = state.ol_qty.at[wB, dB, sB, lB].set(
+        jnp.where(line_valid, batch.qty, 0))
+    ol_amount = state.ol_amount.at[wB, dB, sB, lB].set(amount)
+
+    state = state._replace(
+        d_next_o_id=d_next, o_valid=o_valid, o_c_id=o_c_id,
+        o_ol_cnt=o_ol_cnt, o_carrier=o_carrier, o_entry_d=o_entry_d,
+        no_valid=no_valid, ol_valid=ol_valid, ol_i_id=ol_i_id,
+        ol_supply_w=ol_supply, ol_qty=ol_qty, ol_amount=ol_amount)
+
+    # ---- STOCK: local now, remote via outbox -------------------------------
+    flat_w = batch.supply_w.reshape(-1)
+    flat_i = batch.i_id.reshape(-1)
+    flat_q = batch.qty.reshape(-1)
+    flat_valid = line_valid.reshape(-1)
+    is_local = (flat_w >= w_lo) & (flat_w < w_hi)
+    is_remote_line = (batch.supply_w != batch.w[:, None]).reshape(-1)
+
+    state = apply_stock_updates(state, flat_w - w_lo, flat_i, flat_q,
+                                flat_valid & is_local, is_remote_line)
+
+    # outbox: compact remote entries to the front (stable) so anti-entropy
+    # scans a dense prefix.
+    rmask = flat_valid & ~is_local
+    order = jnp.argsort(~rmask)  # remotes first, stable
+    delta = StockDelta(dst_w=jnp.where(rmask, flat_w, 0)[order],
+                       i_id=jnp.where(rmask, flat_i, 0)[order],
+                       qty=jnp.where(rmask, flat_q, 0)[order],
+                       valid=rmask[order])
+
+    # ---- total amount (returned to the client) -----------------------------
+    disc = state.c_discount[wl, batch.d, batch.c]
+    tax = state.w_tax[wl] + state.d_tax[wl, batch.d]
+    total = amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
+    return state, delta, total
+
+
+# ---------------------------------------------------------------------------
+# Payment & Delivery ("largely uninteresting" per §6.2 — but implemented)
+# ---------------------------------------------------------------------------
+
+
+def apply_payment(state: TPCCState, batch: PaymentBatch,
+                  w_lo: int = 0) -> TPCCState:
+    """Payment: commutative counter increments (I-confluent, Table 2)."""
+    w = batch.w - w_lo
+    amt = batch.amount
+    return state._replace(
+        w_ytd=state.w_ytd.at[w].add(amt),
+        d_ytd=state.d_ytd.at[w, batch.d].add(amt),
+        h_amount_sum=state.h_amount_sum.at[w, batch.d].add(amt),
+        c_balance=state.c_balance.at[w, batch.d, batch.c].add(-amt),
+        c_ytd_payment=state.c_ytd_payment.at[w, batch.d, batch.c].add(amt),
+        c_payment_cnt=state.c_payment_cnt.at[w, batch.d, batch.c].add(1),
+    )
+
+
+def apply_delivery(state: TPCCState, carrier_id: Array, ts: Array) -> TPCCState:
+    """Deliver the oldest undelivered order in every district (single-
+    partition, as the spec permits and the paper notes)."""
+    W, D, OC = state.no_valid.shape
+    # oldest = valid NEW-ORDER slot with the smallest o_entry_d
+    key = jnp.where(state.no_valid, state.o_entry_d, jnp.iinfo(jnp.int32).max)
+    slot = jnp.argmin(key, axis=2)                       # [W, D]
+    has = state.no_valid.any(axis=2)                     # [W, D]
+
+    wI = jnp.arange(W)[:, None].repeat(D, 1)
+    dI = jnp.arange(D)[None, :].repeat(W, 0)
+
+    cust = state.o_c_id[wI, dI, slot]                    # [W, D]
+    lines_amt = jnp.where(state.ol_valid[wI, dI, slot],
+                          state.ol_amount[wI, dI, slot], 0.0)
+    amt = lines_amt.sum(-1) * has                        # [W, D]
+
+    no_valid = state.no_valid.at[wI, dI, slot].set(
+        jnp.where(has, False, state.no_valid[wI, dI, slot]))
+    o_carrier = state.o_carrier.at[wI, dI, slot].set(
+        jnp.where(has, carrier_id, state.o_carrier[wI, dI, slot]))
+    delivered = state.ol_delivered.at[wI, dI, slot].set(
+        jnp.where(has[..., None], state.ol_valid[wI, dI, slot],
+                  state.ol_delivered[wI, dI, slot]))
+
+    c_balance = state.c_balance.at[wI, dI, cust].add(amt)
+    c_del_sum = state.c_delivered_sum.at[wI, dI, cust].add(amt)
+    c_del_cnt = state.c_delivery_cnt.at[wI, dI, cust].add(has.astype(jnp.int32))
+    return state._replace(no_valid=no_valid, o_carrier=o_carrier,
+                          ol_delivered=delivered, c_balance=c_balance,
+                          c_delivered_sum=c_del_sum, c_delivery_cnt=c_del_cnt)
+
+
+# ---------------------------------------------------------------------------
+# The twelve consistency criteria (TPC-C §3.3.2.1-12), executable
+# ---------------------------------------------------------------------------
+
+
+def check_consistency(state: TPCCState, atol: float = 1e-2) -> dict[int, bool]:
+    """Evaluate all twelve criteria on a (converged) state."""
+    s = jax.device_get(state)
+    out = {}
+    # 1: W_YTD = sum(D_YTD)
+    out[1] = bool(np.allclose(s.w_ytd, s.d_ytd.sum(-1), atol=atol))
+    # 2: D_NEXT_O_ID - 1 = max(O_ID) = max(NO_O_ID)  [dense ids from 0 here:
+    #    d_next_o_id == count(valid orders); max slot entry consistent]
+    order_count = s.o_valid.sum(-1)
+    out[2] = bool(np.array_equal(s.d_next_o_id, order_count))
+    # 3: NEW-ORDER ids are a contiguous range (no gaps)
+    #    ring-encoded: undelivered orders are the most recent ones
+    no_count = s.no_valid.sum(-1)
+    delivered = (s.o_valid & ~s.no_valid).sum(-1)
+    out[3] = bool(np.array_equal(no_count + delivered, order_count))
+    # 4: sum(O_OL_CNT) = count(ORDER-LINE)
+    out[4] = bool(np.array_equal(
+        np.where(s.o_valid, s.o_ol_cnt, 0).sum(-1), s.ol_valid.sum((-1, -2))))
+    # 5: carrier is null iff a NEW-ORDER row exists
+    out[5] = bool(np.all((s.o_carrier < 0) == s.no_valid | ~s.o_valid))
+    # 6: per-order O_OL_CNT equals its line count
+    out[6] = bool(np.all(np.where(s.o_valid, s.o_ol_cnt, 0)
+                         == s.ol_valid.sum(-1)))
+    # 7: OL_DELIVERY_D set iff the order was delivered
+    deliv_order = s.o_valid & (s.o_carrier >= 0)
+    out[7] = bool(np.all(s.ol_delivered ==
+                         (s.ol_valid & deliv_order[..., None])))
+    # 8: W_YTD = sum(H_AMOUNT) per warehouse
+    out[8] = bool(np.allclose(s.w_ytd, s.h_amount_sum.sum(-1), atol=atol))
+    # 9: D_YTD = sum(H_AMOUNT) per district
+    out[9] = bool(np.allclose(s.d_ytd, s.h_amount_sum, atol=atol))
+    # 10: C_BALANCE = sum(delivered OL_AMOUNT) - sum(H_AMOUNT)
+    out[10] = bool(np.allclose(s.c_balance,
+                               s.c_delivered_sum - s.c_ytd_payment, atol=atol))
+    # 11: orders minus new-orders = delivered orders
+    out[11] = bool(np.array_equal(order_count - no_count, delivered))
+    # 12: C_BALANCE + C_YTD_PAYMENT = delivered order-line sum
+    out[12] = bool(np.allclose(s.c_balance + s.c_ytd_payment,
+                               s.c_delivered_sum, atol=atol))
+    return out
+
+
+def tpcc_invariants() -> list[tuple[int, Invariant, bool]]:
+    """The twelve criteria as analyzer objects with the paper's grouping:
+
+      * 3.3.2.[4-7, 11]  — foreign-key style          -> I-confluent
+      * 3.3.2.[2-3]      — sequential ID assignment   -> NOT I-confluent
+      * 3.3.2.[1, 8-10, 12] — materialized counters   -> I-confluent
+
+    Returns (criterion number, invariant, expected confluent?).
+    """
+    fk = InvariantKind.FOREIGN_KEY
+    mv = InvariantKind.MATERIALIZED_VIEW
+    seq = InvariantKind.AUTO_INCREMENT
+    rows = [
+        (1, Invariant("w_ytd_sums_d_ytd", mv, "warehouse.w_ytd",
+                      params={"source": "district.d_ytd"}), True),
+        (2, Invariant("d_next_o_id_sequential", seq, "district.d_next_o_id"), False),
+        (3, Invariant("no_o_id_contiguous", seq, "new_order.o_id"), False),
+        (4, Invariant("ol_count_matches_o_ol_cnt", fk, "order_line.o_id",
+                      params={"references": "order.o_id"}), True),
+        (5, Invariant("carrier_null_iff_new_order", fk, "order.carrier",
+                      params={"references": "new_order.o_id"}), True),
+        (6, Invariant("o_ol_cnt_per_order", fk, "order.o_ol_cnt",
+                      params={"references": "order_line.o_id"}), True),
+        (7, Invariant("ol_delivery_iff_carrier", fk, "order_line.delivery_d",
+                      params={"references": "order.carrier"}), True),
+        (8, Invariant("w_ytd_sums_history", mv, "warehouse.w_ytd",
+                      params={"source": "history.h_amount"}), True),
+        (9, Invariant("d_ytd_sums_history", mv, "district.d_ytd",
+                      params={"source": "history.h_amount"}), True),
+        (10, Invariant("c_balance_materialized", mv, "customer.c_balance",
+                       params={"source": "order_line.ol_amount"}), True),
+        (11, Invariant("order_minus_neworder_delivered", fk, "order.o_id",
+                       params={"references": "new_order.o_id"}), True),
+        (12, Invariant("c_balance_plus_ytd", mv, "customer.c_balance",
+                       params={"source": "order_line.ol_amount"}), True),
+    ]
+    return rows

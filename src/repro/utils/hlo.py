@@ -1,0 +1,214 @@
+"""HLO text analysis: collective inventory + byte accounting.
+
+Used for (a) the zero-collective proof of coordination-freedom (paper
+Definition 5, verified structurally on the compiled program) and (b) the
+collective term of the roofline model (EXPERIMENTS.md §Roofline) —
+``cost_analysis()`` does not report collective bytes, so we parse them from
+``lowered.as_text()`` / ``compiled.as_text()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Iterable
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line: "%name = <output-type> opcode(<operands...>)"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*(.+?)\s+([a-z0-9\-]+)\((.*)\)",
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(text))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-opcode instruction counts and byte totals."""
+
+    counts: Counter
+    output_bytes: Counter
+    operand_bytes: Counter
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+    def total_bytes(self) -> int:
+        """Conservative bytes-moved estimate per collective: the larger of
+        output and operand footprints (all-gather grows, reduce-scatter
+        shrinks, all-reduce keeps size; max covers each direction)."""
+        total = 0
+        for op in self.counts:
+            total += max(self.output_bytes[op], self.operand_bytes[op])
+        return total
+
+    def describe(self) -> str:
+        if not self.counts:
+            return "collectives: NONE (coordination-free)"
+        parts = [f"{op}×{n} ({max(self.output_bytes[op], self.operand_bytes[op])/1e6:.2f} MB)"
+                 for op, n in sorted(self.counts.items())]
+        return "collectives: " + ", ".join(parts)
+
+
+def hlo_text_of(obj) -> str:
+    """Best-effort optimized-HLO text from a Lowered or Compiled object.
+
+    Collectives inserted by SPMD partitioning only exist post-compile, so
+    callers should pass a *Compiled* whenever possible; a Lowered falls back
+    to the pre-partitioning HLO dialect (sufficient for shard_map programs,
+    where collectives are explicit).
+    """
+    if hasattr(obj, "as_text"):
+        try:
+            return obj.as_text()  # Compiled: optimized HLO
+        except TypeError:
+            pass
+    if hasattr(obj, "compile"):
+        return obj.compile().as_text()
+    raise TypeError(f"cannot extract HLO text from {type(obj)}")
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Scan HLO text for collective instructions and account their bytes.
+
+    Matching is by opcode token at the instruction position (not substring,
+    so 'all-reduce-start' counts as all-reduce and metadata strings don't
+    false-positive).
+    """
+    counts: Counter = Counter()
+    out_b: Counter = Counter()
+    opr_b: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        out_type, opcode, operands = m.groups()
+        base = None
+        for c in COLLECTIVE_OPS:
+            if opcode == c or opcode.startswith(c + "-"):  # -start/-done
+                base = c
+                break
+        if base is None:
+            continue
+        if opcode.endswith("-done"):
+            continue  # paired with -start; avoid double counting
+        counts[base] += 1
+        out_b[base] += _all_shape_bytes(out_type)
+        opr_b[base] += _all_shape_bytes(operands)
+    return CollectiveStats(counts, out_b, opr_b)
+
+
+def assert_no_collectives(hlo_text: str, context: str = "") -> None:
+    """The structural coordination-freedom check (Definition 5)."""
+    stats = collective_stats(hlo_text)
+    if stats.total_ops:
+        raise AssertionError(
+            f"coordination-free path contains collectives{' in ' + context if context else ''}: "
+            f"{stats.describe()}")
+
+
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{((?:\{[0-9, ]*\},?)+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _parse_replica_groups(line: str):
+    """Parse replica_groups from an HLO instruction line (both the explicit
+    brace format and the iota [G,S]<=[dims]T(perm) format). Returns a list of
+    device-id lists, or None if the line carries no groups."""
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(ids)
+        return groups
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(g, s).tolist()
+    return None
+
+
+def cross_pod_collectives(hlo_text: str, pod_size: int) -> list[dict]:
+    """Collectives whose replica group spans more than one pod.
+
+    The mesh lays pods out as the slowest-varying axis, so device d belongs
+    to pod d // pod_size. This is the Definition-5 check at mesh scale: the
+    deferred-mode hot path must return [] (its collectives stay intra-pod),
+    while the sync baseline and the anti-entropy merge cross pods.
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(2)
+        if not any(opcode == c or opcode.startswith(c + "-")
+                   for c in COLLECTIVE_OPS):
+            continue
+        if opcode.endswith("-done"):
+            continue
+        groups = _parse_replica_groups(line)
+        if not groups:
+            continue
+        for grp in groups:
+            pods = {d // pod_size for d in grp}
+            if len(pods) > 1:
+                out.append({"opcode": opcode, "group_size": len(grp),
+                            "pods": sorted(pods)})
+                break
+    return out
+
+
+def count_ops(hlo_text: str, opcodes: Iterable[str]) -> Counter:
+    """Count arbitrary opcodes (e.g. 'fusion', 'scatter') in HLO text."""
+    counts: Counter = Counter()
+    targets = tuple(opcodes)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(2)
+        for t in targets:
+            if opcode == t:
+                counts[t] += 1
+    return counts

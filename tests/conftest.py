@@ -1,0 +1,11 @@
+import os
+import sys
+
+# make `benchmarks` importable when running `PYTHONPATH=src pytest tests/`
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration tests")

@@ -1,0 +1,124 @@
+"""Static analyzer tests: Table 2 reproduction + transaction-level analysis."""
+
+import pytest
+
+from repro.core import analyzer as an
+from repro.core import invariants as iv
+from repro.core import txn as tx
+from repro.core.analyzer import Confluence, Strategy, classify, table2
+from repro.core.invariants import Invariant, InvariantKind
+from repro.core.systems import payroll_transactions
+from repro.core.txn import Op, OpKind
+
+
+def test_table2_matches_paper_exactly():
+    """The headline validation: analyzer == paper's Table 2, row for row."""
+    rows = table2()
+    mismatches = [r for r in rows if not r["match"]]
+    assert not mismatches, f"Table 2 mismatches: {mismatches}"
+    assert len(rows) == len(an.TABLE2_ROWS)
+
+
+@pytest.mark.parametrize("kind,op,expected", [
+    (InvariantKind.EQUALITY, OpKind.INSERT, True),
+    (InvariantKind.EQUALITY, OpKind.DELETE, True),
+    (InvariantKind.INEQUALITY, OpKind.UPDATE, True),
+    (InvariantKind.UNIQUENESS, OpKind.ASSIGN_SPECIFIC, False),
+    (InvariantKind.UNIQUENESS, OpKind.ASSIGN_SOME, True),
+    (InvariantKind.UNIQUENESS, OpKind.DELETE, True),
+    (InvariantKind.UNIQUENESS, OpKind.READ, True),
+    (InvariantKind.AUTO_INCREMENT, OpKind.INSERT, False),
+    (InvariantKind.FOREIGN_KEY, OpKind.INSERT, True),
+    (InvariantKind.FOREIGN_KEY, OpKind.DELETE, False),
+    (InvariantKind.FOREIGN_KEY, OpKind.CASCADING_DELETE, True),
+    (InvariantKind.SECONDARY_INDEX, OpKind.UPDATE, True),
+    (InvariantKind.MATERIALIZED_VIEW, OpKind.UPDATE, True),
+    (InvariantKind.GREATER_THAN, OpKind.INCREMENT, True),
+    (InvariantKind.GREATER_THAN, OpKind.DECREMENT, False),
+    (InvariantKind.LESS_THAN, OpKind.DECREMENT, True),
+    (InvariantKind.LESS_THAN, OpKind.INCREMENT, False),
+    (InvariantKind.CONTAINS, OpKind.INSERT, True),
+    (InvariantKind.LIST_POSITION, OpKind.LIST_MUTATE, False),
+])
+def test_pairwise_rules(kind, op, expected):
+    v = classify(Invariant("i", kind), Op(op))
+    assert v.coordination_free == expected, v
+
+
+def test_strategies_follow_paper_prose():
+    # uniqueness via some-value -> replica namespacing (§5.1)
+    v = classify(Invariant("u", InvariantKind.UNIQUENESS), Op(OpKind.ASSIGN_SOME))
+    assert v.strategy is Strategy.REPLICA_NAMESPACE
+    # threshold decrement -> escrow (§8)
+    v = classify(Invariant("g", InvariantKind.GREATER_THAN), Op(OpKind.DECREMENT))
+    assert v.strategy is Strategy.ESCROW
+    # auto-increment -> deferred commit-time assignment (§6.2 TPC-C)
+    v = classify(Invariant("a", InvariantKind.AUTO_INCREMENT), Op(OpKind.INSERT))
+    assert v.strategy is Strategy.DEFERRED_ASSIGNMENT
+    # specific-value uniqueness -> synchronous coordination
+    v = classify(Invariant("u", InvariantKind.UNIQUENESS), Op(OpKind.ASSIGN_SPECIFIC))
+    assert v.strategy is Strategy.SYNC_COORDINATION
+
+
+def test_reads_always_confluent():
+    for kind in InvariantKind:
+        v = classify(Invariant("i", kind), Op(OpKind.READ))
+        assert v.coordination_free, (kind, v)
+
+
+def test_custom_invariants_conservative():
+    v = classify(Invariant("c", InvariantKind.CUSTOM), Op(OpKind.UPDATE))
+    assert not v.coordination_free
+
+
+# -- transaction-level ------------------------------------------------------
+
+
+def test_payroll_application_analysis():
+    """Paper §2: ID assignment needs coordination, department moves don't."""
+    txns = payroll_transactions()
+    invs = iv.payroll_invariants()
+    reports = an.analyze_application(txns, invs)
+
+    assert reports["assign_employee_id"].coordination_free          # some-value
+    assert not reports["assign_employee_id_manual"].coordination_free
+    assert reports["hire_into_department"].coordination_free        # FK insert
+    assert reports["dissolve_department"].coordination_free         # cascading
+    assert not reports["give_raise"].coordination_free              # salary<cap, incr
+    assert reports["cut_salary"].coordination_free                  # decr toward floor ok
+
+
+def test_transaction_conjunction():
+    """One bad (op, invariant) pair poisons the whole transaction."""
+    invs = (iv.unique("pk", "t.id"), iv.greater_than("pos", "t.ctr", 0.0))
+    good = tx.txn("good", tx.assign_some("t.id"), tx.increment("t.ctr"))
+    bad = tx.txn("bad", tx.assign_some("t.id"), tx.decrement("t.ctr"))
+    assert an.analyze_transaction(good, invs).coordination_free
+    rep = an.analyze_transaction(bad, invs)
+    assert not rep.coordination_free
+    assert Strategy.ESCROW in rep.required_strategies
+    assert len(rep.blocking_pairs()) == 1
+
+
+def test_target_relevance_scoping():
+    """Ops on unrelated tables do not interact with an invariant."""
+    invs = (iv.unique("pk", "users.id"),)
+    t = tx.txn("touch_other", tx.assign_specific("orders.id"))
+    rep = an.analyze_transaction(t, invs)
+    assert rep.coordination_free  # orders.id doesn't touch users.id
+
+
+def test_fk_watches_referenced_table():
+    invs = (iv.foreign_key("fk", "employees.dept", references="departments.id"),)
+    t = tx.txn("drop_dept", tx.delete("departments"))
+    rep = an.analyze_transaction(t, invs)
+    assert not rep.coordination_free
+    t2 = tx.txn("drop_dept_cascade", tx.delete("departments", cascading=True))
+    assert an.analyze_transaction(t2, invs).coordination_free
+
+
+def test_summary_renders():
+    invs = (iv.unique("pk", "users.id"),)
+    t = tx.txn("ins", tx.assign_specific("users.id"))
+    s = an.analyze_transaction(t, invs).summary()
+    assert "requires coordination" in s

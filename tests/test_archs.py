@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced config, one forward + one gradient
+step on CPU, shape + finiteness assertions; decode smoke where applicable."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import kv_cache, rwkv6 as rwkv6_mod, hymba as hymba_mod
+from repro.models import vlm as vlm_mod, whisper as whisper_mod
+from repro.models.sharding import Rules
+
+RULES = Rules.disabled()
+B, S = 2, 16
+
+
+def _reduced(arch):
+    return registry.get_config(arch).reduced()
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = registry.get_config(arch)
+    expected = {
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, vocab=151_936, n_experts=128,
+                                  top_k=8),
+        "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16,
+                            n_kv_heads=16, vocab=50_304, n_experts=64, top_k=8),
+        "qwen1.5-32b": dict(n_layers=64, d_model=5120, n_heads=40,
+                            n_kv_heads=40, d_ff=27_392, vocab=152_064,
+                            qkv_bias=True),
+        "smollm-360m": dict(n_layers=32, d_model=960, n_heads=15,
+                            n_kv_heads=5, d_ff=2560, vocab=49_152),
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                               n_kv_heads=4, d_ff=5632, vocab=32_000),
+        "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32,
+                            n_kv_heads=8, d_ff=16_384, vocab=256_000),
+        "rwkv6-3b": dict(n_layers=32, d_model=2560, d_ff=8960, vocab=65_536),
+        "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, ssm_state=16),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=14_336, vocab=128_256),
+        "whisper-tiny": dict(n_layers=4, enc_layers=4, d_model=384, n_heads=6,
+                             n_kv_heads=6, d_ff=1536, vocab=51_865),
+    }[arch]
+    for field, val in expected.items():
+        assert getattr(cfg, field) == val, (arch, field, getattr(cfg, field))
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_forward_and_grad_step(arch):
+    cfg = _reduced(arch)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    batch = registry.make_train_batch(jax.random.PRNGKey(1), cfg, B, S)
+    loss_fn = registry.make_loss_fn(cfg, RULES, remat=False)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    assert jnp.isfinite(loss), (arch, float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert leaves, arch
+    assert all(jnp.isfinite(g).all() for g in leaves), arch
+
+    # one SGD step changes the loss (learning signal flows)
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2 = loss_fn(params2, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = _reduced(arch)
+    shape = dataclasses.replace(
+        registry.SHAPES["decode_32k"], seq_len=S, global_batch=B)
+    ok, why = registry.cell_supported(cfg, shape)
+    if not ok:
+        pytest.skip(why)
+
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    decode = registry.make_decode_fn(cfg, RULES)
+
+    # build a concrete cache matching the abstract specs
+    if cfg.family == "ssm":
+        cache = rwkv6_mod.stacked_state(cfg, B)
+    elif cfg.family == "hybrid":
+        cache = hymba_mod.make_cache(cfg, B)
+    elif cfg.family == "vlm":
+        cache = vlm_mod.make_cache(cfg, B, S)
+        img = jax.random.normal(jax.random.PRNGKey(3),
+                                (B, cfg.image_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+        ck, cv = vlm_mod.build_cross_kv(params, img, cfg)
+        cache = cache._replace(ck=ck.astype(cache.ck.dtype),
+                               cv=cv.astype(cache.cv.dtype))
+    elif cfg.family == "audio":
+        cache = whisper_mod.make_cache(cfg, B, S)
+        frames = jax.random.normal(jax.random.PRNGKey(3),
+                                   (B, cfg.n_frames, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        enc = whisper_mod.encode(params, frames, cfg, RULES, remat=False)
+        ck, cv = whisper_mod.build_cross_kv(params, enc, cfg)
+        cache = cache._replace(ck=ck.astype(cache.ck.dtype),
+                               cv=cv.astype(cache.cv.dtype))
+    else:
+        cache = kv_cache.make_cache(cfg, cfg.n_layers, B, S)
+
+    token = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        lg, cache = decode(params, cache, token)
+        assert lg.shape == (B, cfg.padded_vocab())
+        # logical vocab entries finite; padded tail masked out of argmax
+        assert jnp.isfinite(lg[:, :cfg.vocab]).all(), arch
+        token = jnp.argmax(lg, -1).astype(jnp.int32)
+        assert int(token.max()) < cfg.vocab
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_input_specs_are_abstract(arch):
+    cfg = registry.get_config(arch)
+    for shape in registry.SHAPES.values():
+        ok, _ = registry.cell_supported(cfg, shape)
+        if not ok:
+            continue
+        if shape.kind == "train":
+            specs = registry.train_input_specs(cfg, shape)
+            assert all(isinstance(v, jax.ShapeDtypeStruct) for v in specs.values())
+        elif shape.kind in ("decode", "long_decode"):
+            cache, token = registry.decode_input_specs(cfg, shape)
+            leaves = [l for l in jax.tree_util.tree_leaves(cache)]
+            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: implementations roughly land at their nameplate sizes."""
+    expect = {
+        "qwen3-moe-30b-a3b": (25e9, 36e9),
+        "olmoe-1b-7b": (5.5e9, 8.5e9),
+        "qwen1.5-32b": (28e9, 37e9),
+        "smollm-360m": (0.30e9, 0.45e9),
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "minitron-8b": (7e9, 10.5e9),
+        "rwkv6-3b": (2.2e9, 3.6e9),
+        "hymba-1.5b": (1.0e9, 1.9e9),
+        "llama-3.2-vision-11b": (7.5e9, 12e9),
+        "whisper-tiny": (0.025e9, 0.06e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = registry.exact_param_count(registry.get_config(arch))
+        assert lo <= n <= hi, (arch, n / 1e9)
+    # MoE active params ~3B / ~1B
+    a = registry.exact_active_param_count(registry.get_config("qwen3-moe-30b-a3b"))
+    assert 2e9 <= a <= 4.5e9, a / 1e9
+    a = registry.exact_active_param_count(registry.get_config("olmoe-1b-7b"))
+    assert 0.8e9 <= a <= 1.8e9, a / 1e9

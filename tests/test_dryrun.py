@@ -1,0 +1,71 @@
+"""Dry-run integration: the launcher machinery itself, exercised in a
+subprocess with 512 placeholder devices (kept out of this process so other
+tests see 1 CPU device). Marked slow."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+_ENV_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+_ENV_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run_dryrun(args, timeout=560):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own (512 devices)
+    env["PYTHONPATH"] = f"{_ENV_SRC}:{_ENV_ROOT}"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+        cwd=_ENV_ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_both_meshes():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "cells.json")
+        r = _run_dryrun(["--arch", "whisper-tiny", "--shape",
+                         "train_4k,decode_32k,long_500k", "--mesh", "both",
+                         "--out", out])
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        cells = json.load(open(out))
+        assert len(cells) == 6
+        assert all(c["ok"] for c in cells)
+        # long_500k must be recorded as a designed skip for full attention
+        skips = [c for c in cells if c.get("skipped")]
+        assert {c["shape"] for c in skips} == {"long_500k"}
+        ok_train = [c for c in cells if c["shape"] == "train_4k"][0]
+        assert ok_train["cost"]["flops"] > 0
+        assert ok_train["memory"]["argument_bytes"] > 0
+        # multi-pod cells carry the cross-pod classification
+        multi = [c for c in cells if c["mesh"] == "2x16x16"
+                 and not c.get("skipped")]
+        assert all("cross_pod" in c["collectives"] for c in multi)
+
+
+@pytest.mark.slow
+def test_dryrun_tpcc_zero_collective_hot_path():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "tpcc.json")
+        r = _run_dryrun(["--arch", "tpcc", "--mesh", "single", "--out", out])
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        cells = json.load(open(out))
+        assert cells[0]["ok"]
+        assert cells[0]["collectives"]["counts"] == {}  # Definition 5 at 256 shards
+
+
+@pytest.mark.slow
+def test_dryrun_config_overrides():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "o.json")
+        r = _run_dryrun(["--arch", "smollm-360m", "--shape", "decode_32k",
+                         "--mesh", "single", "--set", "kv_dtype=int8",
+                         "--out", out])
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        cells = json.load(open(out))
+        assert cells[0]["ok"] and cells[0]["overrides"] == "kv_dtype=int8"

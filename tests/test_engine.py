@@ -1,0 +1,112 @@
+"""Engine integration: coordination-free execution, anti-entropy convergence,
+the 2PC contrast, and the multi-device zero-collective proof (subprocess)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.txn import tpcc
+from repro.txn.engine import run_closed_loop, single_host_engine
+from repro.txn.tpcc import TPCCScale, check_consistency, init_state
+from repro.txn.twopc import TwoPCEngine, run_closed_loop_2pc
+
+SCALE = TPCCScale(n_warehouses=4, districts=4, customers=8, n_items=64,
+                  order_capacity=128, max_lines=15)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return single_host_engine(SCALE)
+
+
+def test_closed_loop_converges_consistent(engine):
+    state = engine.shard_state(init_state(SCALE))
+    state, stats = run_closed_loop(engine, state, batch_per_shard=16,
+                                   n_batches=8, remote_frac=0.2,
+                                   merge_every=3, payments=True,
+                                   deliveries=True, seed=0)
+    assert stats.committed == 16 * 7
+    c = check_consistency(state)
+    assert all(c.values()), c
+
+
+def test_hot_path_zero_collectives(engine):
+    """Definition 5, structurally, on this process's mesh."""
+    desc = engine.prove_coordination_free(batch_per_shard=8)
+    assert "NONE" in desc
+
+
+def test_deferred_merge_windows_do_not_break_consistency(engine):
+    """Convergence 'can safely stall at any point' (paper §3): longer
+    anti-entropy deferral must not affect final consistency."""
+    finals = []
+    for merge_every in (1, 4, 7):
+        state = engine.shard_state(init_state(SCALE))
+        state, _ = run_closed_loop(engine, state, batch_per_shard=8,
+                                   n_batches=8, remote_frac=0.5,
+                                   merge_every=merge_every, seed=1)
+        assert all(check_consistency(state).values())
+        finals.append(jax.device_get(state.s_ytd).sum())
+    # all stock updates reflected regardless of merge cadence
+    assert np.allclose(finals[0], finals[1]) and np.allclose(finals[1], finals[2])
+
+
+def test_2pc_baseline_same_effects(engine):
+    two = TwoPCEngine(SCALE, engine.mesh, engine.axis_names)
+    s1 = engine.shard_state(init_state(SCALE))
+    s1, _ = run_closed_loop(engine, s1, batch_per_shard=8, n_batches=5,
+                            remote_frac=0.3, merge_every=1, seed=2)
+    s2 = engine.shard_state(init_state(SCALE))
+    s2, _ = run_closed_loop_2pc(two, s2, batch_per_shard=8, n_batches=5,
+                                remote_frac=0.3, seed=2)
+    # same committed work => same materialized sums
+    assert np.allclose(jax.device_get(s1.s_ytd), jax.device_get(s2.s_ytd))
+    assert np.allclose(jax.device_get(s1.d_next_o_id),
+                       jax.device_get(s2.d_next_o_id))
+    assert all(check_consistency(s2).values())
+
+
+_SUBPROC = r"""
+import jax, numpy as np
+from repro.txn.engine import single_host_engine, run_closed_loop
+from repro.txn.twopc import TwoPCEngine
+from repro.txn.tpcc import TPCCScale, init_state, check_consistency
+assert len(jax.devices()) == 8, jax.devices()
+scale = TPCCScale(n_warehouses=8, districts=4, customers=8, n_items=64,
+                  order_capacity=64, max_lines=15)
+e = single_host_engine(scale)
+print("HOTPATH:", e.prove_coordination_free(8))
+ae = e.count_anti_entropy_collectives(8)
+assert ae.total_ops > 0, "anti-entropy should communicate"
+t = TwoPCEngine(scale, e.mesh, ("data",))
+tc = t.hot_path_collectives(8)
+assert tc.total_ops > 0, "2PC hot path must coordinate"
+print("2PC:", tc.describe())
+state = e.shard_state(init_state(scale))
+state, stats = run_closed_loop(e, state, batch_per_shard=4, n_batches=6,
+                               remote_frac=0.4, merge_every=2)
+assert all(check_consistency(state).values())
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_multi_device_proof_subprocess():
+    """8 simulated devices: hot path free, anti-entropy & 2PC coordinate.
+
+    Runs in a subprocess so the main test process keeps 1 CPU device.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "HOTPATH: collectives: NONE" in out.stdout
+    assert "OK" in out.stdout

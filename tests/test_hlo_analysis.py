@@ -1,0 +1,141 @@
+"""HLO analysis layer: collective parsing, replica groups, loop scaling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.roofline import (analytic_flops, analytic_hbm_bytes, build,
+                                 loop_scaled_collective_bytes,
+                                 trip_counts_for)
+from repro.configs import registry
+from repro.models.config import SHAPES
+from repro.utils.hlo import (_parse_replica_groups, collective_stats,
+                             cross_pod_collectives, shape_bytes)
+
+HLO_SAMPLE = """
+ENTRY %main (p0: f32[128]) -> f32[128] {
+  %ag = f32[16,128]{1,0} all-gather(f32[128]{0} %p0), channel_id=1, replica_groups={{0,1},{2,3}}, dimensions={0}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), channel_id=2, replica_groups=[2,2]<=[4], to_apply=%add
+  %rs = f32[8]{0} reduce-scatter(f32[128]{0} %y), channel_id=3, replica_groups={{0,1,2,3}}
+  ROOT %out = f32[128]{0} add(f32[128]{0} %a, f32[128]{0} %b)
+}
+"""
+
+
+def test_collective_stats_counts_and_bytes():
+    st = collective_stats(HLO_SAMPLE)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.total_ops == 3
+    # all-gather output 16*128*4 = 8192 bytes dominates its operand
+    assert st.output_bytes["all-gather"] == 16 * 128 * 4
+    # reduce-scatter: operand (128*4) > output (8*4)
+    assert st.operand_bytes["reduce-scatter"] == 128 * 4
+
+
+def test_shape_bytes_dtypes():
+    assert shape_bytes("bf16", "4,4") == 32
+    assert shape_bytes("f32", "10") == 40
+    assert shape_bytes("pred", "8") == 8
+    assert shape_bytes("s8", "100") == 100
+
+
+def test_replica_groups_parsing():
+    assert _parse_replica_groups(
+        "x replica_groups={{0,1},{2,3}} y") == [[0, 1], [2, 3]]
+    got = _parse_replica_groups("replica_groups=[2,2]<=[4]")
+    assert got == [[0, 1], [2, 3]]
+    got = _parse_replica_groups("replica_groups=[2,2]<=[2,2]T(1,0)")
+    assert got == [[0, 2], [1, 3]]
+    assert _parse_replica_groups("no groups here") is None
+
+
+def test_cross_pod_detection():
+    # pod size 2: {0,1} intra, {2,3} intra, [2,2]<=[4] -> {0,1},{2,3} intra
+    assert cross_pod_collectives(HLO_SAMPLE, pod_size=2) == [
+        {"opcode": "reduce-scatter", "group_size": 4, "pods": [0, 1]}]
+    # pod size 1: everything crosses
+    assert len(cross_pod_collectives(HLO_SAMPLE, pod_size=1)) == 3
+
+
+def test_loop_scaling_against_unrolled():
+    """Scan-of-L vs unrolled-L: loop-scaled bytes must match."""
+    mesh = jax.make_mesh((1,), ("model",))
+    L, D = 4, 64
+
+    def scanned(x, w):
+        def body(c, wi):
+            c = jax.lax.with_sharding_constraint(
+                c @ wi, jax.sharding.PartitionSpec("model"))
+            return c, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def unrolled(x, w):
+        for i in range(L):
+            x = jax.lax.with_sharding_constraint(
+                x @ w[i], jax.sharding.PartitionSpec("model"))
+        return x
+
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    with jax.set_mesh(mesh):
+        t1 = jax.jit(scanned).lower(x, w).compile().as_text()
+        t2 = jax.jit(unrolled).lower(x, w).compile().as_text()
+    b_scan = loop_scaled_collective_bytes(t1, [L])
+    b_unroll = loop_scaled_collective_bytes(t2, [L])
+    # 1-device mesh: likely no collectives at all; the invariant is equality
+    assert b_scan == b_unroll
+
+
+def test_analytic_flops_sanity():
+    cfg = registry.get_config("tinyllama-1.1b")
+    shape = SHAPES["train_4k"]
+    model, total = analytic_flops(cfg, shape, training=True, remat=True)
+    n = registry.exact_active_param_count(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    assert model == pytest.approx(6 * n * tokens, rel=1e-6)
+    assert total > model  # remat + attention overheads
+    # decode: 2*N*B plus attention over the cache
+    d_model, d_total = analytic_flops(cfg, SHAPES["decode_32k"],
+                                      training=False)
+    assert d_model == pytest.approx(2 * n * 128, rel=1e-6)
+    assert d_total > d_model
+
+
+def test_analytic_flops_moe_uses_active_params():
+    cfg = registry.get_config("qwen3-moe-30b-a3b")
+    m, _ = analytic_flops(cfg, SHAPES["train_4k"], training=True)
+    n_active = registry.exact_active_param_count(cfg)
+    n_total = registry.exact_param_count(cfg)
+    tokens = SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len
+    assert m == pytest.approx(6 * n_active * tokens, rel=1e-6)
+    assert n_active < n_total / 5
+
+
+def test_analytic_hbm_chunked_below_naive():
+    cfg = registry.get_config("smollm-360m")
+    naive = analytic_hbm_bytes(cfg, SHAPES["prefill_32k"], training=False,
+                               chips=256, attn_impl="naive")
+    chunked = analytic_hbm_bytes(cfg, SHAPES["prefill_32k"], training=False,
+                                 chips=256, attn_impl="chunked")
+    assert chunked < naive / 2
+
+
+def test_trip_counts():
+    assert trip_counts_for(registry.get_config("tinyllama-1.1b"),
+                           SHAPES["train_4k"]) == [22]
+    assert trip_counts_for(registry.get_config("rwkv6-3b"),
+                           SHAPES["train_4k"]) == [32, 64]
+    assert trip_counts_for(registry.get_config("llama-3.2-vision-11b"),
+                           SHAPES["decode_32k"]) == [8, 4]
+
+
+def test_roofline_build_terms_positive():
+    r = build("tinyllama-1.1b", SHAPES["train_4k"], "16x16", 256,
+              collective_bytes=1e9)
+    assert r.t_compute > 0 and r.t_memory > 0 and r.t_collective > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_fraction <= 1

@@ -1,0 +1,196 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.lattice_merge import lattice_merge_kernel
+from repro.kernels.rwkv6_scan import rwkv6_scan_kernel
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, S, H, KV, hd, dtype, causal, bq, bk)
+    (1, 32, 2, 2, 16, jnp.float32, True, 8, 8),
+    (2, 64, 4, 2, 32, jnp.float32, True, 16, 16),
+    (2, 64, 4, 1, 32, jnp.float32, False, 32, 16),
+    (1, 128, 8, 2, 64, jnp.float32, True, 64, 32),
+    (1, 64, 4, 4, 64, jnp.bfloat16, True, 16, 16),
+    (2, 48, 6, 3, 16, jnp.float32, True, 16, 16),  # uneven heads/groups
+    (1, 128, 2, 2, 128, jnp.float32, False, 128, 128),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,dtype,causal,bq,bk", ATTN_CASES)
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype, causal, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_ops_wrapper_matches_layers_attend():
+    """The kernel path must agree with the model's jnp attention."""
+    from repro.models.layers import attend
+    B, S, H, KV, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    pos = jnp.arange(S)
+    o1 = attend(q, k, v, pos, pos, causal=True, use_flash=False)
+    o2 = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       s_pow=st.integers(4, 6), causal=st.booleans())
+def test_flash_attention_property(seed, s_pow, causal):
+    S = 2 ** s_pow
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, 2, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=16,
+                                 block_k=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [
+    # (B, T, H, hd, chunk, dtype)
+    (1, 16, 1, 8, 4, jnp.float32),
+    (2, 32, 2, 16, 8, jnp.float32),
+    (2, 64, 4, 32, 16, jnp.float32),
+    (1, 64, 2, 64, 64, jnp.float32),
+    (1, 32, 2, 16, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk,dtype", RWKV_CASES)
+def test_rwkv6_scan_sweep(B, T, H, hd, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, hd), dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.5 + 0.4
+         ).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, hd)) * 0.1).astype(jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    out, sT = rwkv6_scan_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    want, sT_want = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    # f32 tolerance is relative: long chunks accumulate values of O(50)
+    tol = dict(rtol=1e-3, atol=5e-4) if dtype != jnp.bfloat16 else _tol(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+def test_rwkv6_scan_nonzero_initial_state():
+    B, T, H, hd = 1, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.4 + 0.5
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.2
+    out, sT = rwkv6_scan_kernel(r, k, v, w, u, s0, chunk=4, interpret=True)
+    want, sT_want = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rwkv6_kernel_matches_model_path():
+    """ops.rwkv6_scan must agree with the model's wkv_chunked oracle."""
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, hd = 2, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jnp.zeros((B, H, hd, hd))
+    o1, s1 = wkv_chunked(r, k, v, w, u, s0, chunk=8)
+    o2, s2 = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# lattice merge
+# ---------------------------------------------------------------------------
+
+MERGE_CASES = [
+    (64, 4, jnp.float32, 16),
+    (256, 8, jnp.float32, 64),
+    (128, 2, jnp.bfloat16, 128),
+    (512, 1, jnp.float32, 256),
+]
+
+
+@pytest.mark.parametrize("R,W,dtype,block", MERGE_CASES)
+def test_lattice_merge_sweep(R, W, dtype, block):
+    rng = np.random.default_rng(0)
+    a_valid = jnp.asarray(rng.random(R) < 0.7)
+    b_valid = jnp.asarray(rng.random(R) < 0.7)
+    a_ver = jnp.asarray(rng.integers(-1, 50, R).astype(np.int32))
+    b_ver = jnp.asarray(rng.integers(-1, 50, R).astype(np.int32))
+    a_pay = jnp.asarray(rng.normal(0, 3, (R, W)).astype(np.float32)).astype(dtype)
+    b_pay = jnp.asarray(rng.normal(0, 3, (R, W)).astype(np.float32)).astype(dtype)
+    lo, hi = -5.0, 5.0
+
+    got = lattice_merge_kernel(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
+                               lo, hi, block_rows=block, interpret=True)
+    want = ref.lattice_merge_ref(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
+                                 lo, hi)
+    for g, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w_))
+
+
+def test_lattice_merge_is_lattice_join():
+    """Kernel output must equal core.lattice.VersionedSlots.join."""
+    from repro.core.lattice import VersionedSlots
+    rng = np.random.default_rng(1)
+    R, W = 128, 4
+    def mk(r):
+        return VersionedSlots(
+            jnp.asarray(rng.random(R) < 0.6),
+            jnp.asarray(((rng.integers(0, 50, R)) * 4 + r).astype(np.int64)),
+            jnp.asarray(rng.normal(0, 1, (R, W)).astype(np.float32)))
+    a, b = mk(0), mk(1)
+    want = VersionedSlots.join(a, b)
+    valid, ver, pay, viol = ops.lattice_merge(
+        a.valid, a.version.astype(jnp.int32), a.payload,
+        b.valid, b.version.astype(jnp.int32), b.payload,
+        lo=-1e9, hi=1e9)
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(want.valid))
+    np.testing.assert_array_equal(np.asarray(pay), np.asarray(want.payload))
+    assert not bool(viol.any())

@@ -1,0 +1,216 @@
+"""Lattice laws (Definition 3 prerequisites): ⊔ is commutative, associative,
+idempotent, with identity — property-tested with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lattice as lat
+
+
+
+def _arrays(dtype=np.float32, shape=(3,)):
+    return st.lists(
+        st.floats(-100, 100, allow_nan=False, allow_subnormal=False, width=32),
+        min_size=int(np.prod(shape)), max_size=int(np.prod(shape)),
+    ).map(lambda xs: jnp.asarray(np.array(xs, dtype).reshape(shape)))
+
+
+def _tree_eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_arrays(), _arrays(), _arrays())
+def test_max_join_laws(a, b, c):
+    j = lat.max_join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_arrays(), _arrays(), _arrays())
+def test_min_join_laws(a, b, c):
+    j = lat.min_join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=8, max_size=8),
+       st.lists(st.booleans(), min_size=8, max_size=8),
+       st.lists(st.booleans(), min_size=8, max_size=8))
+def test_or_join_laws(a, b, c):
+    a, b, c = (jnp.asarray(x) for x in (a, b, c))
+    j = lat.or_join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+    assert _tree_eq(j(a, jnp.zeros_like(a)), a)  # identity
+
+
+def _gcounters(num_replicas=3):
+    return st.lists(
+        st.floats(0, 50, allow_nan=False, allow_subnormal=False, width=32),
+        min_size=num_replicas, max_size=num_replicas,
+    ).map(lambda xs: lat.GCounter(jnp.asarray(np.array(xs, np.float32))))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_gcounters(), _gcounters(), _gcounters())
+def test_gcounter_laws(a, b, c):
+    j = lat.GCounter.join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+    bottom = lat.GCounter.make(3)
+    assert _tree_eq(j(a, bottom), a)
+
+
+def test_gcounter_value_reflects_all_increments():
+    """Convergence reflects every replica's ops (the paper's §5.2 ADT claim)."""
+    c0 = lat.GCounter.make(2)
+    a = c0.increment(0, 5.0).increment(0, 2.0)   # replica 0's local copy
+    b = c0.increment(1, 3.0)                      # replica 1's local copy
+    merged = lat.GCounter.join(a, b)
+    assert float(merged.value()) == 10.0
+
+
+def test_pncounter_lost_update_free():
+    c0 = lat.PNCounter.make(2)
+    a = c0.increment(0, 100.0)
+    b = c0.decrement(1, 30.0)
+    m = lat.PNCounter.join(a, b)
+    assert float(m.value()) == 70.0
+    # join is idempotent: re-delivering a state changes nothing
+    assert _tree_eq(lat.PNCounter.join(m, a), m)
+
+
+def _lww(draw_ts):
+    # (ts, replica) stamps are unique in a real system (replica-namespaced
+    # versions, §5.1), so the value is a function of the stamp.
+    return st.tuples(st.integers(0, 20), st.integers(0, 3)).map(
+        lambda t: lat.LWWRegister.make(float(t[0] * 10 + t[1]), t[0], t[1]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_lww(True), _lww(True), _lww(True))
+def test_lww_laws(a, b, c):
+    j = lat.LWWRegister.join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+def test_lww_exhibits_lost_update():
+    """The paper's §5.2 warning: LWW merge loses one of two concurrent writes."""
+    r0 = lat.LWWRegister.make(100.0, ts=0, replica=0)
+    a = r0.write(100.0 - 30.0, ts=1, replica=0)   # withdraw 30
+    b = r0.write(100.0 - 20.0, ts=1, replica=1)   # withdraw 20 concurrently
+    m = lat.LWWRegister.join(a, b)
+    assert float(m.value) in (70.0, 80.0)  # one update lost
+    assert float(m.value) != 50.0          # both reflected would be 50
+
+
+def _2psets():
+    return st.tuples(st.lists(st.booleans(), min_size=6, max_size=6),
+                     st.lists(st.booleans(), min_size=6, max_size=6)).map(
+        lambda t: lat.TwoPhaseSet(jnp.asarray(t[0]), jnp.asarray(t[1])))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_2psets(), _2psets(), _2psets())
+def test_2pset_laws(a, b, c):
+    j = lat.TwoPhaseSet.join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+def test_2pset_remove_wins_after_merge():
+    s = lat.TwoPhaseSet.make(4)
+    a = s.add(1)
+    b = s.add(1).remove(1)
+    m = lat.TwoPhaseSet.join(a, b)
+    assert not bool(m.members()[1])
+
+
+def _escrows():
+    return st.tuples(
+        st.lists(st.floats(0, 10, width=32, allow_nan=False, allow_subnormal=False), min_size=2, max_size=2),
+        st.lists(st.floats(0, 10, width=32, allow_nan=False, allow_subnormal=False), min_size=2, max_size=2),
+    ).map(lambda t: lat.EscrowCounter(jnp.asarray(np.array(t[0], np.float32)),
+                                      jnp.asarray(np.array(t[1], np.float32))))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_escrows(), _escrows(), _escrows())
+def test_escrow_laws(a, b, c):
+    j = lat.EscrowCounter.join
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+def test_escrow_never_overspends():
+    e = lat.EscrowCounter.make(2, budget=100.0)
+    # replica 0 spends 40 then tries 20 (share is 50)
+    e, ok1 = e.try_spend(0, 40.0)
+    e, ok2 = e.try_spend(0, 20.0)
+    e, ok3 = e.try_spend(1, 50.0)
+    assert bool(ok1) and not bool(ok2) and bool(ok3)
+    assert float(e.remaining()) == 10.0
+    refreshed = e.refresh()
+    assert float(refreshed.remaining()) == pytest.approx(10.0)
+
+
+def _versioned():
+    cap, width = 4, 2
+    return st.tuples(
+        st.lists(st.booleans(), min_size=cap, max_size=cap),
+        st.lists(st.integers(-1, 10), min_size=cap, max_size=cap),
+        st.lists(st.floats(-5, 5, width=32, allow_nan=False, allow_subnormal=False),
+                 min_size=cap * width, max_size=cap * width),
+    ).map(lambda t: lat.VersionedSlots(
+        jnp.asarray(t[0]),
+        jnp.asarray(np.array(t[1], np.int64)),
+        jnp.asarray(np.array(t[2], np.float32).reshape(cap, width))))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_versioned(), _versioned(), _versioned())
+def test_versioned_laws_commut_idem(a, b, c):
+    j = lat.VersionedSlots.join
+    # payload ties at equal version may differ between orders; make versions
+    # unique per (slot, side) to model replica-namespaced versions.
+    def namespaced(v, r):
+        # replica-namespaced versions: globally unique stamps, no ties
+        return v._replace(version=(v.version + 1) * 4 + r)
+    a, b, c = namespaced(a, 0), namespaced(b, 1), namespaced(c, 2)
+    assert _tree_eq(j(a, b), j(b, a))
+    assert _tree_eq(j(a, j(b, c)), j(j(a, b), c))
+    assert _tree_eq(j(a, a), a)
+
+
+def test_tree_join_flat_mixed_state():
+    state_a = {"step": jnp.asarray(3), "metrics": lat.GCounter(jnp.asarray([1.0, 0.0])),
+               "mask": jnp.asarray([True, False])}
+    state_b = {"step": jnp.asarray(5), "metrics": lat.GCounter(jnp.asarray([1.0, 2.0])),
+               "mask": jnp.asarray([False, True])}
+    # dict pytrees flatten in sorted-key order: mask, metrics, step
+    merged = lat.tree_join_flat(("or", "gcounter", "max"), state_a, state_b)
+    assert bool(merged["mask"].all())
+    assert float(merged["metrics"].value()) == 3.0
+    assert int(merged["step"]) == 5
+
+
+def test_check_lattice_laws_helper():
+    samples = [jnp.asarray([1.0, 2.0]), jnp.asarray([3.0, 0.0]), jnp.asarray([2.0, 2.0])]
+    lat.check_lattice_laws(lat.max_join, samples)
+    with pytest.raises(AssertionError):
+        lat.check_lattice_laws(lat.sum_join, samples)  # sum is not idempotent

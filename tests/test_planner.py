@@ -1,0 +1,87 @@
+"""Coordination planner tests: runtime state trees classified correctly."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import merge as merge_mod
+from repro.core.invariants import Invariant, InvariantKind
+from repro.core.lattice import GCounter
+from repro.core.planner import (CoordClass, StateSpec, plan_state, plan_states,
+                                serving_state_specs, training_state_specs)
+from repro.core.txn import Op, OpKind
+
+
+def test_training_plan_hierarchical():
+    plan = plan_states(training_state_specs(coord_mode="hierarchical",
+                                            merge_every=8))
+    # gradients are confluent (sum merge, view invariant)
+    assert plan.entry("grads").coord_class is CoordClass.FREE
+    assert plan.entry("grads").spec.merge_every == 8
+    # monotone step counter never coordinates
+    assert plan.entry("step").coord_class is CoordClass.FREE
+    # metrics free
+    assert plan.entry("metrics.loss_sum").coord_class is CoordClass.FREE
+    # sample ids free via replica namespacing
+    assert plan.entry("sample_ids").coord_class is CoordClass.FREE
+    # loss scale: increments against overflow ceiling -> escrow
+    assert plan.entry("loss_scale").coord_class is CoordClass.ESCROW
+    # checkpoint sequential IDs -> escrow-able (deferred assignment)
+    assert plan.entry("ckpt.sequence_id").coord_class is CoordClass.ESCROW
+    # escrow clipping keeps grad_norm off the critical path
+    assert plan.entry("grad_norm").coord_class is CoordClass.ESCROW
+
+
+def test_training_plan_sync_vs_exact_clip():
+    plan = plan_states(training_state_specs(coord_mode="sync", exact_clip=True))
+    assert plan.entry("grads").spec.merge_every == 1
+    assert plan.entry("grad_norm").coord_class is CoordClass.REQUIRED
+    assert "grads" in plan.critical_path_collectives()
+    assert "grad_norm" in plan.critical_path_collectives()
+
+    plan2 = plan_states(training_state_specs(coord_mode="local_sgd",
+                                             merge_every=16, exact_clip=False))
+    assert "grads" not in plan2.critical_path_collectives()
+
+
+def test_serving_plan():
+    plan = plan_states(serving_state_specs())
+    assert plan.entry("request_ids").coord_class is CoordClass.FREE
+    assert plan.entry("admission_budget").coord_class is CoordClass.ESCROW
+    assert plan.entry("served_count").coord_class is CoordClass.FREE
+    assert plan.entry("batch_slots").coord_class is CoordClass.FREE
+    assert not plan.critical_path_collectives()  # serving hot path: zero collectives
+
+
+def test_plan_summary_renders():
+    plan = plan_states(training_state_specs())
+    s = plan.summary()
+    assert "coordination plan" in s and "grads" in s
+
+
+def test_uniqueness_specific_forces_required():
+    spec = StateSpec("ids", "or",
+                     (Op(OpKind.ASSIGN_SPECIFIC, "ids"),),
+                     (Invariant("unique", InvariantKind.UNIQUENESS, "ids"),))
+    e = plan_state(spec)
+    assert e.coord_class is CoordClass.REQUIRED
+
+
+def test_merge_trees_via_plan_names():
+    plan = plan_states([
+        StateSpec("count", "gcounter", (Op(OpKind.INCREMENT, "count"),)),
+        StateSpec("step", "max", (Op(OpKind.INCREMENT, "step"),)),
+    ])
+    names = merge_mod.plan_lattice_names(plan)
+    a = {"count": GCounter(jnp.asarray([2.0, 0.0])), "step": jnp.asarray(4)}
+    b = {"count": GCounter(jnp.asarray([2.0, 3.0])), "step": jnp.asarray(2)}
+    m = merge_mod.merge_trees(names, a, b)
+    assert float(m["count"].value()) == 5.0
+    assert int(m["step"]) == 4
+
+
+def test_merge_many_balanced_fold():
+    names = ("max",)
+    states = [{"x": jnp.asarray(i)} for i in (3, 9, 1, 7, 5)]
+    m = merge_mod.merge_many(names, states)
+    assert int(m["x"]) == 9
+    assert merge_mod.converged(names, states)

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the TPC-C engine's invariants:
+
+For arbitrary interleavings of New-Order / Payment / Delivery batches,
+arbitrary remote fractions, and arbitrary anti-entropy deferral, the engine
+must maintain the confluent criteria continuously and ALL twelve after the
+outboxes drain (the paper's global I-validity at convergence).
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.txn import tpcc
+from repro.txn.engine import single_host_engine
+from repro.txn.tpcc import TPCCScale, check_consistency, init_state
+
+SCALE = TPCCScale(n_warehouses=2, districts=2, customers=8, n_items=32,
+                  order_capacity=256, max_lines=15)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return single_host_engine(SCALE)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    plan=st.lists(st.sampled_from(["N", "P", "D", "M"]), min_size=3,
+                  max_size=10),
+    remote_frac=st.sampled_from([0.0, 0.3, 1.0]),
+)
+def test_random_interleavings_converge_valid(engine, seed, plan, remote_frac):
+    """N=New-Order batch, P=Payment batch, D=Delivery, M=anti-entropy merge;
+    after draining, all twelve criteria hold."""
+    rng = np.random.default_rng(seed)
+    state = engine.shard_state(init_state(SCALE, seed=seed % 7))
+    pending = []
+    ts = 0
+    for op in plan:
+        if op == "N":
+            batch = tpcc.generate_neworder(rng, SCALE, 8,
+                                           remote_frac=remote_frac, ts0=ts)
+            ts += 8
+            state, outbox, _ = engine.neworder_step(state, batch)
+            pending.append(outbox)
+        elif op == "P":
+            state = engine.payment_step(
+                state, tpcc.generate_payment(rng, SCALE, 8))
+        elif op == "D":
+            state = engine.delivery_step(state)
+        else:  # M: merge may happen at ANY point (Definition 3)
+            for ob in pending:
+                state = engine.anti_entropy(state, ob)
+            pending = []
+    for ob in pending:
+        state = engine.anti_entropy(state, ob)
+    c = check_consistency(state)
+    assert all(c.values()), (plan, c)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n_batches=st.integers(2, 5))
+def test_merge_order_independence(engine, seed, n_batches):
+    """Outboxes may drain in any order — final stock sums agree (the merge
+    is a commutative delta-join)."""
+    rng = np.random.default_rng(seed)
+    batches = [tpcc.generate_neworder(rng, SCALE, 8, remote_frac=0.5,
+                                      ts0=i * 8) for i in range(n_batches)]
+
+    def run(order):
+        state = engine.shard_state(init_state(SCALE, seed=1))
+        boxes = []
+        for b in batches:
+            state, ob, _ = engine.neworder_step(state, b)
+            boxes.append(ob)
+        for i in order:
+            state = engine.anti_entropy(state, boxes[i])
+        return np.asarray(jax.device_get(state.s_ytd))
+
+    fwd = run(list(range(n_batches)))
+    rev = run(list(range(n_batches))[::-1])
+    np.testing.assert_allclose(fwd, rev, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), batch=st.integers(1, 24))
+def test_sequential_ids_dense_for_any_batch_size(engine, seed, batch):
+    """Batched increment-and-get yields dense per-district order IDs for
+    arbitrary batch compositions."""
+    rng = np.random.default_rng(seed)
+    state = engine.shard_state(init_state(SCALE, seed=2))
+    b = tpcc.generate_neworder(rng, SCALE, batch, remote_frac=0.0)
+    state, _, _ = engine.neworder_step(state, b)
+    s = jax.device_get(state)
+    assert bool(np.array_equal(s.d_next_o_id, s.o_valid.sum(-1)))
