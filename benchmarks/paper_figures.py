@@ -135,6 +135,102 @@ def fig6_scaling() -> tuple[list, dict]:
                              f"(paper: 1.6M at 100 servers; linear ✓)"}
 
 
+def ramp_read() -> tuple[list, dict]:
+    """RAMP atomic-visibility reads (txn/ramp.py) vs 2PC-synchronized reads,
+    plus the full five-transaction mix.
+
+    The RAMP read path is collective-free (verified structurally here); the
+    2PC baseline pays lock/commit collectives per batch *and* the modeled
+    D-2PC LAN commitment latency (latency.py) per conflicting round. Also
+    validates the fused Pallas kernel bit-exactly against its jnp oracle.
+    """
+    from repro.txn import latency as lat
+    from repro.txn import tpcc
+    from repro.txn.engine import _home_partitioned, run_mixed_loop
+    from repro.txn.tpcc import init_state
+    from repro.txn.twopc import TwoPCEngine, _conflict_rounds
+
+    eng = _engine(8)
+    scale = eng.scale
+    state = eng.shard_state(init_state(scale))
+
+    # load some orders first so reads have something to find
+    state, mix = run_mixed_loop(eng, state, batch_per_shard=64, n_batches=6,
+                                merge_every=4, seed=7)
+    assert mix.fractures_observed == 0, "RAMP read observed a fracture"
+
+    rng = np.random.default_rng(11)
+    B = 128 * eng.n_shards
+    # home-partitioned: each shard answers queries for its own warehouses
+    os_batch = _home_partitioned(tpcc.generate_order_status, rng, eng, 128)
+    sl_batch = _home_partitioned(tpcc.generate_stock_level, rng, eng, 128)
+    two = TwoPCEngine(scale, eng.mesh, eng.axis_names)
+
+    # warmup compiles, then timed loops
+    jax.block_until_ready((eng.order_status_step(state, os_batch),
+                           eng.stock_level_step(state, sl_batch),
+                           two.read_step(state, os_batch)))
+    n_iter = 20
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        r1 = eng.order_status_step(state, os_batch)
+        r2 = eng.stock_level_step(state, sl_batch)
+    jax.block_until_ready((r1, r2))
+    ramp_us = (time.perf_counter() - t0) * 1e6 / (n_iter * 2 * B)
+
+    # 2PC-synchronized reads: same effects + lock/commit collectives, plus
+    # the commitment latency a real deployment pays (D-2PC, LAN, 2 servers)
+    commit = lat.simulate("D-2PC", lat.DelayModel("lan"), 2, trials=400)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        r3 = two.read_step(state, os_batch)
+    jax.block_until_ready(r3)
+    rounds = _conflict_rounds(os_batch, scale.districts)
+    twopc_us = ((time.perf_counter() - t0) / n_iter
+                + commit.mean_latency_ms * 1e-3 * rounds) * 1e6 / B
+
+    proof = eng.prove_read_coordination_free(8)
+    kernel_exact = _ramp_kernel_bitexact(state, os_batch, eng)
+    rows = [{
+        "ramp_us_per_read": ramp_us,
+        "twopc_us_per_read": twopc_us,
+        "speedup": twopc_us / ramp_us,
+        "mix_throughput_txn_s": mix.throughput,
+        "mix_fractures": mix.fractures_observed,
+        "mix_lines_repaired": mix.lines_repaired,
+        "read_proof": proof,
+        "kernel_bitexact": kernel_exact,
+    }]
+    return rows, {"name": "ramp_read", "us_per_call": ramp_us,
+                  "derived": (f"RAMP {ramp_us:.1f}us vs 2PC {twopc_us:.1f}us "
+                              f"per read ({twopc_us / ramp_us:.0f}x); mix "
+                              f"{mix.throughput:,.0f} txn/s, 0 fractures; "
+                              f"kernel bit-exact: {kernel_exact}")}
+
+
+def _ramp_kernel_bitexact(state, os_batch, eng) -> bool:
+    """The fused Pallas RAMP-read kernel vs its jnp oracle on live state."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    s = jax.device_get(state)
+    wl, d = np.asarray(os_batch.w), np.asarray(os_batch.d)
+    cand = (s.o_valid[wl, d] & (s.o_ts[wl, d] >= 0)
+            & (s.o_c_id[wl, d] == np.asarray(os_batch.c)[:, None]))
+    slot = np.argmax(np.where(cand, s.o_ts[wl, d], -1), axis=-1)
+    args = (jnp.asarray(s.o_ts[wl, d, slot]),
+            jnp.asarray(s.o_ol_cnt[wl, d, slot]),
+            jnp.asarray(s.ol_ts[wl, d, slot]),
+            jnp.asarray(s.ol_vis[wl, d, slot]),
+            jnp.asarray(s.ol_valid[wl, d, slot]),
+            jnp.asarray(s.ol_amount[wl, d, slot]),
+            jnp.asarray(s.ol_i_id[wl, d, slot]))
+    got = ops.ramp_read_select(*args)
+    want = ref.ramp_read_ref(*args)
+    return all(bool((g == w).all()) for g, w in zip(got, want))
+
+
 def theorem1_dynamics() -> tuple[list, dict]:
     """§4.2: empirical Theorem-1 check over all example systems."""
     from repro.core.systems import ALL_SYSTEM_FACTORIES, EXPECTED_CONFLUENT
@@ -170,4 +266,5 @@ def straggler_merge() -> tuple[list, dict]:
 
 
 ALL = [table2, fig3_commitment, tpcc_invariants, fig4_neworder,
-       fig5_distributed, fig6_scaling, theorem1_dynamics, straggler_merge]
+       fig5_distributed, fig6_scaling, ramp_read, theorem1_dynamics,
+       straggler_merge]

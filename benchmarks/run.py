@@ -1,5 +1,7 @@
 """Benchmark harness: one function per paper table/figure + the roofline
-table derived from the dry-run artifacts.
+table derived from the dry-run artifacts. Includes the ``ramp_read`` row
+(RAMP atomic-visibility reads vs 2PC-synchronized reads + the full TPC-C
+mix; see repro/txn/ramp.py).
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed by
 the full roofline table when results/dryrun_baseline.json exists.

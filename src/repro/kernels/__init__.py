@@ -3,4 +3,5 @@
 #   flash_attention.py — tiled causal/GQA attention (prefill hot spot)
 #   rwkv6_scan.py      — chunked data-dependent-decay WKV scan
 #   lattice_merge.py   — fused versioned-table join ⊔ + invariant audit
+#   ramp_read.py       — fused RAMP atomic-visibility read (txn/ramp.py)
 from . import ops, ref

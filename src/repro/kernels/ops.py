@@ -63,3 +63,18 @@ def lattice_merge(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
     return lattice_merge_kernel(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
                                 lo, hi, block_rows=max(br, 1),
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def ramp_read_select(req_ts, nlines, ol_ts, ol_vis, ol_prep, amount, i_id,
+                     block_rows: int = 256):
+    """Fused RAMP read: fracture detection + lookback select + aggregation."""
+    from .ramp_read import ramp_read_kernel
+
+    R = req_ts.shape[0]
+    br = min(block_rows, R)
+    while R % br:
+        br //= 2
+    return ramp_read_kernel(req_ts, nlines, ol_ts, ol_vis, ol_prep, amount,
+                            i_id, block_rows=max(br, 1),
+                            interpret=_interpret())

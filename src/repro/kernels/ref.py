@@ -70,3 +70,26 @@ def lattice_merge_ref(a_valid: Array, a_ver: Array, a_pay: Array,
     bad = (payload < lo) | (payload > hi)
     violation = valid & bad.any(axis=-1)
     return valid, version, payload, violation
+
+
+def ramp_read_ref(req_ts: Array, nlines: Array, ol_ts: Array, ol_vis: Array,
+                  ol_prep: Array, amount: Array, i_id: Array):
+    """Fused RAMP read oracle (txn/ramp.py read_lines + aggregation).
+
+    Round 1 reads the committed layer, the commit-record metadata (req_ts,
+    nlines) detects fractured sibling sets, and the lookback round repairs
+    from the retained prepared versions. Returns (present, amount_sel,
+    i_id_sel, amount_sum, lines_read, repaired).
+    """
+    L = ol_ts.shape[-1]
+    line = jnp.arange(L, dtype=jnp.int32)[None, :]
+    need = line < nlines[:, None]
+    match = ol_ts == req_ts[:, None]
+    round1 = ol_vis & match & need
+    fractured = need & ~round1
+    repaired = fractured & (ol_prep & match)
+    present = round1 | repaired
+    amt_sel = jnp.where(present, amount, 0.0)
+    return (present, amt_sel, jnp.where(present, i_id, -1),
+            amt_sel.sum(axis=1), present.sum(axis=1).astype(jnp.int32),
+            repaired.sum(axis=1).astype(jnp.int32))

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils import compat
+
 
 def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
                  o_ref, sT_ref, state_ref, *, chunk: int, num_chunks: int):
@@ -108,7 +110,7 @@ def rwkv6_scan_kernel(r, k, v, w, u, s0, *, chunk: int = 64,
             jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rh, kh, vh, wh, u, sh)

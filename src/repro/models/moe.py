@@ -21,6 +21,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils import compat
+
 from . import layers as L
 from .config import ModelConfig
 from .sharding import Rules
@@ -370,7 +372,7 @@ def moe_apply_a2a(params: dict, x: Array, cfg: ModelConfig, rules: Rules
     expert axes; falls back to blocked dispatch when the expert axis is
     absent or sized 1.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     expert_axis = rules.expert
     if (not rules.enabled or expert_axis is None
             or mesh is None or expert_axis not in getattr(mesh, "shape", {})
@@ -461,7 +463,7 @@ def moe_apply_a2a(params: dict, x: Array, cfg: ModelConfig, rules: Rules
             dropped = jax.lax.psum(dropped, a)
         return (out.reshape(B_loc, S, d), aux, load, dropped)
 
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         body,
         in_specs=(P(), P(expert_axis, None, None), P(expert_axis, None, None),
                   P(expert_axis, None, None), P(batch_axes, None, None)),

@@ -1,7 +1,13 @@
 # TPC-C substrate: the paper's §6.2 proof-of-concept as a sharded JAX system.
-from .tpcc import (TPCCScale, TPCCState, NewOrderBatch, PaymentBatch,
-                   StockDelta, init_state, generate_neworder, generate_payment,
+from .tpcc import (TPCCScale, TPCCState, NewOrderBatch, OrderStatusBatch,
+                   PaymentBatch, StockDelta, StockLevelBatch,
+                   init_state, generate_neworder, generate_order_status,
+                   generate_payment, generate_stock_level,
                    apply_neworder, apply_payment, apply_delivery,
                    check_consistency, tpcc_invariants)
-from .engine import Engine, RunStats, run_closed_loop, single_host_engine
+from .ramp import (OrderStatusResult, StockLevelResult, apply_order_status,
+                   apply_stock_level, conceal_lines, delivery_read,
+                   publish_lines, read_lines)
+from .engine import (Engine, MixStats, RunStats, run_closed_loop,
+                     run_mixed_loop, single_host_engine)
 from .twopc import TwoPCEngine, run_closed_loop_2pc

@@ -31,10 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.utils.compat import shard_map
 from repro.utils.hlo import assert_no_collectives, collective_stats
 
-from . import tpcc
-from .tpcc import NewOrderBatch, PaymentBatch, StockDelta, TPCCScale, TPCCState
+from . import ramp, tpcc
+from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
+                   StockDelta, StockLevelBatch, TPCCScale, TPCCState)
+
+Array = jax.Array
 
 
 @dataclasses.dataclass
@@ -57,19 +61,21 @@ class Engine:
         ax = self.axis_names
 
         @functools.partial(
-            jax.shard_map, mesh=self.mesh,
+            shard_map, mesh=self.mesh,
             in_specs=(self.state_spec, self.batch_spec),
             out_specs=(self.state_spec, self.batch_spec, self.batch_spec),
             check_vma=False)
         def _neworder(state: TPCCState, batch: NewOrderBatch):
-            w_lo = self._shard_index() * self.w_per_shard
+            idx = self._shard_index()
+            w_lo = idx * self.w_per_shard
             state, delta, total = tpcc.apply_neworder(
                 state, batch, self.scale, w_lo=w_lo,
-                w_hi=w_lo + self.w_per_shard)
+                w_hi=w_lo + self.w_per_shard,
+                replica=idx, num_replicas=self.n_shards)
             return state, delta, total
 
         @functools.partial(
-            jax.shard_map, mesh=self.mesh,
+            shard_map, mesh=self.mesh,
             in_specs=(self.state_spec, self.batch_spec),
             out_specs=self.state_spec,
             check_vma=False)
@@ -89,7 +95,7 @@ class Engine:
                 jnp.ones_like(own))
 
         @functools.partial(
-            jax.shard_map, mesh=self.mesh,
+            shard_map, mesh=self.mesh,
             in_specs=(self.state_spec, self.batch_spec),
             out_specs=self.state_spec,
             check_vma=False)
@@ -98,18 +104,42 @@ class Engine:
             return tpcc.apply_payment(state, batch, w_lo=w_lo)
 
         @functools.partial(
-            jax.shard_map, mesh=self.mesh,
+            shard_map, mesh=self.mesh,
             in_specs=(self.state_spec,),
-            out_specs=self.state_spec,
+            out_specs=(self.state_spec, self.batch_spec),
             check_vma=False)
         def _delivery(state: TPCCState):
-            return tpcc.apply_delivery(state, jnp.asarray(1, jnp.int32),
-                                       jnp.asarray(0, jnp.int32))
+            # one order per district is delivered, and only where one exists
+            n = state.no_valid.any(axis=2).sum().reshape(1)
+            state = tpcc.apply_delivery(state, jnp.asarray(1, jnp.int32),
+                                        jnp.asarray(0, jnp.int32))
+            return state, n
+
+        @functools.partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(self.state_spec, self.batch_spec),
+            out_specs=self.batch_spec,
+            check_vma=False)
+        def _order_status(state: TPCCState, batch: OrderStatusBatch):
+            w_lo = self._shard_index() * self.w_per_shard
+            return ramp.apply_order_status(state, batch, w_lo=w_lo)
+
+        @functools.partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(self.state_spec, self.batch_spec),
+            out_specs=self.batch_spec,
+            check_vma=False)
+        def _stock_level(state: TPCCState, batch: StockLevelBatch):
+            w_lo = self._shard_index() * self.w_per_shard
+            return ramp.apply_stock_level(state, batch, self.scale, w_lo=w_lo)
 
         self._neworder = jax.jit(_neworder, donate_argnums=0)
         self._anti_entropy = jax.jit(_anti_entropy, donate_argnums=0)
         self._payment = jax.jit(_payment, donate_argnums=0)
         self._delivery = jax.jit(_delivery, donate_argnums=0)
+        # read path: no donation — reads must not consume the state
+        self._order_status = jax.jit(_order_status)
+        self._stock_level = jax.jit(_stock_level)
 
     # -- helpers --------------------------------------------------------------
 
@@ -136,8 +166,19 @@ class Engine:
     def payment_step(self, state: TPCCState, batch: PaymentBatch) -> TPCCState:
         return self._payment(state, batch)
 
-    def delivery_step(self, state: TPCCState) -> TPCCState:
+    def delivery_step(self, state: TPCCState) -> tuple[TPCCState, Array]:
+        """Returns (state, per-shard delivered-order counts)."""
         return self._delivery(state)
+
+    def order_status_step(self, state: TPCCState,
+                          batch: OrderStatusBatch) -> ramp.OrderStatusResult:
+        """RAMP read path: atomic visibility, zero collectives."""
+        return self._order_status(state, batch)
+
+    def stock_level_step(self, state: TPCCState,
+                         batch: StockLevelBatch) -> ramp.StockLevelResult:
+        """RAMP read path: atomic visibility, zero collectives."""
+        return self._stock_level(state, batch)
 
     # -- structural proofs ------------------------------------------------------
 
@@ -153,6 +194,31 @@ class Engine:
         text = self.lowered_neworder(batch_per_shard).compile().as_text()
         assert_no_collectives(text, context="TPC-C New-Order hot path")
         return collective_stats(text).describe()
+
+    def lowered_order_status(self, batch_per_shard: int):
+        state_sds = tpcc.state_shape_dtypes(self.scale)
+        batch_sds = tpcc.order_status_input_specs(
+            batch_per_shard * self.n_shards)
+        return self._order_status.lower(state_sds, batch_sds)
+
+    def lowered_stock_level(self, batch_per_shard: int):
+        state_sds = tpcc.state_shape_dtypes(self.scale)
+        batch_sds = tpcc.stock_level_input_specs(
+            batch_per_shard * self.n_shards)
+        return self._stock_level.lower(state_sds, batch_sds)
+
+    def prove_read_coordination_free(self, batch_per_shard: int = 8) -> str:
+        """The RAMP claim, structurally: both compiled read transactions
+        (first round, fracture detection, and lookback repair included)
+        contain zero collective ops."""
+        descs = []
+        for name, lowered in (
+                ("order-status", self.lowered_order_status(batch_per_shard)),
+                ("stock-level", self.lowered_stock_level(batch_per_shard))):
+            text = lowered.compile().as_text()
+            assert_no_collectives(text, context=f"RAMP {name} read path")
+            descs.append(f"{name}: {collective_stats(text).describe()}")
+        return "; ".join(descs)
 
     def count_anti_entropy_collectives(self, batch_per_shard: int = 8):
         state_sds = tpcc.state_shape_dtypes(self.scale)
@@ -236,7 +302,7 @@ def run_closed_loop(engine: Engine, state: TPCCState, *,
     if payments:
         state = engine.payment_step(state, pay_batches[0])
     if deliveries:
-        state = engine.delivery_step(state)
+        state, _ = engine.delivery_step(state)
     jax.block_until_ready(state)
 
     t0 = time.perf_counter()
@@ -249,10 +315,130 @@ def run_closed_loop(engine: Engine, state: TPCCState, *,
         if payments:
             state = engine.payment_step(state, pay_batches[i])
         if deliveries:
-            state = engine.delivery_step(state)
+            state, _ = engine.delivery_step(state)
         if (i % merge_every) == 0 or i == n_batches - 1:
             # anti-entropy drains the queued outboxes (convergence may lag
             # the hot path arbitrarily — Definition 3 — but must happen)
+            for ob in pending:
+                state = engine.anti_entropy(state, ob)
+            stats.anti_entropy_rounds += 1
+            pending = []
+    for ob in pending:
+        state = engine.anti_entropy(state, ob)
+    jax.block_until_ready(state)
+    stats.wall_seconds = time.perf_counter() - t0
+    return state, stats
+
+
+# ---------------------------------------------------------------------------
+# Full TPC-C mix: writes + RAMP reads (the paper's complete transaction set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MixStats:
+    """Closed-loop stats for the five-transaction mix."""
+
+    neworders: int = 0
+    payments: int = 0
+    order_statuses: int = 0
+    stock_levels: int = 0
+    deliveries: int = 0
+    anti_entropy_rounds: int = 0
+    reads_found: int = 0
+    fractures_observed: int = 0   # must stay 0: RAMP atomic visibility
+    lines_repaired: int = 0       # 2nd-round (lookback) activity
+    wall_seconds: float = 0.0
+
+    @property
+    def committed(self) -> int:
+        return (self.neworders + self.payments + self.order_statuses
+                + self.stock_levels + self.deliveries)
+
+    @property
+    def throughput(self) -> float:
+        return self.committed / self.wall_seconds if self.wall_seconds else 0.0
+
+
+def _home_partitioned(gen, rng, engine: Engine, per_shard: int, **kw):
+    parts = [gen(rng, engine.scale, per_shard,
+                 w_lo=s * engine.w_per_shard,
+                 w_hi=(s + 1) * engine.w_per_shard, **kw)
+             for s in range(engine.n_shards)]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+
+
+def run_mixed_loop(engine: Engine, state: TPCCState, *,
+                   batch_per_shard: int, n_batches: int,
+                   remote_frac: float = 0.01, merge_every: int = 8,
+                   read_frac: float = 0.25, seed: int = 0,
+                   ) -> tuple[TPCCState, MixStats]:
+    """Drive the full TPC-C mix: New-Order + Payment writes, periodic
+    Delivery, and the RAMP read transactions (Order-Status, Stock-Level).
+
+    Reads run against the live sharded state between write batches — the
+    workload the paper's RAMP-F prototype measures. ``read_frac`` sizes the
+    read batches relative to the write batches (the spec mix is ~8% reads;
+    the default stresses the read path harder).
+    """
+    import time
+
+    rng = np.random.default_rng(seed)
+    B = batch_per_shard * engine.n_shards
+    R = max(1, int(batch_per_shard * read_frac)) * engine.n_shards
+    ts0 = 0
+    no_batches, pay_batches, os_batches, sl_batches = [], [], [], []
+    for _ in range(n_batches):
+        parts = []
+        for s in range(engine.n_shards):
+            parts.append(tpcc.generate_neworder(
+                rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
+                w_lo=s * engine.w_per_shard,
+                w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
+            ts0 += batch_per_shard
+        no_batches.append(jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
+        pay_batches.append(_home_partitioned(
+            tpcc.generate_payment, rng, engine, batch_per_shard))
+        os_batches.append(_home_partitioned(
+            tpcc.generate_order_status, rng, engine,
+            max(1, int(batch_per_shard * read_frac))))
+        sl_batches.append(_home_partitioned(
+            tpcc.generate_stock_level, rng, engine,
+            max(1, int(batch_per_shard * read_frac))))
+
+    stats = MixStats()
+    # warmup compiles (one per transaction type)
+    state, outbox, _ = engine.neworder_step(state, no_batches[0])
+    state = engine.anti_entropy(state, outbox)
+    state = engine.payment_step(state, pay_batches[0])
+    state, _ = engine.delivery_step(state)
+    os_res = engine.order_status_step(state, os_batches[0])
+    sl_res = engine.stock_level_step(state, sl_batches[0])
+    jax.block_until_ready((state, os_res, sl_res))
+
+    t0 = time.perf_counter()
+    pending: list[StockDelta] = []
+    for i in range(1, n_batches):
+        state, outbox, _ = engine.neworder_step(state, no_batches[i])
+        pending.append(outbox)
+        stats.neworders += B
+        state = engine.payment_step(state, pay_batches[i])
+        stats.payments += B
+
+        os_res = engine.order_status_step(state, os_batches[i])
+        sl_res = engine.stock_level_step(state, sl_batches[i])
+        stats.order_statuses += R
+        stats.stock_levels += R
+        stats.reads_found += int(os_res.found.sum())
+        stats.fractures_observed += int(os_res.fractures_observed())
+        stats.fractures_observed += int(
+            (sl_res.fractured - sl_res.repaired).sum())
+        stats.lines_repaired += int(os_res.repaired.sum()
+                                    + sl_res.repaired.sum())
+
+        state, delivered = engine.delivery_step(state)
+        stats.deliveries += int(delivered.sum())
+        if (i % merge_every) == 0 or i == n_batches - 1:
             for ob in pending:
                 state = engine.anti_entropy(state, ob)
             stats.anti_entropy_rounds += 1

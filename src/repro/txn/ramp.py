@@ -1,0 +1,248 @@
+"""RAMP-Fast atomic visibility over the dense TPC-C store (paper §6, RAMP).
+
+The paper's coordination-avoiding prototype executes New-Order with RAMP-F
+writes: every multi-partition write set shares one timestamp, each written row
+carries sibling metadata, and readers repair *fractured* observations (an
+ORDER row without its ORDER-LINE rows) locally, without blocking writers and
+without any cross-partition coordination on the read path.
+
+Dense realization over :class:`repro.txn.tpcc.TPCCState`:
+
+* **write** — ``apply_neworder`` stamps the whole write set with one
+  replica-namespaced timestamp (``ts * R + replica``, exactly the
+  ``store.namespaced_version`` scheme): the ORDER row is the commit record
+  (its ``o_ts`` + ``o_ol_cnt`` are the metadata: sibling keys are positional
+  — lines ``0..n-1`` of the same slot), and every line carries the stamp in
+  ``ol_ts``. Prepared data (``ol_valid`` + payload columns) is installed
+  before the commit record can be observed; only the *committed-layer*
+  visibility bit ``ol_vis`` may lag, which is how in-flight commit
+  propagation across partitions is modeled (:func:`conceal_lines`).
+
+* **read, round 1** — a vectorized gather from the committed layer
+  (``ol_vis``-masked) plus the commit-record metadata.
+
+* **fracture detection** — metadata says the order has ``n`` sibling lines
+  at timestamp ``t``; any needed line that is invisible or carries a
+  different stamp is fractured.
+
+* **read, round 2 (local lookback)** — fractured lines are re-read from the
+  *retained prepared versions* (``ol_valid``/``ol_ts``), which RAMP
+  guarantees are installed before the commit record became visible. Both
+  rounds are shard-local gathers: the compiled read path contains **zero
+  collective ops** (Engine.prove_read_coordination_free, launch/dryrun.py).
+
+The three read transactions TPC-C adds to the write mix — Order-Status,
+Stock-Level, and Delivery's read side — are built on this primitive below.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tpcc import (OrderStatusBatch, StockLevelBatch, TPCCScale, TPCCState)
+
+Array = jax.Array
+
+# Stock-Level scans the district's last 20 orders (TPC-C §2.8.2.2).
+STOCK_LEVEL_ORDERS = 20
+
+
+# ---------------------------------------------------------------------------
+# Visibility staging — models commit propagation across partitions
+# ---------------------------------------------------------------------------
+
+
+def conceal_lines(state: TPCCState, drop: Array) -> TPCCState:
+    """Hide ``drop`` lines from the committed layer (prepared layer intact).
+
+    This is the fracture window RAMP tolerates: the commit record is visible
+    while some sibling partitions have not yet flipped their visibility bit.
+    Readers that ignore the metadata observe fractured write sets here; RAMP
+    readers repair them from the prepared layer.
+    """
+    return state._replace(ol_vis=state.ol_vis & ~drop)
+
+
+def publish_lines(state: TPCCState) -> TPCCState:
+    """Complete commit propagation: committed layer catches up to prepared."""
+    return state._replace(ol_vis=state.ol_valid)
+
+
+# ---------------------------------------------------------------------------
+# The RAMP read primitive
+# ---------------------------------------------------------------------------
+
+
+class LineRead(NamedTuple):
+    """Per-line result of a RAMP read of one order's line set."""
+
+    present: Array    # [..., L] bool — line returned to the client
+    repaired: Array   # [..., L] bool — served by the 2nd (lookback) round
+    fractured: Array  # [..., L] bool — needed but missing from round 1
+
+
+def read_lines(state: TPCCState, wl: Array, d: Array, slot: Array,
+               *, use_metadata: bool = True) -> LineRead:
+    """Two-round RAMP-Fast read of the order line sets at ``(wl, d, slot)``.
+
+    ``wl/d/slot`` are equal-shaped index arrays (shard-local warehouse).
+    With ``use_metadata=False`` the reader trusts the committed layer alone
+    (the control that *does* observe fractures).
+    """
+    L = state.ol_valid.shape[-1]
+    req_ts = state.o_ts[wl, d, slot]                       # [...,] commit ts
+    nlines = state.o_ol_cnt[wl, d, slot]                   # sibling count
+    line = jnp.arange(L).reshape((1,) * req_ts.ndim + (L,))
+    need = line < nlines[..., None]                        # [..., L]
+
+    ts = state.ol_ts[wl, d, slot]                          # [..., L]
+    match = ts == req_ts[..., None]
+    round1 = state.ol_vis[wl, d, slot] & match & need      # committed layer
+    fractured = need & ~round1
+    if not use_metadata:
+        return LineRead(round1, jnp.zeros_like(round1), fractured)
+
+    lookback = state.ol_valid[wl, d, slot] & match & need  # prepared layer
+    repaired = fractured & lookback
+    return LineRead(round1 | repaired, repaired, fractured)
+
+
+# ---------------------------------------------------------------------------
+# Order-Status (§2.6)
+# ---------------------------------------------------------------------------
+
+
+class OrderStatusResult(NamedTuple):
+    found: Array       # [B] bool — the customer has a visible order
+    balance: Array     # [B] C_BALANCE
+    entry_ts: Array    # [B] O_ENTRY_D of the order read
+    n_lines: Array     # [B] sibling count from the commit-record metadata
+    lines_read: Array  # [B] lines actually returned
+    repaired: Array    # [B] lines served by the lookback round
+    i_id: Array        # [B, L]
+    qty: Array         # [B, L]
+    amount: Array      # [B, L]
+    delivered: Array   # [B, L] bool
+
+    def fractures_observed(self) -> Array:
+        """Orders returned with an incomplete line set (never under RAMP)."""
+        return (self.found & (self.lines_read < self.n_lines)).sum()
+
+
+def apply_order_status(state: TPCCState, batch: OrderStatusBatch,
+                       w_lo: int = 0, *, use_metadata: bool = True
+                       ) -> OrderStatusResult:
+    """Customer's most recent order + its complete line set. Read-only,
+    shard-local, collective-free."""
+    wl = batch.w - w_lo
+    # most recent visible commit record for this customer (o_ts is the
+    # replica-namespaced stamp, monotone in the logical clock)
+    cand = (state.o_valid[wl, batch.d]
+            & (state.o_ts[wl, batch.d] >= 0)
+            & (state.o_c_id[wl, batch.d] == batch.c[:, None]))   # [B, OC]
+    key = jnp.where(cand, state.o_ts[wl, batch.d], -1)
+    slot = jnp.argmax(key, axis=-1).astype(jnp.int32)            # [B]
+    found = cand.any(axis=-1)
+
+    lr = read_lines(state, wl, batch.d, slot, use_metadata=use_metadata)
+    present = lr.present & found[:, None]
+    return OrderStatusResult(
+        found=found,
+        balance=state.c_balance[wl, batch.d, batch.c],
+        entry_ts=jnp.where(found, state.o_entry_d[wl, batch.d, slot], -1),
+        n_lines=jnp.where(found, state.o_ol_cnt[wl, batch.d, slot], 0),
+        lines_read=present.sum(-1).astype(jnp.int32),
+        repaired=(lr.repaired & found[:, None]).sum(-1).astype(jnp.int32),
+        i_id=jnp.where(present, state.ol_i_id[wl, batch.d, slot], -1),
+        qty=jnp.where(present, state.ol_qty[wl, batch.d, slot], 0),
+        amount=jnp.where(present, state.ol_amount[wl, batch.d, slot], 0.0),
+        delivered=present & state.ol_delivered[wl, batch.d, slot],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stock-Level (§2.8)
+# ---------------------------------------------------------------------------
+
+
+class StockLevelResult(NamedTuple):
+    low_count: Array   # [B] distinct recent items with S_QUANTITY < threshold
+    lines_read: Array  # [B] order lines returned across the scanned orders
+    repaired: Array    # [B] lines served by the lookback round
+    fractured: Array   # [B] lines a metadata-less reader would have missed
+
+
+def apply_stock_level(state: TPCCState, batch: StockLevelBatch,
+                      scale: TPCCScale, w_lo: int = 0,
+                      *, use_metadata: bool = True) -> StockLevelResult:
+    """Distinct items in the district's last 20 orders with low home stock.
+
+    The order/order-line join goes through the RAMP read (atomic visibility);
+    the stock probe reads the warehouse-local table. All gathers are local.
+    """
+    OC = scale.order_capacity
+    K = min(STOCK_LEVEL_ORDERS, OC)
+    wl = batch.w - w_lo
+    B = wl.shape[0]
+
+    next_oid = state.d_next_o_id[wl, batch.d]              # [B]
+    oid = next_oid[:, None] - 1 - jnp.arange(K)[None, :]   # [B, K]
+    in_ring = (oid >= 0) & (oid >= next_oid[:, None] - OC)
+    slot = jnp.where(in_ring, oid % OC, 0).astype(jnp.int32)
+
+    wK = jnp.broadcast_to(wl[:, None], (B, K))
+    dK = jnp.broadcast_to(batch.d[:, None], (B, K))
+    lr = read_lines(state, wK, dK, slot, use_metadata=use_metadata)
+    present = lr.present & in_ring[..., None]              # [B, K, L]
+
+    # distinct item count via a dense per-query bitmap (sentinel row I for
+    # absent lines keeps the scatter shape static)
+    I = scale.n_items
+    items = jnp.where(present, state.ol_i_id[wK, dK, slot], I)   # [B, K, L]
+    qidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], items.shape)
+    seen = jnp.zeros((B, I + 1), jnp.bool_).at[
+        qidx.reshape(-1), items.reshape(-1)].set(True)[:, :I]
+    low = seen & (state.s_quantity[wl] < batch.threshold[:, None])
+    return StockLevelResult(
+        low_count=low.sum(-1).astype(jnp.int32),
+        lines_read=present.sum((-1, -2)).astype(jnp.int32),
+        repaired=(lr.repaired & in_ring[..., None]).sum((-1, -2)).astype(jnp.int32),
+        fractured=(lr.fractured & in_ring[..., None]).sum((-1, -2)).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Delivery's read side (§2.7) — what apply_delivery consumes
+# ---------------------------------------------------------------------------
+
+
+class DeliveryRead(NamedTuple):
+    has: Array     # [W, D] an undelivered order exists
+    slot: Array    # [W, D] its ring slot
+    cust: Array    # [W, D] its customer
+    amount: Array  # [W, D] complete (RAMP-repaired) line amount sum
+    repaired: Array  # [W, D] lines the lookback round had to serve
+
+
+def delivery_read(state: TPCCState) -> DeliveryRead:
+    """Oldest undelivered order per district with its *complete* amount sum.
+
+    A fractured read here would corrupt C_BALANCE (criteria 10/12 credit the
+    delivered line total), so the scan repairs through the prepared layer —
+    the same guarantee ``apply_delivery`` bakes in."""
+    W, D, OC = state.no_valid.shape
+    key = jnp.where(state.no_valid, state.o_entry_d, jnp.iinfo(jnp.int32).max)
+    slot = jnp.argmin(key, axis=2).astype(jnp.int32)       # [W, D]
+    has = state.no_valid.any(axis=2)
+
+    wI = jnp.broadcast_to(jnp.arange(W)[:, None], (W, D))
+    dI = jnp.broadcast_to(jnp.arange(D)[None, :], (W, D))
+    lr = read_lines(state, wI, dI, slot)
+    amt = jnp.where(lr.present, state.ol_amount[wI, dI, slot], 0.0).sum(-1)
+    return DeliveryRead(has=has, slot=slot,
+                        cust=state.o_c_id[wI, dI, slot],
+                        amount=amt * has,
+                        repaired=lr.repaired.sum(-1).astype(jnp.int32))

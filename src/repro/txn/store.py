@@ -26,8 +26,18 @@ import jax.numpy as jnp
 Array = jax.Array
 
 # int64 when x64 is enabled (production); int32 otherwise (CPU tests) —
-# version stamps only need to outlast the run horizon.
-VERSION_DTYPE = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+# version stamps only need to outlast the run horizon. Resolved at *call*
+# time: enabling x64 after import must widen stamps for new tables.
+
+
+def version_dtype():
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def __getattr__(name):  # keep the old module constant working
+    if name == "VERSION_DTYPE":
+        return version_dtype()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -60,7 +70,7 @@ class Table:
                 suffix, dtype = (), spec
             cols[name] = jnp.zeros((capacity, *suffix), dtype)
         return Table(cols, jnp.zeros((capacity,), jnp.bool_),
-                     jnp.full((capacity,), -1, VERSION_DTYPE))
+                     jnp.full((capacity,), -1, version_dtype()))
 
     @property
     def capacity(self) -> int:
@@ -81,12 +91,12 @@ class Table:
             cols[name] = cols[name].at[idx].set(jnp.where(sel, vals, old))
         return Table(cols,
                      self.valid.at[idx].set(True),
-                     self.version.at[idx].max(jnp.asarray(version, VERSION_DTYPE)))
+                     self.version.at[idx].max(jnp.asarray(version, self.version.dtype)))
 
     def update(self, idx: Array, rows: Mapping[str, Array],
                version: Array) -> "Table":
         """Overwrite columns at ``idx`` if the new version is higher."""
-        version = jnp.asarray(version, VERSION_DTYPE)
+        version = jnp.asarray(version, self.version.dtype)
         newer = version > self.version[idx]
         cols = dict(self.columns)
         for name, vals in rows.items():
@@ -118,4 +128,4 @@ class Table:
 def namespaced_version(counter: Array, replica: Array | int,
                        num_replicas: int) -> Array:
     """Unique, replica-namespaced version stamps (§5.1 'choose some value')."""
-    return jnp.asarray(counter, VERSION_DTYPE) * num_replicas + replica
+    return jnp.asarray(counter, version_dtype()) * num_replicas + replica

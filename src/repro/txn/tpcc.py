@@ -75,12 +75,20 @@ class TPCCState(NamedTuple):
     o_carrier: Array  # [W, D, OC] int32 (-1 = null: undelivered)
     o_entry_d: Array  # [W, D, OC] int32 (logical timestamp)
     no_valid: Array   # [W, D, OC] bool — NEW-ORDER table presence
-    ol_valid: Array      # [W, D, OC, L] bool
+    ol_valid: Array      # [W, D, OC, L] bool — *prepared* layer (RAMP retention)
     ol_i_id: Array       # [W, D, OC, L] int32
     ol_supply_w: Array   # [W, D, OC, L] int32
     ol_qty: Array        # [W, D, OC, L] int32
     ol_amount: Array     # [W, D, OC, L]
     ol_delivered: Array  # [W, D, OC, L] bool
+    # RAMP atomic-visibility metadata (txn/ramp.py): every New-Order write set
+    # shares one replica-namespaced timestamp; the ORDER row is the commit
+    # record (ts + sibling count o_ol_cnt) and order-lines carry the same
+    # stamp. ol_vis is the *committed* layer first-round reads see; ol_valid
+    # above is the prepared layer the second (lookback) round repairs from.
+    o_ts: Array    # [W, D, OC] int32 — commit-record timestamp (-1 = none)
+    ol_ts: Array   # [W, D, OC, L] int32 — prepared-version timestamp (-1 = none)
+    ol_vis: Array  # [W, D, OC, L] bool — line visible in the committed layer
 
 
 def init_state(scale: TPCCScale, seed: int = 0, dtype=jnp.float32) -> TPCCState:
@@ -118,6 +126,9 @@ def init_state(scale: TPCCScale, seed: int = 0, dtype=jnp.float32) -> TPCCState:
         ol_qty=jnp.zeros((W, D, OC, L), jnp.int32),
         ol_amount=jnp.zeros((W, D, OC, L), dtype),
         ol_delivered=jnp.zeros((W, D, OC, L), jnp.bool_),
+        o_ts=jnp.full((W, D, OC), -1, jnp.int32),
+        ol_ts=jnp.full((W, D, OC, L), -1, jnp.int32),
+        ol_vis=jnp.zeros((W, D, OC, L), jnp.bool_),
     )
 
 
@@ -151,6 +162,23 @@ class PaymentBatch(NamedTuple):
     d: Array       # [B]
     c: Array       # [B]
     amount: Array  # [B]
+
+
+class OrderStatusBatch(NamedTuple):
+    """Order-Status (TPC-C §2.6): customer's most recent order + its lines."""
+
+    w: Array  # [B]
+    d: Array  # [B]
+    c: Array  # [B]
+
+
+class StockLevelBatch(NamedTuple):
+    """Stock-Level (TPC-C §2.8): distinct recently-ordered items whose home
+    stock sits below a threshold."""
+
+    w: Array          # [B]
+    d: Array          # [B]
+    threshold: Array  # [B] int32 (spec: 10..20)
 
 
 def generate_neworder(rng: np.random.Generator, scale: TPCCScale, batch: int,
@@ -187,6 +215,40 @@ def generate_payment(rng: np.random.Generator, scale: TPCCScale, batch: int,
         c=jnp.asarray(rng.integers(0, scale.customers, batch).astype(np.int32)),
         amount=jnp.asarray(rng.uniform(1.0, 5000.0, batch).astype(np.float32)),
     )
+
+
+def generate_order_status(rng: np.random.Generator, scale: TPCCScale,
+                          batch: int, w_lo: int = 0,
+                          w_hi: int | None = None) -> OrderStatusBatch:
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    return OrderStatusBatch(
+        w=jnp.asarray(rng.integers(w_lo, w_hi, batch).astype(np.int32)),
+        d=jnp.asarray(rng.integers(0, scale.districts, batch).astype(np.int32)),
+        c=jnp.asarray(rng.integers(0, scale.customers, batch).astype(np.int32)),
+    )
+
+
+def generate_stock_level(rng: np.random.Generator, scale: TPCCScale,
+                         batch: int, w_lo: int = 0,
+                         w_hi: int | None = None) -> StockLevelBatch:
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    return StockLevelBatch(
+        w=jnp.asarray(rng.integers(w_lo, w_hi, batch).astype(np.int32)),
+        d=jnp.asarray(rng.integers(0, scale.districts, batch).astype(np.int32)),
+        threshold=jnp.asarray(rng.integers(10, 21, batch).astype(np.int32)),
+    )
+
+
+def order_status_input_specs(batch: int) -> OrderStatusBatch:
+    f = jax.ShapeDtypeStruct
+    return OrderStatusBatch(w=f((batch,), jnp.int32), d=f((batch,), jnp.int32),
+                            c=f((batch,), jnp.int32))
+
+
+def stock_level_input_specs(batch: int) -> StockLevelBatch:
+    f = jax.ShapeDtypeStruct
+    return StockLevelBatch(w=f((batch,), jnp.int32), d=f((batch,), jnp.int32),
+                           threshold=f((batch,), jnp.int32))
 
 
 def neworder_input_specs(scale: TPCCScale, batch: int) -> NewOrderBatch:
@@ -260,7 +322,8 @@ def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
 
 def apply_neworder(state: TPCCState, batch: NewOrderBatch,
                    scale: TPCCScale,
-                   w_lo: int = 0, w_hi: int | None = None
+                   w_lo: int = 0, w_hi: int | None = None,
+                   replica: Array | int = 0, num_replicas: int = 1
                    ) -> tuple[TPCCState, StockDelta, Array]:
     """Vectorized coordination-avoiding New-Order.
 
@@ -275,10 +338,17 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
       * STOCK updates — local supply lines applied in place; remote lines
         (supply_w outside [w_lo, w_hi)) are emitted as a StockDelta outbox for
         asynchronous anti-entropy (RAMP-style; no synchronous coordination).
+      * RAMP stamping — the whole write set shares one replica-namespaced
+        timestamp ``ts * num_replicas + replica`` recorded on the ORDER row
+        (the commit record, whose o_ol_cnt doubles as the sibling-key
+        metadata) and on every order-line; line visibility (ol_vis) is
+        installed atomically here and may be *staged* by txn/ramp.py to model
+        in-flight commit propagation across partitions.
 
     Returns (new_state, remote outbox, per-txn total amounts).
     """
     w_hi = scale.n_warehouses if w_hi is None else w_hi
+    ramp_ts = batch.ts * num_replicas + replica                    # [B]
     B, L = batch.i_id.shape
     D, OC = scale.districts, scale.order_capacity
     wl = batch.w - w_lo  # shard-local home-warehouse index
@@ -304,6 +374,7 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
     o_carrier = state.o_carrier.at[wl, batch.d, slot].set(-1)
     o_entry_d = state.o_entry_d.at[wl, batch.d, slot].set(batch.ts)
     no_valid = state.no_valid.at[wl, batch.d, slot].set(True)
+    o_ts = state.o_ts.at[wl, batch.d, slot].set(ramp_ts)
 
     # ---- ORDER-LINE inserts ------------------------------------------------
     price = state.i_price[wl[:, None], batch.i_id]            # [B, L]
@@ -320,12 +391,16 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
     ol_qty = state.ol_qty.at[wB, dB, sB, lB].set(
         jnp.where(line_valid, batch.qty, 0))
     ol_amount = state.ol_amount.at[wB, dB, sB, lB].set(amount)
+    ol_ts = state.ol_ts.at[wB, dB, sB, lB].set(
+        jnp.where(line_valid, ramp_ts[:, None], -1))
+    ol_vis = state.ol_vis.at[wB, dB, sB, lB].set(line_valid)
 
     state = state._replace(
         d_next_o_id=d_next, o_valid=o_valid, o_c_id=o_c_id,
         o_ol_cnt=o_ol_cnt, o_carrier=o_carrier, o_entry_d=o_entry_d,
         no_valid=no_valid, ol_valid=ol_valid, ol_i_id=ol_i_id,
-        ol_supply_w=ol_supply, ol_qty=ol_qty, ol_amount=ol_amount)
+        ol_supply_w=ol_supply, ol_qty=ol_qty, ol_amount=ol_amount,
+        o_ts=o_ts, ol_ts=ol_ts, ol_vis=ol_vis)
 
     # ---- STOCK: local now, remote via outbox -------------------------------
     flat_w = batch.supply_w.reshape(-1)
@@ -387,8 +462,13 @@ def apply_delivery(state: TPCCState, carrier_id: Array, ts: Array) -> TPCCState:
     dI = jnp.arange(D)[None, :].repeat(W, 0)
 
     cust = state.o_c_id[wI, dI, slot]                    # [W, D]
-    lines_amt = jnp.where(state.ol_valid[wI, dI, slot],
-                          state.ol_amount[wI, dI, slot], 0.0)
+    # read side goes through the RAMP prepared layer (ol_valid + matching
+    # stamp), never the possibly-lagging visible layer: the credited amount
+    # must cover the *complete* write set even mid-propagation (txn/ramp.py).
+    line_ok = (state.ol_valid[wI, dI, slot]
+               & (state.ol_ts[wI, dI, slot]
+                  == state.o_ts[wI, dI, slot][..., None]))
+    lines_amt = jnp.where(line_ok, state.ol_amount[wI, dI, slot], 0.0)
     amt = lines_amt.sum(-1) * has                        # [W, D]
 
     no_valid = state.no_valid.at[wI, dI, slot].set(

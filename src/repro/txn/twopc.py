@@ -33,10 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils.compat import shard_map
 from repro.utils.hlo import collective_stats
 
-from . import tpcc
-from .tpcc import NewOrderBatch, TPCCScale, TPCCState
+from . import ramp, tpcc
+from .tpcc import NewOrderBatch, OrderStatusBatch, TPCCScale, TPCCState
 
 
 @dataclasses.dataclass
@@ -53,7 +54,7 @@ class TwoPCEngine:
         spec = P(self.axis_names)
         ax = self.axis_names
 
-        @functools.partial(jax.shard_map, mesh=self.mesh,
+        @functools.partial(shard_map, mesh=self.mesh,
                            in_specs=(spec, spec),
                            out_specs=(spec, spec),
                            check_vma=False)
@@ -87,16 +88,54 @@ class TwoPCEngine:
             total = jnp.where(committed, total, 0.0)
             return state, total
 
+        @functools.partial(shard_map, mesh=self.mesh,
+                           in_specs=(spec, spec),
+                           out_specs=spec,
+                           check_vma=False)
+        def _read(state: TPCCState, batch: OrderStatusBatch):
+            idx = jnp.asarray(0)
+            for a in ax:
+                idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+            w_lo = idx * self.w_per_shard
+            # lock acquisition: every shard announces its read intent and
+            # waits for a global grant — the read-lock round-trip a
+            # serializable system pays to make multi-partition reads atomic
+            # (contrast: the RAMP read repairs locally, no collectives).
+            granted = jnp.ones((batch.w.shape[0],), jnp.int32)
+            for a in reversed(ax):
+                granted = jax.lax.all_gather(granted, a)
+            res = ramp.apply_order_status(state, batch, w_lo=w_lo)
+            # release barrier: unanimous vote before results are returned
+            vote = jnp.ones((), jnp.int32)
+            for a in ax:
+                vote = jax.lax.psum(vote, a)
+            ok = (vote == self.n_shards) & (granted.sum() > 0)
+            return res._replace(found=res.found & ok)
+
         self._step = jax.jit(_step, donate_argnums=0)
+        self._read = jax.jit(_read)
 
     def step(self, state: TPCCState, batch: NewOrderBatch):
         return self._step(state, batch)
+
+    def read_step(self, state: TPCCState, batch: OrderStatusBatch):
+        """Order-Status under 2PC-style synchronized visibility: the result
+        is correct, but the hot path carries lock/commit collectives and the
+        wall clock additionally pays the commitment latency (latency.py)."""
+        return self._read(state, batch)
 
     def hot_path_collectives(self, batch_per_shard: int = 8):
         state_sds = tpcc.state_shape_dtypes(self.scale)
         batch_sds = tpcc.neworder_input_specs(
             self.scale, batch_per_shard * self.n_shards)
         text = self._step.lower(state_sds, batch_sds).compile().as_text()
+        return collective_stats(text)
+
+    def read_path_collectives(self, batch_per_shard: int = 8):
+        state_sds = tpcc.state_shape_dtypes(self.scale)
+        batch_sds = tpcc.order_status_input_specs(
+            batch_per_shard * self.n_shards)
+        text = self._read.lower(state_sds, batch_sds).compile().as_text()
         return collective_stats(text)
 
 

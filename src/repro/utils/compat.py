@@ -1,0 +1,87 @@
+"""Version portability for the JAX APIs this repo uses.
+
+The codebase targets current JAX (``jax.shard_map`` with ``check_vma``/
+``axis_names``, ``jax.set_mesh``, ``pltpu.CompilerParams``); older releases
+spell these ``jax.experimental.shard_map.shard_map`` with ``check_rep``/
+``auto``, ``with mesh:``, and ``pltpu.TPUCompilerParams``. Everything routes
+through here so call sites stay written against the new names.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+__all__ = ["shard_map", "set_mesh", "get_abstract_mesh", "cost_analysis",
+           "CompilerParams"]
+
+
+def shard_map(f=None, *, mesh=None, in_specs, out_specs,
+              check_vma: bool = True, axis_names: Any = None):
+    """``jax.shard_map`` signature on any JAX version.
+
+    ``axis_names`` is the set of *manual* axes (new API); the legacy API takes
+    the complement as ``auto``. ``mesh=None`` resolves the ambient mesh set by
+    :func:`set_mesh`. Usable directly or as a decorator factory via
+    ``functools.partial(shard_map, mesh=..., ...)``.
+    """
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        kwargs["check_vma"] = check_vma
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if mesh is None:
+            del kwargs["mesh"]
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+        if mesh is None:
+            from jax.interpreters import pxla
+            mesh = pxla.thread_resources.env.physical_mesh
+            if mesh.empty:
+                raise ValueError("shard_map: no mesh given and no ambient "
+                                 "mesh set (use compat.set_mesh)")
+            kwargs["mesh"] = mesh
+        kwargs["check_rep"] = check_vma
+        if axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if f is None:
+        return lambda g: sm(g, **kwargs)
+    return sm(f, **kwargs)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context; legacy fallback is the Mesh context manager
+    (which installs the same ambient mesh for pjit/shard_map)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh if mesh is not None else contextlib.nullcontext()
+
+
+def get_abstract_mesh():
+    """Ambient mesh (``jax.sharding.get_abstract_mesh``); legacy fallback is
+    the physical mesh installed by :func:`set_mesh`. Returns None if empty."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        return None if getattr(mesh, "empty", False) else mesh
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on any JAX version (older
+    releases return a one-dict-per-computation list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))

@@ -57,6 +57,11 @@ def test_dryrun_tpcc_zero_collective_hot_path():
         cells = json.load(open(out))
         assert cells[0]["ok"]
         assert cells[0]["collectives"]["counts"] == {}  # Definition 5 at 256 shards
+        # the RAMP read transactions at spec scale: atomic visibility with
+        # zero collectives (txn/ramp.py)
+        reads = cells[0]["ramp_reads"]
+        assert set(reads) == {"order_status", "stock_level"}
+        assert all(r["collectives"]["counts"] == {} for r in reads.values())
 
 
 @pytest.mark.slow

@@ -81,6 +81,7 @@ scale = TPCCScale(n_warehouses=8, districts=4, customers=8, n_items=64,
                   order_capacity=64, max_lines=15)
 e = single_host_engine(scale)
 print("HOTPATH:", e.prove_coordination_free(8))
+print("READS:", e.prove_read_coordination_free(4))
 ae = e.count_anti_entropy_collectives(8)
 assert ae.total_ops > 0, "anti-entropy should communicate"
 t = TwoPCEngine(scale, e.mesh, ("data",))
@@ -109,4 +110,6 @@ def test_multi_device_proof_subprocess():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "HOTPATH: collectives: NONE" in out.stdout
+    # both RAMP read transactions are collective-free on 8 real shards
+    assert out.stdout.count("collectives: NONE") == 3
     assert "OK" in out.stdout

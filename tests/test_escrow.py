@@ -1,0 +1,99 @@
+"""EscrowCounter (core/lattice.py, paper §8 escrow method): local spends on
+disjoint shares commute, overspend is rejected locally, and joins of divergent
+replica states preserve the global budget invariant."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lattice import EscrowCounter, check_lattice_laws
+
+R, BUDGET, FLOOR = 4, 100.0, 20.0
+
+
+def _make():
+    return EscrowCounter.make(R, BUDGET, floor=FLOOR)
+
+
+def test_shares_partition_headroom():
+    esc = _make()
+    assert np.isclose(float(esc.shares.sum()), BUDGET - FLOOR)
+    assert np.isclose(float(esc.remaining()), BUDGET - FLOOR)
+
+
+def test_disjoint_spends_commute():
+    """Replica-local spends target disjoint slots, so any execution order
+    yields the same state — the I-confluence that makes escrow free."""
+    ops = [(0, 5.0), (1, 7.0), (2, 19.0), (0, 3.0), (3, 20.0), (1, 1.5)]
+    final = None
+    for perm in ([0, 1, 2, 3, 4, 5], [5, 4, 3, 2, 1, 0], [2, 0, 5, 3, 1, 4]):
+        esc = _make()
+        for j in perm:
+            replica, amt = ops[j]
+            esc, ok = esc.try_spend(replica, amt)
+            assert bool(ok)
+        if final is None:
+            final = esc
+        assert np.allclose(np.asarray(esc.spent), np.asarray(final.spent))
+        assert np.allclose(np.asarray(esc.shares), np.asarray(final.shares))
+
+
+def test_overspend_rejected_and_state_unchanged():
+    esc = _make()
+    share = float(esc.shares[0])
+    esc, ok = esc.try_spend(0, share)          # spend the whole share
+    assert bool(ok)
+    before = np.asarray(esc.spent).copy()
+    esc, ok = esc.try_spend(0, 0.01)           # one cent over
+    assert not bool(ok)
+    assert np.array_equal(np.asarray(esc.spent), before)
+    # other replicas' shares are untouched and still spendable
+    esc, ok = esc.try_spend(1, 1.0)
+    assert bool(ok)
+
+
+def test_join_of_divergent_spends_preserves_budget():
+    """Two replicas diverge (each spends locally), then join: the merged
+    state reflects both spends exactly once and value stays >= floor."""
+    base = _make()
+    a, ok_a = base.try_spend(0, 10.0)
+    assert bool(ok_a)
+    b, ok_b = base.try_spend(1, 15.0)
+    assert bool(ok_b)
+    m = EscrowCounter.join(a, b)
+    assert np.isclose(float(m.spent.sum()), 25.0)
+    value = BUDGET - float(m.spent.sum())
+    assert value >= FLOOR
+    # join is idempotent under repeated anti-entropy
+    m2 = EscrowCounter.join(m, a)
+    assert np.isclose(float(m2.spent.sum()), 25.0)
+
+
+def test_worst_case_total_spend_never_breaks_floor():
+    """Even if every replica exhausts its share concurrently, the global
+    value cannot drop below the floor (sum(shares) == budget - floor)."""
+    esc = _make()
+    for r in range(R):
+        esc, ok = esc.try_spend(r, float(esc.shares[r]))
+        assert bool(ok)
+    assert np.isclose(float(esc.remaining()), 0.0)
+    assert BUDGET - float(esc.spent.sum()) >= FLOOR - 1e-5
+
+
+def test_refresh_rebalances_without_changing_value():
+    esc = _make()
+    esc, _ = esc.try_spend(0, float(esc.shares[0]))   # replica 0 exhausted
+    remaining_before = float(esc.remaining())
+    esc = esc.refresh()
+    assert np.isclose(float(esc.remaining()), remaining_before)
+    # after the amortized coordination point, replica 0 can spend again
+    esc, ok = esc.try_spend(0, 1.0)
+    assert bool(ok)
+
+
+def test_lattice_laws_on_samples():
+    base = _make()
+    a, _ = base.try_spend(0, 4.0)
+    b, _ = base.try_spend(2, 9.0)
+    c, _ = a.try_spend(3, 2.5)
+    check_lattice_laws(EscrowCounter.join, [base, a, b, c])

@@ -1,0 +1,245 @@
+"""RAMP atomic-visibility subsystem (txn/ramp.py + kernels/ramp_read.py):
+
+* randomized interleavings: readers NEVER observe a fractured New-Order
+  write set (order visible => all order-lines + metadata visible), while a
+  control reader with metadata disabled does observe fractures;
+* the compiled read path (Order-Status / Stock-Level over sharded state)
+  contains zero collective ops, verified structurally from HLO;
+* read transactions agree with a pure-numpy oracle on converged state;
+* the fused Pallas kernel matches its jnp oracle bit-exactly (interpret);
+* the 2PC-synchronized read baseline must carry collectives.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.txn import ramp, tpcc
+from repro.txn.engine import run_mixed_loop, single_host_engine
+from repro.txn.tpcc import TPCCScale, check_consistency, init_state
+from repro.txn.twopc import TwoPCEngine
+
+SCALE = TPCCScale(n_warehouses=2, districts=2, customers=8, n_items=32,
+                  order_capacity=64, max_lines=15)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return single_host_engine(SCALE)
+
+
+def _apply_batch(state, rng, ts0, batch=12):
+    b = tpcc.generate_neworder(rng, SCALE, batch, remote_frac=0.2, ts0=ts0)
+    state, _, _ = tpcc.apply_neworder(state, b, SCALE)
+    return state, b
+
+
+# ---------------------------------------------------------------------------
+# the atomic-visibility property
+# ---------------------------------------------------------------------------
+
+
+def test_randomized_interleavings_never_fracture():
+    """For arbitrary write/conceal/read/publish interleavings, the RAMP
+    reader returns complete write sets; the metadata-less control reader
+    observes fractures in the same states."""
+    rng = np.random.default_rng(0)
+    state = init_state(SCALE)
+    ts0 = 0
+    control_fractures = 0
+    checked_reads = 0
+    for trial in range(12):
+        state, b = _apply_batch(state, rng, ts0)
+        ts0 += 12
+        # conceal a random subset of committed-layer visibility bits —
+        # commit propagation caught mid-flight at a random interleaving
+        drop = jnp.asarray(rng.random(state.ol_vis.shape) < rng.uniform(0.2, 0.9))
+        staged = ramp.conceal_lines(state, drop)
+
+        queries = tpcc.OrderStatusBatch(w=b.w, d=b.d, c=b.c)
+        r = ramp.apply_order_status(staged, queries)
+        assert int(r.fractures_observed()) == 0
+        # complete sets: every found order returns exactly its sibling count
+        assert bool((~r.found | (r.lines_read == r.n_lines)).all())
+        checked_reads += int(r.found.sum())
+
+        ctl = ramp.apply_order_status(staged, queries, use_metadata=False)
+        control_fractures += int(ctl.fractures_observed())
+
+        sl = tpcc.generate_stock_level(rng, SCALE, 8)
+        sr = ramp.apply_stock_level(staged, sl, SCALE)
+        assert int((sr.fractured - sr.repaired).sum()) == 0
+        ctl_sr = ramp.apply_stock_level(staged, sl, SCALE, use_metadata=False)
+        control_fractures += int(ctl_sr.fractured.sum())
+
+        # randomly publish (commit propagation completes) or keep staging
+        if rng.random() < 0.5:
+            state = ramp.publish_lines(staged)
+    assert checked_reads > 0
+    assert control_fractures > 0, \
+        "control (metadata disabled) must observe fractures"
+
+
+def test_repair_round_serves_exactly_the_concealed_lines():
+    rng = np.random.default_rng(1)
+    state, b = _apply_batch(init_state(SCALE), rng, 0)
+    drop = jnp.asarray(rng.random(state.ol_vis.shape) < 0.5) & state.ol_vis
+    staged = ramp.conceal_lines(state, drop)
+    queries = tpcc.OrderStatusBatch(w=b.w, d=b.d, c=b.c)
+    r = ramp.apply_order_status(staged, queries)
+    # the lookback round served something, and after publish it goes quiet
+    assert int(r.repaired.sum()) > 0
+    r2 = ramp.apply_order_status(ramp.publish_lines(staged), queries)
+    assert int(r2.repaired.sum()) == 0
+    assert bool((r2.lines_read == r.lines_read).all())
+
+
+def test_delivery_read_side_repairs_amounts():
+    """Delivery must credit the COMPLETE line sum even mid-propagation —
+    a fractured read here would corrupt criteria 10/12."""
+    rng = np.random.default_rng(2)
+    state, _ = _apply_batch(init_state(SCALE), rng, 0)
+    concealed = ramp.conceal_lines(
+        state, jnp.asarray(rng.random(state.ol_vis.shape) < 0.7))
+    full = ramp.delivery_read(state)
+    staged = ramp.delivery_read(concealed)
+    assert bool(jnp.allclose(full.amount, staged.amount))
+    assert int(staged.repaired.sum()) > 0
+    # and apply_delivery's balance credit matches the repaired read
+    d1 = tpcc.apply_delivery(state, jnp.asarray(1, jnp.int32),
+                             jnp.asarray(0, jnp.int32))
+    d2 = tpcc.apply_delivery(concealed, jnp.asarray(1, jnp.int32),
+                             jnp.asarray(0, jnp.int32))
+    assert bool(jnp.allclose(d1.c_balance, d2.c_balance))
+
+
+# ---------------------------------------------------------------------------
+# oracle agreement on converged state
+# ---------------------------------------------------------------------------
+
+
+def test_order_status_matches_numpy_oracle():
+    rng = np.random.default_rng(3)
+    state = init_state(SCALE)
+    for i in range(4):
+        state, b = _apply_batch(state, rng, i * 12)
+    q = tpcc.generate_order_status(rng, SCALE, 16)
+    r = ramp.apply_order_status(state, q)
+
+    s = jax.device_get(state)
+    for k in range(16):
+        w, d, c = int(q.w[k]), int(q.d[k]), int(q.c[k])
+        mask = s.o_valid[w, d] & (s.o_c_id[w, d] == c) & (s.o_ts[w, d] >= 0)
+        assert bool(r.found[k]) == bool(mask.any())
+        if not mask.any():
+            continue
+        slot = int(np.argmax(np.where(mask, s.o_ts[w, d], -1)))
+        n = int(s.o_ol_cnt[w, d, slot])
+        assert int(r.n_lines[k]) == n
+        assert int(r.lines_read[k]) == n
+        np.testing.assert_array_equal(
+            np.asarray(r.i_id[k][:n]), s.ol_i_id[w, d, slot][:n])
+        np.testing.assert_allclose(
+            np.asarray(r.amount[k][:n]), s.ol_amount[w, d, slot][:n])
+
+
+def test_stock_level_matches_numpy_oracle():
+    rng = np.random.default_rng(4)
+    state = init_state(SCALE)
+    for i in range(6):
+        state, _ = _apply_batch(state, rng, i * 12)
+    q = tpcc.generate_stock_level(rng, SCALE, 16)
+    r = ramp.apply_stock_level(state, q, SCALE)
+
+    s = jax.device_get(state)
+    OC = SCALE.order_capacity
+    for k in range(16):
+        w, d, thr = int(q.w[k]), int(q.d[k]), int(q.threshold[k])
+        items = set()
+        nxt = int(s.d_next_o_id[w, d])
+        for oid in range(max(0, nxt - ramp.STOCK_LEVEL_ORDERS), nxt):
+            slot = oid % OC
+            n = int(s.o_ol_cnt[w, d, slot])
+            items.update(int(x) for x in s.ol_i_id[w, d, slot][:n])
+        want = sum(1 for i in items if int(s.s_quantity[w, i]) < thr)
+        assert int(r.low_count[k]) == want
+
+
+# ---------------------------------------------------------------------------
+# structural coordination-freedom + engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_read_path_zero_collectives(engine):
+    desc = engine.prove_read_coordination_free(batch_per_shard=8)
+    assert desc.count("NONE") == 2
+
+
+def test_2pc_read_baseline_has_collectives(engine):
+    two = TwoPCEngine(SCALE, engine.mesh, engine.axis_names)
+    stats = two.read_path_collectives(8)
+    assert stats.total_ops > 0, "2PC-synchronized reads must coordinate"
+
+
+def test_mixed_loop_reads_consistent(engine):
+    state = engine.shard_state(init_state(SCALE))
+    state, stats = run_mixed_loop(engine, state, batch_per_shard=8,
+                                  n_batches=6, remote_frac=0.3,
+                                  merge_every=2, seed=5)
+    assert stats.fractures_observed == 0
+    assert stats.neworders == 8 * 5 and stats.order_statuses > 0
+    assert all(check_consistency(state).values())
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel vs jnp oracle (interpret mode: bit-exact)
+# ---------------------------------------------------------------------------
+
+KERNEL_CASES = [
+    # (R, L, block_rows)
+    (8, 15, 8),
+    (64, 15, 16),
+    (128, 8, 128),
+    (256, 15, 64),
+]
+
+
+@pytest.mark.parametrize("R,L,block", KERNEL_CASES)
+def test_ramp_read_kernel_bitexact(R, L, block):
+    rng = np.random.default_rng(R * 31 + L)
+    req = jnp.asarray(rng.integers(0, 40, R).astype(np.int32))
+    nl = jnp.asarray(rng.integers(0, L + 1, R).astype(np.int32))
+    ts = jnp.asarray(rng.integers(-1, 40, (R, L)).astype(np.int32))
+    vis = jnp.asarray(rng.random((R, L)) < 0.6)
+    prep = vis | jnp.asarray(rng.random((R, L)) < 0.7)
+    amt = jnp.asarray(rng.uniform(0, 100, (R, L)).astype(np.float32))
+    iid = jnp.asarray(rng.integers(0, 999, (R, L)).astype(np.int32))
+
+    got = ops.ramp_read_select(req, nl, ts, vis, prep, amt, iid,
+                               block_rows=block)
+    want = ref.ramp_read_ref(req, nl, ts, vis, prep, amt, iid)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype and g.shape == w.shape
+        assert bool((g == w).all()), "kernel diverged from oracle"
+
+
+def test_ramp_read_kernel_repairs_like_read_lines():
+    """Kernel semantics == ramp.read_lines on real state arrays."""
+    rng = np.random.default_rng(9)
+    state, b = _apply_batch(init_state(SCALE), rng, 0)
+    staged = ramp.conceal_lines(
+        state, jnp.asarray(rng.random(state.ol_vis.shape) < 0.5))
+    wl, d = b.w, b.d
+    cand = (staged.o_valid[wl, d] & (staged.o_ts[wl, d] >= 0)
+            & (staged.o_c_id[wl, d] == b.c[:, None]))
+    slot = jnp.argmax(jnp.where(cand, staged.o_ts[wl, d], -1), -1)
+    lr = ramp.read_lines(staged, wl, d, slot)
+    present, _, _, _, lines_read, repaired = ops.ramp_read_select(
+        staged.o_ts[wl, d, slot], staged.o_ol_cnt[wl, d, slot],
+        staged.ol_ts[wl, d, slot], staged.ol_vis[wl, d, slot],
+        staged.ol_valid[wl, d, slot], staged.ol_amount[wl, d, slot],
+        staged.ol_i_id[wl, d, slot])
+    assert bool((present == lr.present).all())
+    assert bool((repaired == lr.repaired.sum(-1)).all())

@@ -1,0 +1,50 @@
+"""Version-stamp dtype is resolved at Table construction, not import time
+(enabling x64 after import must widen stamps for new tables). Runs without
+hypothesis — the property suite in test_store.py needs it."""
+
+import subprocess
+import sys
+
+import jax.numpy as jnp
+
+from repro.txn import store
+from repro.txn.store import Table, version_dtype
+
+_SUBPROC = r"""
+import jax
+from repro.txn import store
+t32 = store.Table.make(4, {"x": "float32"})
+jax.config.update("jax_enable_x64", True)   # enabled AFTER import
+t64 = store.Table.make(4, {"x": "float32"})
+assert t32.version.dtype.name == "int32", t32.version.dtype
+assert t64.version.dtype.name == "int64", t64.version.dtype
+v = store.namespaced_version(jax.numpy.asarray(7), 1, 4)
+assert v.dtype.name == "int64", v.dtype
+print("DTYPE-OK")
+"""
+
+
+def test_version_dtype_tracks_x64_flag_after_import():
+    import os
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DTYPE-OK" in out.stdout
+
+
+def test_module_constant_backcompat():
+    assert store.VERSION_DTYPE == version_dtype()
+
+
+def test_table_ops_use_constructed_dtype():
+    t = Table.make(4, {"x": jnp.float32})
+    t = t.insert(jnp.asarray([0]), {"x": jnp.asarray([1.5])},
+                 jnp.asarray([3]))
+    assert t.version.dtype == version_dtype()
+    t = t.update(jnp.asarray([0]), {"x": jnp.asarray([2.5])},
+                 jnp.asarray([5]))
+    assert int(t.version[0]) == 5 and t.version.dtype == version_dtype()

@@ -10,6 +10,7 @@ Also checks Definition 3 (convergence): merge order independence.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.systems import ALL_SYSTEM_FACTORIES, EXPECTED_CONFLUENT

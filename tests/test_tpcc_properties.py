@@ -9,6 +9,7 @@ outboxes drain (the paper's global I-validity at convergence).
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.txn import tpcc
@@ -49,7 +50,7 @@ def test_random_interleavings_converge_valid(engine, seed, plan, remote_frac):
             state = engine.payment_step(
                 state, tpcc.generate_payment(rng, SCALE, 8))
         elif op == "D":
-            state = engine.delivery_step(state)
+            state, _ = engine.delivery_step(state)
         else:  # M: merge may happen at ANY point (Definition 3)
             for ob in pending:
                 state = engine.anti_entropy(state, ob)
