@@ -54,12 +54,12 @@ def tpcc_invariants() -> tuple[list, dict]:
                   "derived": f"{n_free}/12 I-confluent (paper: 10/12)"}
 
 
-def _engine(warehouses: int, items: int = 256):
+def _engine(warehouses: int, items: int = 256, order_capacity: int = 2048):
     from repro.txn.engine import single_host_engine
     from repro.txn.tpcc import TPCCScale
 
     scale = TPCCScale(n_warehouses=warehouses, districts=10, customers=32,
-                      n_items=items, order_capacity=2048)
+                      n_items=items, order_capacity=order_capacity)
     return single_host_engine(scale)
 
 
@@ -96,15 +96,19 @@ def fig5_distributed() -> tuple[list, dict]:
     rows = []
     base = None
     for frac in (0.0, 0.01, 0.05, 0.1, 0.5, 1.0):
-        state = eng.shard_state(init_state(eng.scale))
-        state, stats = run_closed_loop(eng, state, batch_per_shard=128,
-                                       n_batches=10, remote_frac=frac,
-                                       merge_every=8, seed=2)
+        best = None
+        for _ in range(2):  # best-of-2: fused walls are small, host noisy
+            state = eng.shard_state(init_state(eng.scale))
+            state, stats = run_closed_loop(eng, state, batch_per_shard=128,
+                                           n_batches=40, remote_frac=frac,
+                                           merge_every=8, seed=2)
+            if best is None or stats.wall_seconds < best.wall_seconds:
+                best = stats
         if base is None:
-            base = stats.throughput
+            base = best.throughput
         rows.append({"remote_frac": frac,
-                     "throughput": stats.throughput,
-                     "relative": stats.throughput / base})
+                     "throughput": best.throughput,
+                     "relative": best.throughput / base})
     worst = min(r["relative"] for r in rows)
     return rows, {"name": "fig5_distributed", "us_per_call": 0.0,
                   "derived": f"worst relative throughput {worst:.2f} at 100% "
@@ -121,11 +125,15 @@ def fig6_scaling() -> tuple[list, dict]:
     from repro.txn.tpcc import init_state
 
     eng = _engine(4)
-    state = eng.shard_state(init_state(eng.scale))
-    state, stats = run_closed_loop(eng, state, batch_per_shard=128,
-                                   n_batches=10, remote_frac=0.01,
-                                   merge_every=8, seed=3)
-    per_shard = stats.throughput
+    best = None
+    for _ in range(2):
+        state = eng.shard_state(init_state(eng.scale))
+        state, stats = run_closed_loop(eng, state, batch_per_shard=128,
+                                       n_batches=40, remote_frac=0.01,
+                                       merge_every=8, seed=3)
+        if best is None or stats.wall_seconds < best.wall_seconds:
+            best = stats
+    per_shard = best.throughput
     rows = [{"servers": n, "modeled_throughput": per_shard * n,
              "basis": "zero-collective hot path (dry-run verified)"}
             for n in (1, 10, 25, 50, 100, 200, 256)]
@@ -231,6 +239,79 @@ def _ramp_kernel_bitexact(state, os_batch, eng) -> bool:
     return all(bool((g == w).all()) for g, w in zip(got, want))
 
 
+def fused_vs_dispatch() -> tuple[list, dict]:
+    """The fused megastep executor (txn/executor.py) vs per-batch dispatch
+    on the full five-transaction mix — three drivers, identical stream:
+
+      * legacy   — the pre-executor ``run_mixed_loop``: one jitted call per
+        transaction type per batch, ``int(...)`` stat reads forcing a device
+        sync every batch, one anti-entropy call per queued outbox;
+      * dispatch — same per-batch calls with the host round-trips fixed
+        (on-device stat accumulators, one concatenated drain per window);
+      * fused    — merge_every full-mix iterations per donated lax.scan,
+        ring-buffered outboxes, on-device counters, one transfer at run end.
+
+    Also re-proves the hot scan collective-free and checks all paths land on
+    bit-identical state (acceptance: fused >= 3x over legacy)."""
+    from repro.txn.engine import run_mixed_loop
+    from repro.txn.executor import get_fused_executor
+    from repro.txn.tpcc import init_state
+
+    # tier-1-like single-device scale (order_capacity in the tier-1 range,
+    # comfortably > max orders per district for this run length)
+    eng = _engine(8, order_capacity=256)
+    kw = dict(batch_per_shard=64, n_batches=64, merge_every=8,
+              read_frac=0.25, remote_frac=0.01, seed=5)
+    modes = {"legacy": dict(fused=False, legacy=True),
+             "dispatch": dict(fused=False),
+             "fused": dict(fused=True)}
+    # alternate repetitions and keep each driver's best run: wall clocks on
+    # a shared/noisy host otherwise dominate the comparison
+    best, final_state = {}, {}
+    for _ in range(3):
+        for name, mode in modes.items():
+            s = eng.shard_state(init_state(eng.scale))
+            s, m = run_mixed_loop(eng, s, **mode, **kw)
+            if name not in best or m.wall_seconds < best[name].wall_seconds:
+                best[name], final_state[name] = m, s
+
+    legacy, disp, fused = best["legacy"], best["dispatch"], best["fused"]
+    bitexact = all(
+        all(jax.tree.leaves(jax.tree.map(
+            lambda a, b: bool((a == b).all()),
+            final_state["fused"], final_state[other])))
+        for other in ("legacy", "dispatch"))
+    proof = get_fused_executor(eng, ring_rows=kw["merge_every"]) \
+        .prove_megastep_coordination_free(chunk_len=kw["merge_every"])
+    speedup = fused.throughput / legacy.throughput
+    rows = [{
+        "legacy_txn_s": legacy.throughput,
+        "dispatch_txn_s": disp.throughput,
+        "fused_txn_s": fused.throughput,
+        "speedup_vs_legacy": speedup,
+        "speedup_vs_dispatch": fused.throughput / disp.throughput,
+        "legacy_wall_s": legacy.wall_seconds,
+        "dispatch_wall_s": disp.wall_seconds,
+        "fused_wall_s": fused.wall_seconds,
+        "batch_per_shard": kw["batch_per_shard"],
+        "n_batches": kw["n_batches"],
+        "merge_every": kw["merge_every"],
+        "bitexact_final_state": bitexact,
+        "fractures": fused.fractures_observed,
+        "megastep_proof": proof,
+    }]
+    assert bitexact, "the three drivers diverged"
+    assert fused.fractures_observed == 0
+    return rows, {
+        "name": "fused_vs_dispatch",
+        "us_per_call": fused.wall_seconds * 1e6 / max(fused.committed, 1),
+        "derived": (f"fused {fused.throughput:,.0f} vs legacy "
+                    f"{legacy.throughput:,.0f} txn/s ({speedup:.1f}x, "
+                    f"target >=3x; fixed dispatch {disp.throughput:,.0f}, "
+                    f"{fused.throughput / disp.throughput:.1f}x); bit-exact: "
+                    f"{bitexact}; hot scan {proof}")}
+
+
 def theorem1_dynamics() -> tuple[list, dict]:
     """§4.2: empirical Theorem-1 check over all example systems."""
     from repro.core.systems import ALL_SYSTEM_FACTORIES, EXPECTED_CONFLUENT
@@ -266,5 +347,5 @@ def straggler_merge() -> tuple[list, dict]:
 
 
 ALL = [table2, fig3_commitment, tpcc_invariants, fig4_neworder,
-       fig5_distributed, fig6_scaling, ramp_read, theorem1_dynamics,
-       straggler_merge]
+       fig5_distributed, fig6_scaling, ramp_read, fused_vs_dispatch,
+       theorem1_dynamics, straggler_merge]

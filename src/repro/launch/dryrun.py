@@ -155,15 +155,18 @@ def lower_decode(arch: str, cfg: ModelConfig, shape: ShapeConfig, mesh):
                        ).lower(params_abs, cache_specs, token_spec), None
 
 
-def lower_tpcc(mesh, batch_per_shard: int = 16):
+def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
     """The paper's own workload at spec cardinalities.
 
-    Returns (lowered New-Order hot path, {name: lowered RAMP read path}) —
-    both halves of the coordination-freedom claim: writes avoid coordination
-    (Definition 5) and reads stay atomic without it (RAMP, txn/ramp.py).
+    Returns (lowered New-Order hot path, {name: lowered RAMP read path},
+    lowered fused megastep) — the coordination-freedom claims: writes avoid
+    coordination (Definition 5), reads stay atomic without it (RAMP,
+    txn/ramp.py), and the fused full-mix scan (txn/executor.py) keeps both
+    properties for ``chunk_len`` whole iterations per dispatch.
     """
     from repro.configs.tpcc import config as tpcc_config
     from repro.txn.engine import Engine
+    from repro.txn.executor import FusedExecutor
 
     axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
     n_shards = 1
@@ -175,7 +178,10 @@ def lower_tpcc(mesh, batch_per_shard: int = 16):
         "order_status": eng.lowered_order_status(batch_per_shard),
         "stock_level": eng.lowered_stock_level(batch_per_shard),
     }
-    return eng.lowered_neworder(batch_per_shard), reads
+    megastep = FusedExecutor(eng, ring_rows=chunk_len).lowered_megastep(
+        chunk_len=chunk_len, batch_per_shard=batch_per_shard,
+        read_per_shard=max(1, batch_per_shard // 4))
+    return eng.lowered_neworder(batch_per_shard), reads, megastep
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +265,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
             "layout": layout}
     if arch == "tpcc":
         try:
-            lowered, reads = lower_tpcc(mesh)
+            lowered, reads, megastep = lower_tpcc(mesh)
             cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
             # the RAMP read transactions must compile collective-free at
             # spec scale — the structural atomic-visibility-without-
@@ -272,6 +278,14 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
                     raise AssertionError(
                         f"RAMP {name} read path has collectives at spec "
                         f"scale: {r['collectives']['describe']}")
+            # the fused megastep (txn/executor.py): chunk_len full-mix
+            # iterations in one scan must stay collective-free at spec scale
+            m = analyze(megastep, mesh, "tpcc-fused-megastep", ())
+            cell["fused_megastep"] = m
+            if m["collectives"]["counts"]:
+                raise AssertionError(
+                    f"fused megastep has collectives at spec scale: "
+                    f"{m['collectives']['describe']}")
             cell["ok"] = True
         except Exception as e:
             cell.update(ok=False, error=f"{type(e).__name__}: {e}",

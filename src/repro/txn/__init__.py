@@ -8,6 +8,8 @@ from .tpcc import (TPCCScale, TPCCState, NewOrderBatch, OrderStatusBatch,
 from .ramp import (OrderStatusResult, StockLevelResult, apply_order_status,
                    apply_stock_level, conceal_lines, delivery_read,
                    publish_lines, read_lines)
-from .engine import (Engine, MixStats, RunStats, run_closed_loop,
-                     run_mixed_loop, single_host_engine)
+from .engine import (Engine, MixStats, RunStats, generate_mix_batches,
+                     run_closed_loop, run_mixed_loop, single_host_engine)
+from .executor import (FusedExecutor, MixChunk, MixCounters, OutboxRing,
+                       get_fused_executor, run_fused_loop, stack_chunks)
 from .twopc import TwoPCEngine, run_closed_loop_2pc

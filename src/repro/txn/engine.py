@@ -80,19 +80,9 @@ class Engine:
             out_specs=self.state_spec,
             check_vma=False)
         def _anti_entropy(state: TPCCState, outbox: StockDelta):
-            # gather every shard's outbox (the asynchronous exchange)
-            gathered = jax.tree.map(
-                lambda x: _multi_axis_all_gather(x, ax), outbox)
-            dst = gathered.dst_w.reshape(-1)
-            i_id = gathered.i_id.reshape(-1)
-            qty = gathered.qty.reshape(-1)
-            valid = gathered.valid.reshape(-1)
             w_lo = self._shard_index() * self.w_per_shard
-            own = valid & (dst >= w_lo) & (dst < w_lo + self.w_per_shard)
-            # every remote entry is, by construction, remote to its owner
-            return tpcc.apply_stock_updates(
-                state, dst - w_lo, i_id, qty, own,
-                jnp.ones_like(own))
+            return gather_and_apply_outbox(state, outbox, ax, w_lo,
+                                           self.w_per_shard)
 
         @functools.partial(
             shard_map, mesh=self.mesh,
@@ -240,6 +230,28 @@ def _multi_axis_all_gather(x, axis_names):
     return x
 
 
+def gather_and_apply_outbox(state: TPCCState, outbox, axis_names,
+                            w_lo, w_per_shard) -> TPCCState:
+    """The anti-entropy body, shared by Engine.anti_entropy and the fused
+    executor's ring drain (one definition keeps their semantics — ownership
+    predicate, remote flag, gather layout — bit-identical): all-gather every
+    shard's outbox and apply the entries this shard owns.
+
+    ``outbox`` is any pytree with dst_w/i_id/qty/valid leaves of equal total
+    size (a StockDelta, or the executor's [rows, R] OutboxRing).
+    """
+    gathered = jax.tree.map(
+        lambda x: _multi_axis_all_gather(x, axis_names), outbox)
+    dst = gathered.dst_w.reshape(-1)
+    i_id = gathered.i_id.reshape(-1)
+    qty = gathered.qty.reshape(-1)
+    valid = gathered.valid.reshape(-1)
+    own = valid & (dst >= w_lo) & (dst < w_lo + w_per_shard)
+    # every outbox entry is, by construction, remote to its owner
+    return tpcc.apply_stock_updates(state, dst - w_lo, i_id, qty, own,
+                                    jnp.ones_like(own))
+
+
 def single_host_engine(scale: TPCCScale) -> Engine:
     """Engine over the current process's devices (1 on CPU tests)."""
     devs = np.array(jax.devices())
@@ -264,50 +276,108 @@ class RunStats:
         return self.committed / self.wall_seconds if self.wall_seconds else 0.0
 
 
+def _concat_outboxes(pending: list[StockDelta]) -> StockDelta:
+    """All queued outboxes as ONE StockDelta, applied in a single
+    anti-entropy call (vs the seed's one jitted call per outbox)."""
+    if len(pending) == 1:
+        return pending[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *pending)
+
+
+def _tree_copy(t):
+    return jax.tree.map(lambda x: x.copy(), t)
+
+
+def _neworder_batch(engine: Engine, rng: np.random.Generator,
+                    batch_per_shard: int, remote_frac: float,
+                    ts0: int) -> tuple[NewOrderBatch, int]:
+    """One home-partitioned New-Order batch (shard s gets txns for its
+    warehouse range); returns (batch, advanced ts0). The single source of
+    the stream layout — the fused/dispatch bit-exactness contract rests on
+    every driver drawing identical streams."""
+    parts = []
+    for s in range(engine.n_shards):
+        parts.append(tpcc.generate_neworder(
+            rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
+            w_lo=s * engine.w_per_shard,
+            w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
+        ts0 += batch_per_shard
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts), ts0
+
+
+def generate_neworder_stream(engine: Engine, *, batch_per_shard: int,
+                             n_batches: int, remote_frac: float,
+                             rng: np.random.Generator,
+                             ts0: int = 0) -> list[NewOrderBatch]:
+    """Home-partitioned New-Order batches for a whole run."""
+    batches = []
+    for _ in range(n_batches):
+        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
+                                     remote_frac, ts0)
+        batches.append(batch)
+    return batches
+
+
 def run_closed_loop(engine: Engine, state: TPCCState, *,
                     batch_per_shard: int, n_batches: int,
                     remote_frac: float = 0.01, merge_every: int = 8,
                     seed: int = 0,
                     payments: bool = False, deliveries: bool = False,
+                    fused: bool = True,
                     ) -> tuple[TPCCState, RunStats]:
     """Drive the engine: New-Order hot path + periodic anti-entropy.
 
+    With ``fused=True`` (default) the loop runs on the chunked-scan
+    megastep executor (txn/executor.py): merge_every iterations per jitted
+    call, outboxes ring-buffered on device, one batched drain per chunk.
+    ``fused=False`` keeps the per-batch dispatch driver as a baseline.
+
     Batches are pre-generated (the generator is not the system under test);
-    wall time covers device execution only.
+    wall time covers device execution only — compilation is triggered on
+    throwaway copies, so all ``n_batches`` batches are timed.
     """
     import time
 
     rng = np.random.default_rng(seed)
-    scale = engine.scale
     B = batch_per_shard * engine.n_shards
-    # home-partitioned batches: shard s gets txns for its warehouse range
-    batches = []
-    ts0 = 0
-    for _ in range(n_batches):
-        parts = []
-        for s in range(engine.n_shards):
-            parts.append(tpcc.generate_neworder(
-                rng, scale, batch_per_shard, remote_frac=remote_frac,
-                w_lo=s * engine.w_per_shard,
-                w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
-            ts0 += batch_per_shard
-        batches.append(jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
-    pay_batches = [tpcc.generate_payment(rng, scale, B) for _ in range(n_batches)] \
-        if payments else [None] * n_batches
+    batches = generate_neworder_stream(
+        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+        remote_frac=remote_frac, rng=rng)
+    # payments home-partitioned like every other stream: shard s only ever
+    # sees its own warehouses (positional sharding of the batch)
+    pay_batches = [_home_partitioned(tpcc.generate_payment, rng, engine,
+                                     batch_per_shard)
+                   for _ in range(n_batches)] if payments else None
+
+    if fused:
+        from .executor import get_fused_executor, stack_chunks
+
+        chunks = stack_chunks(batches, pay_batches, None, None, merge_every)
+        ex = get_fused_executor(engine, ring_rows=merge_every,
+                                deliveries=deliveries)
+        state, counters, wall = ex.run(state, chunks)
+        del counters  # New-Order-only stats are statically known
+        return state, RunStats(committed=B * n_batches, batches=n_batches,
+                               anti_entropy_rounds=len(chunks),
+                               wall_seconds=wall)
+
+    # -- per-batch dispatch baseline ----------------------------------------
+    # warmup compiles on copies (timed loop then covers every batch)
+    warm = _tree_copy(state)
+    warm, outbox, _ = engine.neworder_step(warm, batches[0])
+    if payments:
+        warm = engine.payment_step(warm, pay_batches[0])
+    if deliveries:
+        warm, _ = engine.delivery_step(warm)
+    for k in {min(merge_every, n_batches), n_batches % merge_every} - {0}:
+        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
+    jax.block_until_ready(warm)
+    del warm, outbox
 
     stats = RunStats()
-    # warmup compile
-    state, outbox, _ = engine.neworder_step(state, batches[0])
-    state = engine.anti_entropy(state, outbox)
-    if payments:
-        state = engine.payment_step(state, pay_batches[0])
-    if deliveries:
-        state, _ = engine.delivery_step(state)
-    jax.block_until_ready(state)
-
     t0 = time.perf_counter()
     pending: list[StockDelta] = []
-    for i in range(1, n_batches):
+    for i in range(n_batches):
         state, outbox, totals = engine.neworder_step(state, batches[i])
         pending.append(outbox)
         stats.committed += B
@@ -316,15 +386,13 @@ def run_closed_loop(engine: Engine, state: TPCCState, *,
             state = engine.payment_step(state, pay_batches[i])
         if deliveries:
             state, _ = engine.delivery_step(state)
-        if (i % merge_every) == 0 or i == n_batches - 1:
-            # anti-entropy drains the queued outboxes (convergence may lag
-            # the hot path arbitrarily — Definition 3 — but must happen)
-            for ob in pending:
-                state = engine.anti_entropy(state, ob)
+        if len(pending) == merge_every or i == n_batches - 1:
+            # anti-entropy drains the queued outboxes in one call
+            # (convergence may lag the hot path arbitrarily — Definition 3
+            # — but must happen)
+            state = engine.anti_entropy(state, _concat_outboxes(pending))
             stats.anti_entropy_rounds += 1
             pending = []
-    for ob in pending:
-        state = engine.anti_entropy(state, ob)
     jax.block_until_ready(state)
     stats.wall_seconds = time.perf_counter() - t0
     return state, stats
@@ -368,10 +436,34 @@ def _home_partitioned(gen, rng, engine: Engine, per_shard: int, **kw):
     return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
+def generate_mix_batches(engine: Engine, *, batch_per_shard: int,
+                         n_batches: int, remote_frac: float = 0.01,
+                         read_frac: float = 0.25, seed: int = 0):
+    """Pre-generate the five-transaction-mix batch streams (home-partitioned,
+    one rng). Shared by the fused executor and the per-batch dispatch driver
+    so both execute the identical transaction stream."""
+    rng = np.random.default_rng(seed)
+    per_shard_reads = max(1, int(batch_per_shard * read_frac))
+    ts0 = 0
+    no_batches, pay_batches, os_batches, sl_batches = [], [], [], []
+    for _ in range(n_batches):
+        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
+                                     remote_frac, ts0)
+        no_batches.append(batch)
+        pay_batches.append(_home_partitioned(
+            tpcc.generate_payment, rng, engine, batch_per_shard))
+        os_batches.append(_home_partitioned(
+            tpcc.generate_order_status, rng, engine, per_shard_reads))
+        sl_batches.append(_home_partitioned(
+            tpcc.generate_stock_level, rng, engine, per_shard_reads))
+    return no_batches, pay_batches, os_batches, sl_batches
+
+
 def run_mixed_loop(engine: Engine, state: TPCCState, *,
                    batch_per_shard: int, n_batches: int,
                    remote_frac: float = 0.01, merge_every: int = 8,
                    read_frac: float = 0.25, seed: int = 0,
+                   fused: bool = True, legacy: bool = False,
                    ) -> tuple[TPCCState, MixStats]:
     """Drive the full TPC-C mix: New-Order + Payment writes, periodic
     Delivery, and the RAMP read transactions (Order-Status, Stock-Level).
@@ -380,45 +472,64 @@ def run_mixed_loop(engine: Engine, state: TPCCState, *,
     workload the paper's RAMP-F prototype measures. ``read_frac`` sizes the
     read batches relative to the write batches (the spec mix is ~8% reads;
     the default stresses the read path harder).
+
+    ``fused=True`` (default) runs on the megastep executor
+    (txn/executor.py): merge_every full-mix iterations per jitted scan,
+    outboxes ring-buffered on device, MixStats accumulated as on-device
+    counters with ONE host transfer at run end. ``fused=False`` keeps the
+    per-batch dispatch driver (one jitted call per transaction type per
+    batch) as the comparison baseline; both modes execute the identical
+    pre-generated stream with the same drain cadence and produce
+    bit-identical final state (tests/test_executor.py).
+
+    ``legacy=True`` selects the dispatch path (overriding ``fused``) and
+    additionally restores the original driver's host behavior —
+    per-iteration ``int(...)`` stat reads (a device sync every batch) and
+    one jitted anti-entropy call per queued outbox — as the benchmark
+    baseline for what the executor eliminates.
     """
     import time
 
-    rng = np.random.default_rng(seed)
+    if legacy:
+        fused = False
+    if fused:
+        from .executor import run_fused_loop
+
+        return run_fused_loop(engine, state, batch_per_shard=batch_per_shard,
+                              n_batches=n_batches, remote_frac=remote_frac,
+                              merge_every=merge_every, read_frac=read_frac,
+                              seed=seed)
+
     B = batch_per_shard * engine.n_shards
     R = max(1, int(batch_per_shard * read_frac)) * engine.n_shards
-    ts0 = 0
-    no_batches, pay_batches, os_batches, sl_batches = [], [], [], []
-    for _ in range(n_batches):
-        parts = []
-        for s in range(engine.n_shards):
-            parts.append(tpcc.generate_neworder(
-                rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
-                w_lo=s * engine.w_per_shard,
-                w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
-            ts0 += batch_per_shard
-        no_batches.append(jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
-        pay_batches.append(_home_partitioned(
-            tpcc.generate_payment, rng, engine, batch_per_shard))
-        os_batches.append(_home_partitioned(
-            tpcc.generate_order_status, rng, engine,
-            max(1, int(batch_per_shard * read_frac))))
-        sl_batches.append(_home_partitioned(
-            tpcc.generate_stock_level, rng, engine,
-            max(1, int(batch_per_shard * read_frac))))
+    no_batches, pay_batches, os_batches, sl_batches = generate_mix_batches(
+        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+        remote_frac=remote_frac, read_frac=read_frac, seed=seed)
+
+    # warmup compiles on copies (one per transaction type + drain shapes);
+    # the timed loop then covers every batch
+    warm = _tree_copy(state)
+    warm, outbox, _ = engine.neworder_step(warm, no_batches[0])
+    warm = engine.payment_step(warm, pay_batches[0])
+    warm, _ = engine.delivery_step(warm)
+    res = (engine.order_status_step(warm, os_batches[0]),
+           engine.stock_level_step(warm, sl_batches[0]))
+    drain_shapes = {1} if legacy else \
+        {min(merge_every, n_batches), n_batches % merge_every} - {0}
+    for k in drain_shapes:
+        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
+    jax.block_until_ready((warm, res))
+    del warm, outbox, res
 
     stats = MixStats()
-    # warmup compiles (one per transaction type)
-    state, outbox, _ = engine.neworder_step(state, no_batches[0])
-    state = engine.anti_entropy(state, outbox)
-    state = engine.payment_step(state, pay_batches[0])
-    state, _ = engine.delivery_step(state)
-    os_res = engine.order_status_step(state, os_batches[0])
-    sl_res = engine.stock_level_step(state, sl_batches[0])
-    jax.block_until_ready((state, os_res, sl_res))
-
+    zero = 0 if legacy else jnp.zeros((), jnp.int32)
+    # on-device stat accumulators: no per-iteration host round-trips (the
+    # seed's int(...) reads — restored under ``legacy`` — forced a device
+    # sync every batch)
+    found_acc, fract_acc, rep_acc, del_acc = zero, zero, zero, zero
     t0 = time.perf_counter()
     pending: list[StockDelta] = []
-    for i in range(1, n_batches):
+    for i in range(n_batches):
         state, outbox, _ = engine.neworder_step(state, no_batches[i])
         pending.append(outbox)
         stats.neworders += B
@@ -429,22 +540,39 @@ def run_mixed_loop(engine: Engine, state: TPCCState, *,
         sl_res = engine.stock_level_step(state, sl_batches[i])
         stats.order_statuses += R
         stats.stock_levels += R
-        stats.reads_found += int(os_res.found.sum())
-        stats.fractures_observed += int(os_res.fractures_observed())
-        stats.fractures_observed += int(
-            (sl_res.fractured - sl_res.repaired).sum())
-        stats.lines_repaired += int(os_res.repaired.sum()
+        if legacy:
+            # seed behavior: host-side int() reads force a device sync
+            # every single batch
+            found_acc = found_acc + int(os_res.found.sum())
+            fract_acc = fract_acc + int(os_res.fractures_observed()) + int(
+                (sl_res.fractured - sl_res.repaired).sum())
+            rep_acc = rep_acc + int(os_res.repaired.sum()
                                     + sl_res.repaired.sum())
+        else:
+            found_acc = found_acc + os_res.found.sum()
+            fract_acc = (fract_acc + os_res.fractures_observed()
+                         + (sl_res.fractured - sl_res.repaired).sum())
+            rep_acc = rep_acc + os_res.repaired.sum() + sl_res.repaired.sum()
 
         state, delivered = engine.delivery_step(state)
-        stats.deliveries += int(delivered.sum())
-        if (i % merge_every) == 0 or i == n_batches - 1:
-            for ob in pending:
-                state = engine.anti_entropy(state, ob)
+        del_acc = (del_acc + int(delivered.sum())) if legacy \
+            else del_acc + delivered.sum()
+        if len(pending) == merge_every or i == n_batches - 1:
+            # one batched drain of all queued outboxes (Definition 3:
+            # convergence may lag the hot path, but must happen);
+            # legacy mode keeps the seed's one jitted call per outbox
+            if legacy:
+                for ob in pending:
+                    state = engine.anti_entropy(state, ob)
+            else:
+                state = engine.anti_entropy(state, _concat_outboxes(pending))
             stats.anti_entropy_rounds += 1
             pending = []
-    for ob in pending:
-        state = engine.anti_entropy(state, ob)
-    jax.block_until_ready(state)
+    jax.block_until_ready((state, found_acc, fract_acc, rep_acc, del_acc))
     stats.wall_seconds = time.perf_counter() - t0
+    # single host transfer for the data-dependent counters
+    stats.reads_found = int(found_acc)
+    stats.fractures_observed = int(fract_acc)
+    stats.lines_repaired = int(rep_acc)
+    stats.deliveries = int(del_acc)
     return state, stats

@@ -1,0 +1,416 @@
+"""Fused on-device megastep executor for the full TPC-C mix.
+
+The paper's throughput claims (§6, 25x over serializable New-Order) are
+about the *coordination-free hot path*; a closed loop that re-enters Python
+between transactions measures host dispatch instead. This module removes the
+host from the hot path entirely:
+
+* **megastep** — pre-generated batches are stacked along a leading axis and
+  ``merge_every`` iterations of the five-transaction mix (New-Order, Payment,
+  RAMP Order-Status, RAMP Stock-Level, Delivery) run inside ONE jitted,
+  donated :func:`jax.lax.scan`. Remote-stock outboxes are written into a
+  fixed-size on-device ring buffer (one row per scan step) and every MixStats
+  counter is accumulated in an on-device int32 pytree — zero host transfers
+  and zero collectives inside the scan, asserted structurally from the
+  compiled HLO (:meth:`FusedExecutor.prove_megastep_coordination_free`,
+  mirroring ``Engine.prove_coordination_free``).
+
+* **chunk cadence** — an outer *Python* loop advances one chunk
+  (= ``merge_every`` scan steps) at a time. Between chunks a single batched
+  anti-entropy call all-gathers the whole ring buffer and applies every
+  queued remote stock update at once (one collective program per chunk,
+  replacing the seed's one-jitted-call-per-outbox drain). This keeps the
+  paper's separation intact and *provable*: the scan megastep compiles with
+  no collective ops (Definition 5 on the hot path), while convergence
+  (Definition 3) lives in the drain, off the critical path, at a cadence the
+  host controls.
+
+* **donation** — state, ring buffer, and counters are donated through both
+  the megastep and the drain, so the executor reuses one set of device
+  buffers for the entire run (no doubled live state; tests assert the input
+  buffers are actually consumed and the compiled module carries
+  ``input_output_alias``).
+
+Why the drain order cannot change results: stock counters are commutative
+scatter-adds over integer-valued quantities (exact in f32 well below 2**24),
+and the decrement-then-restock rule keeps ``s_quantity`` inside the 91-wide
+window [10, 100] — one representative per residue class mod 91 — so any
+grouping of the same deltas converges to bit-identical state. This is what
+makes the fused executor's chunked drain interchangeable with the per-batch
+driver's sequential drain (tests/test_executor.py asserts bit-exactness).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.compat import shard_map
+from repro.utils.hlo import assert_no_collectives, collective_stats
+
+from . import ramp, tpcc
+from .engine import Engine, MixStats, gather_and_apply_outbox
+from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
+                   StockLevelBatch, TPCCState)
+
+Array = jax.Array
+
+
+class OutboxRing(NamedTuple):
+    """Fixed-size on-device ring of per-step remote-stock outboxes.
+
+    Row ``i % rows`` holds scan step ``i``'s COO outbox (capacity R = B * L
+    entries, ``valid``-masked). The ring is drained — and its valid bits
+    cleared — by :meth:`FusedExecutor.drain` between chunks; the scan never
+    runs longer than ``rows`` steps without a drain.
+    """
+
+    dst_w: Array  # [rows, R] int32 destination warehouse
+    i_id: Array   # [rows, R] int32
+    qty: Array    # [rows, R] int32
+    valid: Array  # [rows, R] bool
+
+    @property
+    def rows(self) -> int:
+        return self.valid.shape[0]
+
+
+class MixCounters(NamedTuple):
+    """On-device MixStats accumulators, one lane per shard ([n_shards] int32
+    globally, [1] per shard inside the megastep). Transferred to the host
+    exactly once, after the run's final ``block_until_ready``."""
+
+    neworders: Array
+    payments: Array
+    order_statuses: Array
+    stock_levels: Array
+    deliveries: Array
+    reads_found: Array
+    fractures_observed: Array
+    lines_repaired: Array
+
+
+class MixChunk(NamedTuple):
+    """``chunk_len`` pre-generated batches stacked along a leading axis.
+
+    ``payment`` / ``order_status`` / ``stock_level`` may be None to run a
+    reduced mix (e.g. the New-Order-only closed loop); being pytree
+    structure, that choice is static per compile.
+    """
+
+    neworder: NewOrderBatch
+    payment: PaymentBatch | None
+    order_status: OrderStatusBatch | None
+    stock_level: StockLevelBatch | None
+
+    @property
+    def chunk_len(self) -> int:
+        return self.neworder.w.shape[0]
+
+
+def stack_chunks(no_batches: Sequence[NewOrderBatch],
+                 pay_batches: Sequence[PaymentBatch] | None,
+                 os_batches: Sequence[OrderStatusBatch] | None,
+                 sl_batches: Sequence[StockLevelBatch] | None,
+                 merge_every: int) -> list[MixChunk]:
+    """Group per-step batches into stacked MixChunks of <= merge_every steps."""
+    stack = lambda parts: jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+    chunks = []
+    for lo in range(0, len(no_batches), merge_every):
+        hi = min(lo + merge_every, len(no_batches))
+        sl = slice(lo, hi)
+        chunks.append(MixChunk(
+            neworder=stack(no_batches[sl]),
+            payment=stack(pay_batches[sl]) if pay_batches else None,
+            order_status=stack(os_batches[sl]) if os_batches else None,
+            stock_level=stack(sl_batches[sl]) if sl_batches else None))
+    return chunks
+
+
+@dataclasses.dataclass
+class FusedExecutor:
+    """Chunked-scan executor over an :class:`Engine`'s mesh and scale.
+
+    ``ring_rows`` bounds the steps a chunk may take between drains (defaults
+    to 8, the usual ``merge_every``); ``deliveries`` statically includes the
+    per-step Delivery transaction.
+    """
+
+    engine: Engine
+    ring_rows: int = 8
+    deliveries: bool = True
+
+    def __post_init__(self):
+        eng = self.engine
+        scale = eng.scale
+        ax = eng.axis_names
+        state_spec = eng.state_spec
+        shard1_spec = jax.sharding.PartitionSpec(None, ax)  # dim 1 = batch
+        count_spec = eng.batch_spec
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, count_spec, shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec),
+            check_vma=False)
+        def _megastep(state: TPCCState, ring: OutboxRing,
+                      counters: MixCounters, chunk: MixChunk):
+            idx = eng._shard_index()
+            w_lo = idx * eng.w_per_shard
+            rows = ring.valid.shape[0]
+
+            def step(carry, xs):
+                state, ring, cnt = carry
+                no_b, pay_b, os_b, sl_b, i = xs
+                B = no_b.w.shape[0]
+                state, delta, _ = tpcc.apply_neworder(
+                    state, no_b, scale, w_lo=w_lo,
+                    w_hi=w_lo + eng.w_per_shard,
+                    replica=idx, num_replicas=eng.n_shards)
+                ring = OutboxRing(*(
+                    jax.lax.dynamic_update_index_in_dim(r, v, i % rows, 0)
+                    for r, v in zip(ring, delta)))
+                cnt = cnt._replace(neworders=cnt.neworders + B)
+                if pay_b is not None:
+                    state = tpcc.apply_payment(state, pay_b, w_lo=w_lo)
+                    cnt = cnt._replace(payments=cnt.payments + pay_b.w.shape[0])
+                if os_b is not None:
+                    os_res = ramp.apply_order_status(state, os_b, w_lo=w_lo)
+                    cnt = cnt._replace(
+                        order_statuses=cnt.order_statuses + os_b.w.shape[0],
+                        reads_found=cnt.reads_found
+                        + os_res.found.sum().astype(jnp.int32),
+                        fractures_observed=cnt.fractures_observed
+                        + os_res.fractures_observed().astype(jnp.int32),
+                        lines_repaired=cnt.lines_repaired
+                        + os_res.repaired.sum().astype(jnp.int32))
+                if sl_b is not None:
+                    sl_res = ramp.apply_stock_level(state, sl_b, scale,
+                                                    w_lo=w_lo)
+                    cnt = cnt._replace(
+                        stock_levels=cnt.stock_levels + sl_b.w.shape[0],
+                        fractures_observed=cnt.fractures_observed
+                        + (sl_res.fractured - sl_res.repaired).sum()
+                        .astype(jnp.int32),
+                        lines_repaired=cnt.lines_repaired
+                        + sl_res.repaired.sum().astype(jnp.int32))
+                if self.deliveries:
+                    n_del = state.no_valid.any(axis=2).sum()
+                    state = tpcc.apply_delivery(
+                        state, jnp.asarray(1, jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                    cnt = cnt._replace(
+                        deliveries=cnt.deliveries + n_del.astype(jnp.int32))
+                return (state, ring, cnt), None
+
+            T = chunk.neworder.w.shape[0]
+            xs = (chunk.neworder, chunk.payment, chunk.order_status,
+                  chunk.stock_level, jnp.arange(T))
+            (state, ring, counters), _ = jax.lax.scan(
+                step, (state, ring, counters), xs)
+            return state, ring, counters
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec),
+            out_specs=(state_spec, shard1_spec),
+            check_vma=False)
+        def _drain(state: TPCCState, ring: OutboxRing):
+            # one batched anti-entropy round: gather every shard's whole ring
+            # (all queued outboxes at once) and apply the entries we own —
+            # the same body Engine.anti_entropy runs per outbox
+            w_lo = eng._shard_index() * eng.w_per_shard
+            state = gather_and_apply_outbox(state, ring, ax, w_lo,
+                                            eng.w_per_shard)
+            return state, ring._replace(valid=jnp.zeros_like(ring.valid))
+
+        # donation: the executor owns ONE live copy of state/ring/counters
+        # for the whole run — every call consumes its buffers and hands the
+        # same allocation back (input_output_alias in the compiled module)
+        self._megastep = jax.jit(_megastep, donate_argnums=(0, 1, 2))
+        self._drain = jax.jit(_drain, donate_argnums=(0, 1))
+
+    # -- device buffers ------------------------------------------------------
+
+    def init_ring(self, batch_per_shard: int) -> OutboxRing:
+        # committed to the run sharding up front: the jit cache keys on input
+        # shardings, so uncommitted first-call buffers would force a second
+        # compile once the megastep's (committed) outputs loop back in
+        sh = jax.sharding.NamedSharding(
+            self.engine.mesh, jax.sharding.PartitionSpec(
+                None, self.engine.axis_names))
+        R = batch_per_shard * self.engine.n_shards * self.engine.scale.max_lines
+        z = lambda dt: jax.device_put(jnp.zeros((self.ring_rows, R), dt), sh)
+        return OutboxRing(z(jnp.int32), z(jnp.int32), z(jnp.int32),
+                          z(jnp.bool_))
+
+    def init_counters(self) -> MixCounters:
+        sh = jax.sharding.NamedSharding(
+            self.engine.mesh, jax.sharding.PartitionSpec(
+                self.engine.axis_names))
+        # distinct buffers per field: donation must not alias two arguments
+        return MixCounters(*(
+            jax.device_put(jnp.zeros((self.engine.n_shards,), jnp.int32), sh)
+            for _ in MixCounters._fields))
+
+    # -- execution -----------------------------------------------------------
+
+    def megastep(self, state: TPCCState, ring: OutboxRing,
+                 counters: MixCounters, chunk: MixChunk):
+        """Run one chunk (<= ring_rows mix iterations) fully on device."""
+        if chunk.chunk_len > self.ring_rows:
+            raise ValueError(f"chunk of {chunk.chunk_len} steps exceeds the "
+                             f"{self.ring_rows}-row outbox ring")
+        return self._megastep(state, ring, counters, chunk)
+
+    def drain(self, state: TPCCState, ring: OutboxRing):
+        """Batched anti-entropy over the whole ring; clears its valid bits."""
+        return self._drain(state, ring)
+
+    def run(self, state: TPCCState, chunks: Sequence[MixChunk],
+            *, warmup: bool = True) -> tuple[TPCCState, MixCounters, float]:
+        """Drive all chunks: scan megastep + one drain per chunk, a single
+        final host sync. Returns (state, counters, wall_seconds); wall time
+        excludes compilation (triggered on throwaway copies) and batch prep.
+        """
+        batch_per_shard = chunks[0].neworder.w.shape[1] // self.engine.n_shards
+        state = self.engine.shard_state(state)  # commit: stable jit cache key
+        ring = self.init_ring(batch_per_shard)
+        counters = self.init_counters()
+        if warmup:
+            copy = lambda t: jax.tree.map(lambda x: x.copy(), t)
+            for T in sorted({c.chunk_len for c in chunks}):
+                chunk = next(c for c in chunks if c.chunk_len == T)
+                w = self.megastep(copy(state), copy(ring), copy(counters),
+                                  chunk)
+                jax.block_until_ready(self.drain(w[0], w[1]))
+
+        t0 = time.perf_counter()
+        for chunk in chunks:
+            state, ring, counters = self.megastep(state, ring, counters,
+                                                  chunk)
+            state, ring = self.drain(state, ring)
+        jax.block_until_ready((state, counters))
+        return state, counters, time.perf_counter() - t0
+
+    # -- structural proofs ---------------------------------------------------
+
+    def _ring_specs(self, batch_per_shard: int) -> OutboxRing:
+        R = batch_per_shard * self.engine.n_shards * self.engine.scale.max_lines
+        f = jax.ShapeDtypeStruct
+        return OutboxRing(f((self.ring_rows, R), jnp.int32),
+                          f((self.ring_rows, R), jnp.int32),
+                          f((self.ring_rows, R), jnp.int32),
+                          f((self.ring_rows, R), jnp.bool_))
+
+    def _counter_specs(self) -> MixCounters:
+        f = jax.ShapeDtypeStruct((self.engine.n_shards,), jnp.int32)
+        return MixCounters(*(f for _ in MixCounters._fields))
+
+    def _arg_specs(self, chunk_len: int, batch_per_shard: int,
+                   read_per_shard: int, payments: bool, reads: bool):
+        eng = self.engine
+        stack = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((chunk_len,) + s.shape, s.dtype), t)
+        B = batch_per_shard * eng.n_shards
+        R = read_per_shard * eng.n_shards
+        f = jax.ShapeDtypeStruct
+        chunk = MixChunk(
+            neworder=stack(tpcc.neworder_input_specs(eng.scale, B)),
+            payment=stack(PaymentBatch(f((B,), jnp.int32), f((B,), jnp.int32),
+                                       f((B,), jnp.int32), f((B,), jnp.float32)))
+            if payments else None,
+            order_status=stack(tpcc.order_status_input_specs(R))
+            if reads else None,
+            stock_level=stack(tpcc.stock_level_input_specs(R))
+            if reads else None)
+        return (tpcc.state_shape_dtypes(eng.scale),
+                self._ring_specs(batch_per_shard), self._counter_specs(),
+                chunk)
+
+    def lowered_megastep(self, chunk_len: int = 8, batch_per_shard: int = 8,
+                         read_per_shard: int = 2, payments: bool = True,
+                         reads: bool = True):
+        return self._megastep.lower(
+            *self._arg_specs(chunk_len, batch_per_shard, read_per_shard,
+                             payments, reads))
+
+    def prove_megastep_coordination_free(self, chunk_len: int = 8,
+                                         batch_per_shard: int = 8,
+                                         read_per_shard: int = 2) -> str:
+        """Definition 5 on the fused hot path: merge_every full-mix
+        iterations compile to ZERO collective ops."""
+        text = self.lowered_megastep(chunk_len, batch_per_shard,
+                                     read_per_shard).compile().as_text()
+        assert_no_collectives(text, context="fused TPC-C megastep")
+        return collective_stats(text).describe()
+
+    def count_drain_collectives(self, batch_per_shard: int = 8):
+        text = self._drain.lower(
+            tpcc.state_shape_dtypes(self.engine.scale),
+            self._ring_specs(batch_per_shard)).compile().as_text()
+        return collective_stats(text)
+
+
+def get_fused_executor(engine: Engine, ring_rows: int = 8,
+                       deliveries: bool = True) -> FusedExecutor:
+    """Memoized per-engine executor: repeated runs (benchmark sweeps, the
+    closed-loop drivers) reuse one jit cache instead of recompiling."""
+    cache = getattr(engine, "_fused_executors", None)
+    if cache is None:
+        cache = engine._fused_executors = {}
+    key = (ring_rows, deliveries)
+    if key not in cache:
+        cache[key] = FusedExecutor(engine, ring_rows=ring_rows,
+                                   deliveries=deliveries)
+    return cache[key]
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop driver on the fused executor
+# ---------------------------------------------------------------------------
+
+
+def counters_to_stats(counters: MixCounters, *, anti_entropy_rounds: int,
+                      wall_seconds: float) -> MixStats:
+    c = jax.device_get(counters)
+    return MixStats(
+        neworders=int(c.neworders.sum()),
+        payments=int(c.payments.sum()),
+        order_statuses=int(c.order_statuses.sum()),
+        stock_levels=int(c.stock_levels.sum()),
+        deliveries=int(c.deliveries.sum()),
+        anti_entropy_rounds=anti_entropy_rounds,
+        reads_found=int(c.reads_found.sum()),
+        fractures_observed=int(c.fractures_observed.sum()),
+        lines_repaired=int(c.lines_repaired.sum()),
+        wall_seconds=wall_seconds)
+
+
+def run_fused_loop(engine: Engine, state: TPCCState, *,
+                   batch_per_shard: int, n_batches: int,
+                   remote_frac: float = 0.01, merge_every: int = 8,
+                   read_frac: float = 0.25, seed: int = 0,
+                   ) -> tuple[TPCCState, MixStats]:
+    """The full five-transaction mix on the fused executor.
+
+    Batch streams are generated exactly as the per-batch dispatch driver
+    (``run_mixed_loop(..., fused=False)``) generates them, so the two are
+    comparable transaction-for-transaction — and bit-exact in final state.
+    """
+    from .engine import generate_mix_batches
+
+    no_b, pay_b, os_b, sl_b = generate_mix_batches(
+        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+        remote_frac=remote_frac, read_frac=read_frac, seed=seed)
+    chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
+    ex = get_fused_executor(engine, ring_rows=merge_every, deliveries=True)
+    state, counters, wall = ex.run(state, chunks)
+    return state, counters_to_stats(counters,
+                                    anti_entropy_rounds=len(chunks),
+                                    wall_seconds=wall)

@@ -62,6 +62,9 @@ def test_dryrun_tpcc_zero_collective_hot_path():
         reads = cells[0]["ramp_reads"]
         assert set(reads) == {"order_status", "stock_level"}
         assert all(r["collectives"]["counts"] == {} for r in reads.values())
+        # the fused full-mix megastep (txn/executor.py) is collective-free
+        # at spec scale too
+        assert cells[0]["fused_megastep"]["collectives"]["counts"] == {}
 
 
 @pytest.mark.slow

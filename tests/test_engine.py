@@ -30,7 +30,8 @@ def test_closed_loop_converges_consistent(engine):
                                    n_batches=8, remote_frac=0.2,
                                    merge_every=3, payments=True,
                                    deliveries=True, seed=0)
-    assert stats.committed == 16 * 7
+    # every batch is timed now (warmup compiles on throwaway copies)
+    assert stats.committed == 16 * 8
     c = check_consistency(state)
     assert all(c.values()), c
 
@@ -84,6 +85,11 @@ print("HOTPATH:", e.prove_coordination_free(8))
 print("READS:", e.prove_read_coordination_free(4))
 ae = e.count_anti_entropy_collectives(8)
 assert ae.total_ops > 0, "anti-entropy should communicate"
+from repro.txn.executor import FusedExecutor
+ex = FusedExecutor(e, ring_rows=4)
+print("MEGASTEP:", ex.prove_megastep_coordination_free(
+    chunk_len=4, batch_per_shard=4, read_per_shard=2))
+assert ex.count_drain_collectives(4).total_ops > 0, "drain should communicate"
 t = TwoPCEngine(scale, e.mesh, ("data",))
 tc = t.hot_path_collectives(8)
 assert tc.total_ops > 0, "2PC hot path must coordinate"
@@ -98,7 +104,8 @@ print("OK")
 
 @pytest.mark.slow
 def test_multi_device_proof_subprocess():
-    """8 simulated devices: hot path free, anti-entropy & 2PC coordinate.
+    """8 simulated devices: hot path + fused megastep free, anti-entropy,
+    ring drain & 2PC coordinate.
 
     Runs in a subprocess so the main test process keeps 1 CPU device.
     """
@@ -110,6 +117,8 @@ def test_multi_device_proof_subprocess():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "HOTPATH: collectives: NONE" in out.stdout
-    # both RAMP read transactions are collective-free on 8 real shards
-    assert out.stdout.count("collectives: NONE") == 3
+    assert "MEGASTEP: collectives: NONE" in out.stdout
+    # New-Order, both RAMP reads, AND the fused full-mix megastep are
+    # collective-free on 8 real shards
+    assert out.stdout.count("collectives: NONE") == 4
     assert "OK" in out.stdout

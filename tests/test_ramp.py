@@ -189,7 +189,8 @@ def test_mixed_loop_reads_consistent(engine):
                                   n_batches=6, remote_frac=0.3,
                                   merge_every=2, seed=5)
     assert stats.fractures_observed == 0
-    assert stats.neworders == 8 * 5 and stats.order_statuses > 0
+    # every batch is timed now (warmup compiles on throwaway copies)
+    assert stats.neworders == 8 * 6 and stats.order_statuses > 0
     assert all(check_consistency(state).values())
 
 

@@ -74,9 +74,13 @@ def test_remote_lines_go_to_outbox_not_state():
     n_remote = int(((b.supply_w != 0) &
                     (np.arange(15)[None, :] < b.n_lines[:, None])).sum())
     assert int(jax.device_get(delta.valid).sum()) == n_remote
-    # outbox entries are compacted to a dense prefix
-    v = np.asarray(delta.valid)
-    assert v[:n_remote].all() and not v[n_remote:].any()
+    # outbox entries correspond positionally to the remote lines (the drain
+    # applies by valid mask; the old dense-prefix compaction is gone)
+    v = np.asarray(delta.valid).reshape(8, 15)
+    remote = (b.supply_w != 0) & (np.arange(15)[None, :] < b.n_lines[:, None])
+    assert np.array_equal(v, remote)
+    assert np.array_equal(np.asarray(delta.dst_w).reshape(8, 15)[remote],
+                          b.supply_w[remote])
 
 
 def test_payment_maintains_materialized_sums():
