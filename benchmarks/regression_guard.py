@@ -1,0 +1,73 @@
+"""Benchmark-regression guard for CI.
+
+Compares a freshly measured ``fused_vs_dispatch`` row against the committed
+``BENCH_fused_executor.json`` baseline and fails (exit 1) when the fused
+executor's speedup over the legacy driver drops more than ``tolerance``
+below the committed value — a >20% perf regression on the hot path fails CI
+instead of silently riding along until the next manual benchmark read.
+
+The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
+the fresh measurement when the fresh speedup is higher, and leaves it alone
+otherwise. A rolling baseline (always refreshed) would let a slow sequence
+of sub-20% drops compound without ever failing; anchoring the floor to the
+best measurement ever committed makes the guard cumulative.
+
+  python -m benchmarks.regression_guard BENCH_fused_executor.json \
+      fresh.json --promote
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def load_speedup(path: str, field: str) -> float:
+    with open(path) as f:
+        data = json.load(f)
+    return float(data["fused_vs_dispatch"][0][field])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("committed", help="baseline JSON committed on main")
+    ap.add_argument("fresh", help="JSON from the current run")
+    ap.add_argument("--field", default="speedup_vs_legacy")
+    ap.add_argument("--tolerance", type=float, default=0.8,
+                    help="fresh must reach tolerance x committed (default "
+                         "0.8: fail on a >20%% drop)")
+    ap.add_argument("--promote", action="store_true",
+                    help="after a passing check, overwrite the committed "
+                         "baseline with the fresh JSON iff it improved")
+    ap.add_argument("--max-jump", type=float, default=1.25,
+                    help="never promote a fresh speedup more than this "
+                         "factor above the baseline (default 1.25): one "
+                         "lucky quiet-runner measurement must not become a "
+                         "floor that honest runs cannot meet")
+    args = ap.parse_args(argv)
+
+    committed = load_speedup(args.committed, args.field)
+    fresh = load_speedup(args.fresh, args.field)
+    floor = committed * args.tolerance
+    print(f"{args.field}: committed {committed:.2f}x, fresh {fresh:.2f}x, "
+          f"floor {floor:.2f}x")
+    if fresh < floor:
+        print(f"REGRESSION: fused-executor {args.field} dropped "
+              f">{(1 - args.tolerance) * 100:.0f}% below the committed "
+              f"baseline")
+        return 1
+    if args.promote and committed < fresh <= committed * args.max_jump:
+        shutil.copyfile(args.fresh, args.committed)
+        print(f"promoted: baseline ratcheted up to {fresh:.2f}x")
+    elif args.promote and fresh > committed * args.max_jump:
+        print(f"outlier: fresh {fresh:.2f}x exceeds {args.max_jump:.2f}x "
+              f"the baseline — likely runner noise, baseline unchanged")
+    else:
+        print("ok: within tolerance (baseline unchanged)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

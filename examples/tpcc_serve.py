@@ -2,8 +2,11 @@
 run TPC-C New-Order + Payment + Delivery against the coordination-avoiding
 engine with batched request streams, prove the hot path (and the fused
 megastep executor's whole scan) coordination-free, compare against both the
-per-batch dispatch driver and the 2PC baseline, and audit all twelve
-consistency criteria.
+per-batch dispatch driver and the 2PC baseline, audit all twelve consistency
+criteria — and demonstrate the PLANNER-WIRED hybrid: the same engine under
+three declared stock invariants lands in three plan-selected execution
+regimes (merge / escrow / 2PC), with the strict-stock escrow regime audited
+for conservation and compared against the strict 2PC fallback.
 
 Run:  PYTHONPATH=src python examples/tpcc_serve.py [--batches 40]
 """
@@ -14,10 +17,13 @@ import time
 import jax
 import numpy as np
 
-from repro.txn.engine import run_closed_loop, single_host_engine
+from repro.txn.audit import assert_audit
+from repro.txn.engine import (plan_engine, run_closed_loop, run_escrow_loop,
+                              single_host_engine)
 from repro.txn.executor import get_fused_executor
 from repro.txn.latency import DelayModel, simulate
-from repro.txn.tpcc import TPCCScale, check_consistency, init_state
+from repro.txn.tpcc import (TPCCScale, check_consistency, init_state,
+                            tpcc_state_specs)
 from repro.txn.twopc import TwoPCEngine, run_closed_loop_2pc
 
 
@@ -42,6 +48,9 @@ def main() -> None:
     ae = engine.count_anti_entropy_collectives(8)
     print("anti-entropy (async):", ae.describe())
 
+    print("\n-- the coordination plan (core/planner over the TPC-C schema) --")
+    print(engine.plan.summary())
+
     print("\n-- full mix: New-Order + Payment + Delivery (criteria audit) --")
     state = engine.shard_state(init_state(scale))
     state, _ = run_closed_loop(
@@ -52,6 +61,7 @@ def main() -> None:
     ok = sum(criteria.values())
     print(f"consistency criteria: {ok}/12 hold "
           f"{'✓' if ok == 12 else '✗ ' + str(criteria)}")
+    print("independent audit:", assert_audit(state).describe())
 
     print("\n-- New-Order throughput (fused executor vs per-batch dispatch) --")
     state = engine.shard_state(init_state(scale))
@@ -84,6 +94,48 @@ def main() -> None:
     print("2PC hot path:", two.hot_path_collectives(8).describe())
     print(f"\ncoordination-avoiding speedup: "
           f"{stats.throughput / max(stats2.throughput, 1e-9):.2f}x")
+
+    print("\n-- three regimes, one invariant knob (plan-selected) --")
+    for mode in ("restock", "strict", "serial"):
+        from repro.core.planner import plan
+        entry = plan(tpcc_state_specs(mode)).entry("stock.s_quantity")
+        print(f"  stock_invariant={mode:8s} -> {entry.coord_class.value} "
+              f"[{entry.strategy.value}]")
+
+    print("\n-- escrow regime: strict s_quantity >= 0 without hot-path "
+          "coordination --")
+    es = single_host_engine(scale, stock_invariant="strict")
+    print("escrow hot path:", es.prove_coordination_free(8))
+    print("share refresh (the only collective):",
+          es.count_refresh_collectives().describe())
+    s3 = es.shard_state(init_state(scale)._replace(
+        s_quantity=init_state(scale).s_quantity * 20))
+    q0 = s3.s_quantity.copy()
+    s3, esc, st3 = run_escrow_loop(
+        es, s3, batch_per_shard=args.batch_per_shard,
+        n_batches=args.batches, remote_frac=args.remote_frac,
+        merge_every=8, refresh_every=2, mix=False, fused=True)
+    print(f"escrow:     {st3.neworders / st3.wall_seconds:,.0f} committed "
+          f"txn/s ({st3.aborts} atomic aborts, {st3.refreshes} refreshes)")
+    print("escrow audit:", assert_audit(s3, escrow=esc, initial_stock=q0,
+                                        strict_stock=True).describe())
+
+    two_strict = plan_engine(scale, engine.mesh, engine.axis_names,
+                             stock_invariant="serial")
+    s4 = es.shard_state(init_state(scale)._replace(
+        s_quantity=init_state(scale).s_quantity * 20))
+    q04 = s4.s_quantity.copy()
+    s4, st4 = run_closed_loop_2pc(
+        two_strict, s4, batch_per_shard=args.batch_per_shard,
+        n_batches=args.batches, remote_frac=args.remote_frac,
+        commit_latency_s=per_batch)
+    thr4 = st4.committed / max(st4.wall_seconds, 1e-9)
+    print(f"2PC strict: {thr4:,.0f} committed txn/s "
+          f"({st4.aborted} aborts, incl. commitment latency)")
+    print("2PC strict audit:", assert_audit(s4, initial_stock=q04,
+                                            strict_stock=True).describe())
+    print(f"\nescrow over strict-2PC speedup: "
+          f"{st3.neworders / st3.wall_seconds / max(thr4, 1e-9):.1f}x")
 
 
 if __name__ == "__main__":

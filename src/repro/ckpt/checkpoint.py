@@ -168,9 +168,13 @@ def restore(directory: str, man: Manifest, abstract: PyTree,
 
 def latest_manifest(directory: str) -> Optional[Manifest]:
     """Newest committed (sequentially-named) manifest, else newest temp."""
+    # exactly "ckpt-NNNNNN.manifest.json": temp ids are random hex and can
+    # begin with six digits too, so also require the dot right after the
+    # sequence number (else a temp manifest with seq_id=None can win the
+    # sort and shadow the committed one)
     committed = sorted(f for f in os.listdir(directory)
                        if f.startswith("ckpt-") and f.endswith(".manifest.json")
-                       and f[5:11].isdigit())
+                       and f[5:11].isdigit() and f[11:12] == ".")
     if committed:
         with open(os.path.join(directory, committed[-1])) as f:
             return Manifest.from_json(f.read())

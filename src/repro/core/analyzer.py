@@ -163,7 +163,8 @@ def classify(invariant: Invariant, op: Op) -> Verdict:
                   "checks suffice (Table 2)")
 
     if k is InvariantKind.LIST_POSITION:
-        if o in (OpKind.LIST_MUTATE, OpKind.INSERT, OpKind.DELETE, OpKind.UPDATE):
+        if o in (OpKind.LIST_MUTATE, OpKind.INSERT, OpKind.DELETE,
+                 OpKind.CASCADING_DELETE, OpKind.UPDATE):
             return _v(NOT_CONFLUENT, Strategy.SYNC_COORDINATION,
                       "HEAD=/TAIL=/length= depend on global order/cardinality "
                       "which merge perturbs (Table 2)")

@@ -140,6 +140,16 @@ def plan_states(specs: Sequence[StateSpec]) -> CoordinationPlan:
     return CoordinationPlan(tuple(plan_state(s) for s in specs))
 
 
+def plan(specs: Sequence[StateSpec]) -> CoordinationPlan:
+    """The planner's public entry point: classify every declared state
+    element and return the CoordinationPlan a runtime consumes to choose its
+    per-element execution regime (repro.txn.engine.Engine does exactly this
+    at construction: FREE -> local merge path, ESCROW -> pre-partitioned
+    shares with amortized refresh, REQUIRED -> the synchronous 2PC engine).
+    """
+    return plan_states(specs)
+
+
 # ---------------------------------------------------------------------------
 # The standard training-loop state registry.
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.utils import compat
@@ -159,10 +160,13 @@ def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
     """The paper's own workload at spec cardinalities.
 
     Returns (lowered New-Order hot path, {name: lowered RAMP read path},
-    lowered fused megastep) — the coordination-freedom claims: writes avoid
-    coordination (Definition 5), reads stay atomic without it (RAMP,
-    txn/ramp.py), and the fused full-mix scan (txn/executor.py) keeps both
-    properties for ``chunk_len`` whole iterations per dispatch.
+    lowered fused megastep, lowered escrow hot path, escrow engine) — the
+    coordination-freedom claims: writes avoid coordination (Definition 5),
+    reads stay atomic without it (RAMP, txn/ramp.py), the fused full-mix
+    scan (txn/executor.py) keeps both properties for ``chunk_len`` whole
+    iterations per dispatch, and the plan-selected ESCROW regime's strict-
+    stock New-Order (txn/tpcc.py apply_neworder_escrow) is collective-free
+    between share refreshes even at spec scale.
     """
     from repro.configs.tpcc import config as tpcc_config
     from repro.txn.engine import Engine
@@ -181,7 +185,46 @@ def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
     megastep = FusedExecutor(eng, ring_rows=chunk_len).lowered_megastep(
         chunk_len=chunk_len, batch_per_shard=batch_per_shard,
         read_per_shard=max(1, batch_per_shard // 4))
-    return eng.lowered_neworder(batch_per_shard), reads, megastep
+    eng_escrow = Engine(scale, mesh, axes, stock_invariant="strict")
+    escrow = eng_escrow.lowered_neworder_escrow(batch_per_shard)
+    return (eng.lowered_neworder(batch_per_shard), reads, megastep, escrow,
+            eng_escrow)
+
+
+_ESCROW_AUDIT_MEMO: dict = {}
+
+
+def tpcc_escrow_audit_cell() -> dict:
+    """A small CONCRETE escrow run + consistency audit inside the dry-run:
+    tier-1 scale on one of this process's devices, strict stock + escrow
+    conservation checked by the independent oracle (txn/audit.py).
+
+    Memoized: the run is mesh-independent (it always builds its own
+    1-device mesh), so a multi-mesh sweep pays the compile+run cost once.
+    """
+    if _ESCROW_AUDIT_MEMO:
+        return dict(_ESCROW_AUDIT_MEMO)
+    from jax.sharding import Mesh
+
+    from repro.txn.audit import audit_tpcc
+    from repro.txn.engine import Engine, run_escrow_loop
+    from repro.txn.tpcc import TPCCScale, init_state
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    scale = TPCCScale(n_warehouses=4, districts=4, customers=8, n_items=64,
+                      order_capacity=128, max_lines=15)
+    eng = Engine(scale, mesh, ("data",), stock_invariant="strict")
+    state = eng.shard_state(init_state(scale))
+    q0 = state.s_quantity.copy()
+    state, esc, stats = run_escrow_loop(
+        eng, state, batch_per_shard=8, n_batches=6, merge_every=2,
+        refresh_every=2, seed=0, mix=False, fused=False)
+    rep = audit_tpcc(state, escrow=esc, initial_stock=q0, strict_stock=True)
+    _ESCROW_AUDIT_MEMO.update(
+        committed=stats.neworders, aborts=stats.aborts,
+        refreshes=stats.refreshes, audit_ok=rep.ok,
+        audit_failures=rep.failures)
+    return dict(_ESCROW_AUDIT_MEMO)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +308,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
             "layout": layout}
     if arch == "tpcc":
         try:
-            lowered, reads, megastep = lower_tpcc(mesh)
+            lowered, reads, megastep, escrow, eng_escrow = lower_tpcc(mesh)
             cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
             # the RAMP read transactions must compile collective-free at
             # spec scale — the structural atomic-visibility-without-
@@ -286,6 +329,22 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
                 raise AssertionError(
                     f"fused megastep has collectives at spec scale: "
                     f"{m['collectives']['describe']}")
+            # the plan-selected ESCROW regime (strict s_quantity >= 0): the
+            # hot path must stay collective-free at spec scale while the
+            # share refresh — the regime's only collective — must gather
+            esc = analyze(escrow, mesh, "tpcc-escrow-neworder", ())
+            cell["escrow_neworder"] = esc
+            if esc["collectives"]["counts"]:
+                raise AssertionError(
+                    f"escrow hot path has collectives at spec scale: "
+                    f"{esc['collectives']['describe']}")
+            if eng_escrow.count_refresh_collectives().total_ops == 0:
+                raise AssertionError("escrow refresh must communicate")
+            # concrete tier-1-scale escrow run + consistency audit
+            cell["escrow_audit"] = tpcc_escrow_audit_cell()
+            if not cell["escrow_audit"]["audit_ok"]:
+                raise AssertionError(
+                    f"escrow audit failed: {cell['escrow_audit']}")
             cell["ok"] = True
         except Exception as e:
             cell.update(ok=False, error=f"{type(e).__name__}: {e}",

@@ -1,0 +1,113 @@
+"""TPC-C consistency-audit oracle (spec §3.3.2-style conditions).
+
+An independent, host-side auditor for final (converged, outboxes drained)
+states: instead of trusting the engine's own accounting, it re-derives every
+spec condition directly from the table arrays —
+
+  * payment flow:   W_YTD == Σ D_YTD == Σ H_AMOUNT (criteria 1/8/9);
+  * order flow:     D_NEXT_O_ID == #orders (dense ids from 0, monotone),
+                    #NEW-ORDER + #delivered == #orders, per-order O_OL_CNT
+                    == its line count (criteria 2-6, 11);
+  * delivery flow:  carrier/delivered-line/balance bookkeeping (7, 10, 12);
+  * strict stock:   s_quantity >= 0 everywhere AND the conservation law
+                    s_quantity + s_ytd == initial stock per (warehouse,
+                    item) cell — no unit sold twice, none lost;
+  * escrow:         the global EscrowCounter covers the stock exactly:
+                    Σ_replicas (shares - spent) == s_quantity per cell and
+                    is never negative — total admitted spend can never
+                    exceed the inventory the shares partition (paper §8).
+
+Every closed-loop test and the serve example end by calling
+:func:`assert_audit`; the benchmark rows carry ``audit_ok``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from .tpcc import TPCCState, check_consistency
+
+
+@dataclasses.dataclass
+class AuditReport:
+    ok: bool
+    failures: list[str]
+    checks: dict[str, bool]
+
+    def describe(self) -> str:
+        if self.ok:
+            return f"audit OK ({len(self.checks)} conditions)"
+        return "audit FAILED: " + ", ".join(self.failures)
+
+
+def audit_tpcc(state: TPCCState, *, escrow=None, initial_stock=None,
+               strict_stock: bool = False, atol: float = 1e-2) -> AuditReport:
+    """Audit a drained state. ``escrow``/``initial_stock``/``strict_stock``
+    enable the escrow-regime conditions (pass the final EscrowCounter and
+    the pre-run ``s_quantity`` array)."""
+    s = jax.device_get(state)
+    checks: dict[str, bool] = {}
+
+    # -- payment flow --------------------------------------------------------
+    checks["w_ytd_eq_sum_d_ytd"] = bool(
+        np.allclose(s.w_ytd, s.d_ytd.sum(-1), atol=atol))
+    checks["d_ytd_eq_history"] = bool(
+        np.allclose(s.d_ytd, s.h_amount_sum, atol=atol))
+
+    # -- order flow ----------------------------------------------------------
+    order_count = s.o_valid.sum(-1)
+    no_count = s.no_valid.sum(-1)
+    delivered = (s.o_valid & ~s.no_valid).sum(-1)
+    checks["d_next_o_id_monotone"] = bool(np.all(s.d_next_o_id >= 0))
+    checks["d_next_o_id_counts_orders"] = bool(
+        np.array_equal(s.d_next_o_id, order_count))
+    checks["order_neworder_delivered_consistent"] = bool(
+        np.array_equal(no_count + delivered, order_count))
+    checks["o_ol_cnt_matches_lines"] = bool(
+        np.all(np.where(s.o_valid, s.o_ol_cnt, 0) == s.ol_valid.sum(-1)))
+
+    # -- delivery flow -------------------------------------------------------
+    deliv_order = s.o_valid & (s.o_carrier >= 0)
+    checks["carrier_iff_delivered"] = bool(
+        np.all((s.o_carrier < 0) == (s.no_valid | ~s.o_valid)))
+    checks["delivered_lines_match_orders"] = bool(
+        np.all(s.ol_delivered == (s.ol_valid & deliv_order[..., None])))
+    checks["c_balance_materialized"] = bool(
+        np.allclose(s.c_balance, s.c_delivered_sum - s.c_ytd_payment,
+                    atol=atol))
+
+    # -- the full twelve criteria, as a cross-check --------------------------
+    checks["twelve_criteria"] = all(check_consistency(state, atol).values())
+
+    # -- strict-stock / escrow conditions ------------------------------------
+    if strict_stock or escrow is not None:
+        checks["stock_nonnegative"] = bool(np.all(s.s_quantity >= 0))
+    if initial_stock is not None:
+        q0 = np.asarray(jax.device_get(initial_stock), np.int64)
+        sold = np.asarray(np.rint(s.s_ytd), np.int64)  # int-valued f32
+        checks["stock_conservation"] = bool(
+            np.array_equal(s.s_quantity.astype(np.int64) + sold, q0))
+        checks["spend_bounded_by_inventory"] = bool(np.all(sold <= q0))
+    if escrow is not None:
+        e = jax.device_get(escrow)
+        remaining = e.shares.sum(0).astype(np.int64) \
+            - e.spent.sum(0).astype(np.int64)
+        checks["escrow_remaining_nonnegative"] = bool(np.all(remaining >= 0))
+        # after the final drain, the escrow view and the owners' stock agree
+        # exactly: Σ_replicas (shares - spent) == s_quantity per cell
+        checks["escrow_covers_stock"] = bool(
+            np.array_equal(remaining, s.s_quantity.astype(np.int64)))
+
+    failures = [k for k, v in checks.items() if not v]
+    return AuditReport(not failures, failures, checks)
+
+
+def assert_audit(state: TPCCState, **kwargs) -> AuditReport:
+    """Raise AssertionError (with the failed condition names) unless the
+    audit passes; returns the report for logging."""
+    rep = audit_tpcc(state, **kwargs)
+    assert rep.ok, f"TPC-C audit failed: {rep.failures}"
+    return rep

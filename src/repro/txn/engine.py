@@ -31,23 +31,47 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.lattice import EscrowCounter
+from repro.core.planner import CoordClass, plan as plan_specs
+from repro.core.analyzer import Strategy
 from repro.utils.compat import shard_map
 from repro.utils.hlo import assert_no_collectives, collective_stats
 
 from . import ramp, tpcc
 from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
-                   StockDelta, StockLevelBatch, TPCCScale, TPCCState)
+                   StockDelta, StockLevelBatch, TPCCScale, TPCCState,
+                   tpcc_state_specs)
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class Engine:
-    """Shards TPC-C state by warehouse over ``axis_names`` of ``mesh``."""
+    """Shards TPC-C state by warehouse over ``axis_names`` of ``mesh``.
+
+    At construction the engine declares every TPC-C state element as a
+    planner StateSpec (tpcc.tpcc_state_specs) and runs
+    ``core.planner.plan()`` over them; the resulting CoordinationPlan — not
+    a hand flag — selects the execution strategy per element:
+
+      * COORDINATION_FREE  -> the local merge path (outbox + asynchronous
+        anti-entropy), i.e. everything this engine always did;
+      * ESCROW             -> the escrowed strict-stock hot path: per-replica
+        EscrowCounter shares resident on device, ``try_spend``-style local
+        admission inside New-Order, and an amortized share ``refresh`` as
+        the ONLY collective of the regime (paper §8);
+      * COORDINATION_REQUIRED -> refused here; ``plan_engine`` falls back to
+        the synchronous TwoPCEngine baseline.
+
+    ``stock_invariant`` ("restock" | "strict" | "serial") is the
+    application's schema declaration for STOCK.S_QUANTITY — the knob is
+    *what invariant is demanded*; the regime is derived by the analyzer.
+    """
 
     scale: TPCCScale
     mesh: Mesh
     axis_names: tuple[str, ...] = ("data",)
+    stock_invariant: str = "restock"
 
     def __post_init__(self):
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
@@ -56,8 +80,26 @@ class Engine:
                 f"{self.scale.n_warehouses} warehouses not divisible by "
                 f"{self.n_shards} shards")
         self.w_per_shard = self.scale.n_warehouses // self.n_shards
+
+        # -- the coordination plan drives regime selection -------------------
+        self.plan = plan_specs(tpcc_state_specs(self.stock_invariant))
+        self.stock_regime = self.plan.entry("stock.s_quantity").coord_class
+        if self.stock_regime is CoordClass.REQUIRED:
+            raise ValueError(
+                "planner classified stock.s_quantity as "
+                "COORDINATION_REQUIRED — this coordination-avoiding engine "
+                "cannot satisfy it; use plan_engine() to fall back to the "
+                "synchronous TwoPCEngine baseline")
+        # the district o_id counter must be the deferred-assignment regime —
+        # the batched local increment-and-get in apply_neworder implements it
+        assert (self.plan.entry("district.d_next_o_id").strategy
+                is Strategy.DEFERRED_ASSIGNMENT)
+        # strict floor (no restock) iff the plan put stock under escrow
+        self._restock = self.stock_regime is CoordClass.FREE
+
         self.state_spec = P(self.axis_names)   # shard dim 0 (warehouse)
         self.batch_spec = P(self.axis_names)   # per-shard home batches
+        self.escrow_spec = P(self.axis_names)  # shard dim 0 (replica slot)
         ax = self.axis_names
 
         @functools.partial(
@@ -82,7 +124,8 @@ class Engine:
         def _anti_entropy(state: TPCCState, outbox: StockDelta):
             w_lo = self._shard_index() * self.w_per_shard
             return gather_and_apply_outbox(state, outbox, ax, w_lo,
-                                           self.w_per_shard)
+                                           self.w_per_shard,
+                                           restock=self._restock)
 
         @functools.partial(
             shard_map, mesh=self.mesh,
@@ -131,6 +174,41 @@ class Engine:
         self._order_status = jax.jit(_order_status)
         self._stock_level = jax.jit(_stock_level)
 
+        if self.stock_regime is CoordClass.ESCROW:
+            @functools.partial(
+                shard_map, mesh=self.mesh,
+                in_specs=(self.state_spec, self.escrow_spec, self.batch_spec),
+                out_specs=(self.state_spec, self.escrow_spec, self.batch_spec,
+                           self.batch_spec, self.batch_spec),
+                check_vma=False)
+            def _neworder_escrow(state: TPCCState, esc: EscrowCounter,
+                                 batch: NewOrderBatch):
+                idx = self._shard_index()
+                w_lo = idx * self.w_per_shard
+                state, spent, delta, total, ok = tpcc.apply_neworder_escrow(
+                    state, esc.shares[0], esc.spent[0], batch, self.scale,
+                    w_lo=w_lo, w_hi=w_lo + self.w_per_shard,
+                    replica=idx, num_replicas=self.n_shards)
+                return (state, esc._replace(spent=spent[None]), delta, total,
+                        ok)
+
+            @functools.partial(
+                shard_map, mesh=self.mesh,
+                in_specs=(self.state_spec, self.escrow_spec),
+                out_specs=self.escrow_spec,
+                check_vma=False)
+            def _refresh(state: TPCCState, esc: EscrowCounter):
+                # THE amortized coordination point of the escrow regime:
+                # gather the owners' post-drain stock and re-partition it
+                # into fresh per-replica shares (spent resets to zero)
+                return gather_and_refresh_shares(state, ax,
+                                                 self._shard_index(),
+                                                 self.n_shards)
+
+            self._neworder_escrow = jax.jit(_neworder_escrow,
+                                            donate_argnums=(0, 1))
+            self._refresh_escrow = jax.jit(_refresh, donate_argnums=1)
+
     # -- helpers --------------------------------------------------------------
 
     def _shard_index(self):
@@ -148,6 +226,40 @@ class Engine:
     def neworder_step(self, state: TPCCState, batch: NewOrderBatch):
         """Hot path: returns (state, outbox, totals). Zero collectives."""
         return self._neworder(state, batch)
+
+    # -- escrow regime (plan-selected; paper §8) ------------------------------
+
+    def _require_escrow(self):
+        if self.stock_regime is not CoordClass.ESCROW:
+            raise RuntimeError(
+                f"stock regime is {self.stock_regime.value!r}, not escrow — "
+                f"construct the engine with stock_invariant='strict' (the "
+                f"plan, not a flag, selects the escrow path)")
+
+    def init_escrow(self, state: TPCCState) -> EscrowCounter:
+        """Device-resident per-replica shares partitioning the current stock
+        ([R, W, I], sharded on the replica-slot dim)."""
+        self._require_escrow()
+        shares = tpcc.make_escrow_shares(jax.device_get(state.s_quantity),
+                                         self.n_shards)
+        sh = NamedSharding(self.mesh, self.escrow_spec)
+        return EscrowCounter(jax.device_put(shares, sh),
+                             jax.device_put(jnp.zeros_like(shares), sh))
+
+    def neworder_escrow_step(self, state: TPCCState, esc: EscrowCounter,
+                             batch: NewOrderBatch):
+        """Escrow hot path: strict-stock New-Order with local ``try_spend``
+        admission. Returns (state, esc, outbox, totals, committed mask).
+        Zero collectives (proved structurally)."""
+        self._require_escrow()
+        return self._neworder_escrow(state, esc, batch)
+
+    def refresh_escrow(self, state: TPCCState,
+                       esc: EscrowCounter) -> EscrowCounter:
+        """The amortized coordination point: re-partition post-drain stock
+        into fresh shares (contains collectives; off the hot path)."""
+        self._require_escrow()
+        return self._refresh_escrow(state, esc)
 
     def anti_entropy(self, state: TPCCState, outbox: StockDelta) -> TPCCState:
         """Asynchronous convergence step (contains collectives, off hot path)."""
@@ -179,11 +291,39 @@ class Engine:
         return self._neworder.lower(state_sds, batch_sds)
 
     def prove_coordination_free(self, batch_per_shard: int = 8) -> str:
-        """Definition 5, structurally: the compiled hot path has no
-        collectives. Returns the stats line for logging."""
+        """Definition 5, structurally: the compiled hot path of the
+        PLAN-SELECTED regime has no collectives. Returns the stats line."""
+        if self.stock_regime is CoordClass.ESCROW:
+            text = self.lowered_neworder_escrow(
+                batch_per_shard).compile().as_text()
+            assert_no_collectives(
+                text, context="TPC-C escrow New-Order hot path")
+            return collective_stats(text).describe()
         text = self.lowered_neworder(batch_per_shard).compile().as_text()
         assert_no_collectives(text, context="TPC-C New-Order hot path")
         return collective_stats(text).describe()
+
+    def escrow_input_specs(self) -> EscrowCounter:
+        W, I = self.scale.n_warehouses, self.scale.n_items
+        f = jax.ShapeDtypeStruct((self.n_shards, W, I), jnp.int32)
+        return EscrowCounter(f, f)
+
+    def lowered_neworder_escrow(self, batch_per_shard: int):
+        self._require_escrow()
+        state_sds = tpcc.state_shape_dtypes(self.scale)
+        batch_sds = tpcc.neworder_input_specs(
+            self.scale, batch_per_shard * self.n_shards)
+        return self._neworder_escrow.lower(state_sds,
+                                           self.escrow_input_specs(),
+                                           batch_sds)
+
+    def count_refresh_collectives(self):
+        """The escrow regime's ONLY collective program."""
+        self._require_escrow()
+        text = self._refresh_escrow.lower(
+            tpcc.state_shape_dtypes(self.scale),
+            self.escrow_input_specs()).compile().as_text()
+        return collective_stats(text)
 
     def lowered_order_status(self, batch_per_shard: int):
         state_sds = tpcc.state_shape_dtypes(self.scale)
@@ -231,7 +371,8 @@ def _multi_axis_all_gather(x, axis_names):
 
 
 def gather_and_apply_outbox(state: TPCCState, outbox, axis_names,
-                            w_lo, w_per_shard) -> TPCCState:
+                            w_lo, w_per_shard,
+                            restock: bool = True) -> TPCCState:
     """The anti-entropy body, shared by Engine.anti_entropy and the fused
     executor's ring drain (one definition keeps their semantics — ownership
     predicate, remote flag, gather layout — bit-identical): all-gather every
@@ -249,14 +390,54 @@ def gather_and_apply_outbox(state: TPCCState, outbox, axis_names,
     own = valid & (dst >= w_lo) & (dst < w_lo + w_per_shard)
     # every outbox entry is, by construction, remote to its owner
     return tpcc.apply_stock_updates(state, dst - w_lo, i_id, qty, own,
-                                    jnp.ones_like(own))
+                                    jnp.ones_like(own), restock=restock)
 
 
-def single_host_engine(scale: TPCCScale) -> Engine:
+def gather_and_refresh_shares(state: TPCCState, axis_names, replica,
+                              n_shards: int) -> "EscrowCounter":
+    """The escrow share-refresh body, shared by Engine.refresh_escrow and
+    the fused executor's drain+refresh (one definition keeps the regime's
+    only coordination point bit-identical across drivers): all-gather the
+    owners' current stock and re-partition it into this replica's fresh
+    share slot (spent resets to zero)."""
+    q = _multi_axis_all_gather(state.s_quantity, axis_names)
+    q = q.reshape((-1, q.shape[-1]))                              # [W, I]
+    share = tpcc.escrow_share_for(q, replica, n_shards)
+    return EscrowCounter(share[None], jnp.zeros_like(share)[None])
+
+
+def single_host_engine(scale: TPCCScale,
+                       stock_invariant: str = "restock") -> Engine:
     """Engine over the current process's devices (1 on CPU tests)."""
     devs = np.array(jax.devices())
     mesh = Mesh(devs.reshape(len(devs)), ("data",))
-    return Engine(scale, mesh, ("data",))
+    return Engine(scale, mesh, ("data",), stock_invariant=stock_invariant)
+
+
+def plan_engine(scale: TPCCScale, mesh: Mesh | None = None,
+                axis_names: tuple[str, ...] = ("data",),
+                stock_invariant: str = "restock"):
+    """Plan-driven engine selection — the paper's decision procedure as a
+    factory: run the analyzer over the declared TPC-C state specs and return
+
+      * :class:`Engine` when every element is COORDINATION_FREE or ESCROW
+        (merge and escrow hot paths, zero collectives between merges /
+        refreshes), or
+      * the synchronous :class:`repro.txn.twopc.TwoPCEngine` (strict-stock
+        variant) when the plan demands COORDINATION_REQUIRED — coordination
+        is the fallback, never the default.
+    """
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs.reshape(len(devs)), ("data",))
+    cplan = plan_specs(tpcc_state_specs(stock_invariant))
+    regime = cplan.entry("stock.s_quantity").coord_class
+    if regime is CoordClass.REQUIRED:
+        from .twopc import TwoPCEngine
+        eng = TwoPCEngine(scale, mesh, axis_names, strict_stock=True)
+        eng.plan = cplan
+        return eng
+    return Engine(scale, mesh, axis_names, stock_invariant=stock_invariant)
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +450,8 @@ class RunStats:
     committed: int = 0
     batches: int = 0
     anti_entropy_rounds: int = 0
+    aborted: int = 0       # escrow regime: insufficient-share atomic aborts
+    refreshes: int = 0     # escrow regime: amortized share-refresh rounds
     wall_seconds: float = 0.0
 
     @property
@@ -335,8 +518,26 @@ def run_closed_loop(engine: Engine, state: TPCCState, *,
     Batches are pre-generated (the generator is not the system under test);
     wall time covers device execution only — compilation is triggered on
     throwaway copies, so all ``n_batches`` batches are timed.
+
+    On an escrow-regime engine (stock_invariant="strict") the loop routes
+    to :func:`run_escrow_loop` (New-Order only; ``payments``/``deliveries``
+    are a mixed-loop feature there).
     """
     import time
+
+    if engine.stock_regime is CoordClass.ESCROW:
+        if payments or deliveries:
+            raise NotImplementedError(
+                "escrow regime: use run_escrow_loop(mix=True) for the full "
+                "transaction mix")
+        state, _, mix = run_escrow_loop(
+            engine, state, batch_per_shard=batch_per_shard,
+            n_batches=n_batches, remote_frac=remote_frac,
+            merge_every=merge_every, seed=seed, mix=False, fused=fused)
+        return state, RunStats(
+            committed=mix.neworders, batches=n_batches,
+            anti_entropy_rounds=mix.anti_entropy_rounds, aborted=mix.aborts,
+            refreshes=mix.refreshes, wall_seconds=mix.wall_seconds)
 
     rng = np.random.default_rng(seed)
     B = batch_per_shard * engine.n_shards
@@ -416,6 +617,8 @@ class MixStats:
     reads_found: int = 0
     fractures_observed: int = 0   # must stay 0: RAMP atomic visibility
     lines_repaired: int = 0       # 2nd-round (lookback) activity
+    aborts: int = 0               # escrow regime: insufficient-share aborts
+    refreshes: int = 0            # escrow regime: share-refresh rounds
     wall_seconds: float = 0.0
 
     @property
@@ -489,6 +692,14 @@ def run_mixed_loop(engine: Engine, state: TPCCState, *,
     baseline for what the executor eliminates.
     """
     import time
+
+    if engine.stock_regime is CoordClass.ESCROW:
+        state, _, stats = run_escrow_loop(
+            engine, state, batch_per_shard=batch_per_shard,
+            n_batches=n_batches, remote_frac=remote_frac,
+            merge_every=merge_every, read_frac=read_frac, seed=seed,
+            mix=True, fused=fused, legacy=legacy)
+        return state, stats
 
     if legacy:
         fused = False
@@ -576,3 +787,139 @@ def run_mixed_loop(engine: Engine, state: TPCCState, *,
     stats.lines_repaired = int(rep_acc)
     stats.deliveries = int(del_acc)
     return state, stats
+
+
+# ---------------------------------------------------------------------------
+# Escrow-regime closed loop (plan-selected; paper §8 amortized coordination)
+# ---------------------------------------------------------------------------
+
+
+def run_escrow_loop(engine: Engine, state: TPCCState,
+                    esc: "EscrowCounter | None" = None, *,
+                    batch_per_shard: int, n_batches: int,
+                    remote_frac: float = 0.01, merge_every: int = 8,
+                    refresh_every: int = 1, read_frac: float = 0.25,
+                    seed: int = 0, mix: bool = True,
+                    fused: bool = True, legacy: bool = False,
+                    ) -> tuple[TPCCState, "EscrowCounter", MixStats]:
+    """Drive the escrow regime: strict-stock New-Order (plus the rest of the
+    mix when ``mix=True``), one batched strict drain per ``merge_every``
+    window, and the amortized share refresh every ``refresh_every`` drains —
+    the regime's ONLY collective beyond the drain itself.
+
+    ``fused=True`` (default) runs on the megastep executor with the escrow
+    counters joining the donated scan carry and the refresh fused into the
+    per-chunk drain program; ``fused=False`` is the per-batch dispatch
+    baseline; ``legacy=True`` additionally restores per-outbox drains and
+    per-batch host stat reads. All three execute the identical stream at the
+    identical drain/refresh cadence and land on bit-identical (integer)
+    state, escrow, and counters (tests/test_executor.py).
+
+    Returns (state, escrow, MixStats) — ``stats.neworders`` counts COMMITTED
+    New-Orders; insufficient-share atomic aborts are in ``stats.aborts``.
+    """
+    import time
+
+    engine._require_escrow()
+    if legacy:
+        fused = False
+    if esc is None:
+        esc = engine.init_escrow(state)
+    if fused:
+        from .executor import run_fused_escrow_loop
+
+        return run_fused_escrow_loop(
+            engine, state, esc, batch_per_shard=batch_per_shard,
+            n_batches=n_batches, remote_frac=remote_frac,
+            merge_every=merge_every, refresh_every=refresh_every,
+            read_frac=read_frac, seed=seed, mix=mix)
+
+    B = batch_per_shard * engine.n_shards
+    if mix:
+        R = max(1, int(batch_per_shard * read_frac)) * engine.n_shards
+        no_b, pay_b, os_b, sl_b = generate_mix_batches(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, read_frac=read_frac, seed=seed)
+    else:
+        R = 0
+        no_b = generate_neworder_stream(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, rng=np.random.default_rng(seed))
+
+    # warmup compiles on copies; the timed loop covers every batch
+    warm, wesc = _tree_copy(state), _tree_copy(esc)
+    warm, wesc, outbox, _, _ = engine.neworder_escrow_step(warm, wesc,
+                                                           no_b[0])
+    if mix:
+        warm = engine.payment_step(warm, pay_b[0])
+        res = (engine.order_status_step(warm, os_b[0]),
+               engine.stock_level_step(warm, sl_b[0]))
+        warm, _ = engine.delivery_step(warm)
+    else:
+        res = None
+    drain_shapes = {1} if legacy else \
+        {min(merge_every, n_batches), n_batches % merge_every} - {0}
+    for k in drain_shapes:
+        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
+    wesc = engine.refresh_escrow(warm, wesc)
+    jax.block_until_ready((warm, wesc, res))
+    del warm, wesc, outbox, res
+
+    stats = MixStats()
+    zero = 0 if legacy else jnp.zeros((), jnp.int32)
+    commit_acc, found_acc, fract_acc = zero, zero, zero
+    rep_acc, del_acc = zero, zero
+    rounds = 0
+    pending: list[StockDelta] = []
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        state, esc, outbox, _, ok = engine.neworder_escrow_step(
+            state, esc, no_b[i])
+        pending.append(outbox)
+        commit_acc = commit_acc + (int(ok.sum()) if legacy
+                                   else ok.sum().astype(jnp.int32))
+        if mix:
+            state = engine.payment_step(state, pay_b[i])
+            stats.payments += B
+            os_res = engine.order_status_step(state, os_b[i])
+            sl_res = engine.stock_level_step(state, sl_b[i])
+            stats.order_statuses += R
+            stats.stock_levels += R
+            if legacy:
+                found_acc = found_acc + int(os_res.found.sum())
+                fract_acc = fract_acc + int(os_res.fractures_observed()) \
+                    + int((sl_res.fractured - sl_res.repaired).sum())
+                rep_acc = rep_acc + int(os_res.repaired.sum()
+                                        + sl_res.repaired.sum())
+            else:
+                found_acc = found_acc + os_res.found.sum()
+                fract_acc = (fract_acc + os_res.fractures_observed()
+                             + (sl_res.fractured - sl_res.repaired).sum())
+                rep_acc = (rep_acc + os_res.repaired.sum()
+                           + sl_res.repaired.sum())
+            state, delivered = engine.delivery_step(state)
+            del_acc = (del_acc + int(delivered.sum())) if legacy \
+                else del_acc + delivered.sum()
+        if len(pending) == merge_every or i == n_batches - 1:
+            if legacy:
+                for ob in pending:
+                    state = engine.anti_entropy(state, ob)
+            else:
+                state = engine.anti_entropy(state, _concat_outboxes(pending))
+            stats.anti_entropy_rounds += 1
+            rounds += 1
+            pending = []
+            if rounds % refresh_every == 0:
+                # the amortized coordination point, aligned with the drain
+                esc = engine.refresh_escrow(state, esc)
+                stats.refreshes += 1
+    jax.block_until_ready((state, esc, commit_acc, found_acc, fract_acc,
+                           rep_acc, del_acc))
+    stats.wall_seconds = time.perf_counter() - t0
+    stats.neworders = int(commit_acc)
+    stats.aborts = B * n_batches - stats.neworders
+    stats.reads_found = int(found_acc)
+    stats.fractures_observed = int(fract_acc)
+    stats.lines_repaired = int(rep_acc)
+    stats.deliveries = int(del_acc)
+    return state, esc, stats

@@ -50,11 +50,14 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.lattice import EscrowCounter
+from repro.core.planner import CoordClass
 from repro.utils.compat import shard_map
 from repro.utils.hlo import assert_no_collectives, collective_stats
 
 from . import ramp, tpcc
-from .engine import Engine, MixStats, gather_and_apply_outbox
+from .engine import (Engine, MixStats, gather_and_apply_outbox,
+                     gather_and_refresh_shares)
 from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
                    StockLevelBatch, TPCCState)
 
@@ -93,6 +96,7 @@ class MixCounters(NamedTuple):
     reads_found: Array
     fractures_observed: Array
     lines_repaired: Array
+    aborts: Array   # escrow regime: insufficient-share atomic aborts
 
 
 class MixChunk(NamedTuple):
@@ -152,6 +156,46 @@ class FusedExecutor:
         state_spec = eng.state_spec
         shard1_spec = jax.sharding.PartitionSpec(None, ax)  # dim 1 = batch
         count_spec = eng.batch_spec
+        # the engine's coordination plan selects the executor's hot path:
+        # FREE -> restock New-Order + restocking drain; ESCROW -> strict
+        # New-Order with the EscrowCounter joining the donated scan carry,
+        # strict drain, and the share refresh fused into the drain program
+        self._escrow = eng.stock_regime is CoordClass.ESCROW
+        esc_spec = eng.escrow_spec
+
+        def step_tail(state, cnt, pay_b, os_b, sl_b, w_lo):
+            """Payment + RAMP reads + Delivery — identical in both regimes."""
+            if pay_b is not None:
+                state = tpcc.apply_payment(state, pay_b, w_lo=w_lo)
+                cnt = cnt._replace(payments=cnt.payments + pay_b.w.shape[0])
+            if os_b is not None:
+                os_res = ramp.apply_order_status(state, os_b, w_lo=w_lo)
+                cnt = cnt._replace(
+                    order_statuses=cnt.order_statuses + os_b.w.shape[0],
+                    reads_found=cnt.reads_found
+                    + os_res.found.sum().astype(jnp.int32),
+                    fractures_observed=cnt.fractures_observed
+                    + os_res.fractures_observed().astype(jnp.int32),
+                    lines_repaired=cnt.lines_repaired
+                    + os_res.repaired.sum().astype(jnp.int32))
+            if sl_b is not None:
+                sl_res = ramp.apply_stock_level(state, sl_b, scale,
+                                                w_lo=w_lo)
+                cnt = cnt._replace(
+                    stock_levels=cnt.stock_levels + sl_b.w.shape[0],
+                    fractures_observed=cnt.fractures_observed
+                    + (sl_res.fractured - sl_res.repaired).sum()
+                    .astype(jnp.int32),
+                    lines_repaired=cnt.lines_repaired
+                    + sl_res.repaired.sum().astype(jnp.int32))
+            if self.deliveries:
+                n_del = state.no_valid.any(axis=2).sum()
+                state = tpcc.apply_delivery(
+                    state, jnp.asarray(1, jnp.int32),
+                    jnp.asarray(0, jnp.int32))
+                cnt = cnt._replace(
+                    deliveries=cnt.deliveries + n_del.astype(jnp.int32))
+            return state, cnt
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
@@ -176,36 +220,7 @@ class FusedExecutor:
                     jax.lax.dynamic_update_index_in_dim(r, v, i % rows, 0)
                     for r, v in zip(ring, delta)))
                 cnt = cnt._replace(neworders=cnt.neworders + B)
-                if pay_b is not None:
-                    state = tpcc.apply_payment(state, pay_b, w_lo=w_lo)
-                    cnt = cnt._replace(payments=cnt.payments + pay_b.w.shape[0])
-                if os_b is not None:
-                    os_res = ramp.apply_order_status(state, os_b, w_lo=w_lo)
-                    cnt = cnt._replace(
-                        order_statuses=cnt.order_statuses + os_b.w.shape[0],
-                        reads_found=cnt.reads_found
-                        + os_res.found.sum().astype(jnp.int32),
-                        fractures_observed=cnt.fractures_observed
-                        + os_res.fractures_observed().astype(jnp.int32),
-                        lines_repaired=cnt.lines_repaired
-                        + os_res.repaired.sum().astype(jnp.int32))
-                if sl_b is not None:
-                    sl_res = ramp.apply_stock_level(state, sl_b, scale,
-                                                    w_lo=w_lo)
-                    cnt = cnt._replace(
-                        stock_levels=cnt.stock_levels + sl_b.w.shape[0],
-                        fractures_observed=cnt.fractures_observed
-                        + (sl_res.fractured - sl_res.repaired).sum()
-                        .astype(jnp.int32),
-                        lines_repaired=cnt.lines_repaired
-                        + sl_res.repaired.sum().astype(jnp.int32))
-                if self.deliveries:
-                    n_del = state.no_valid.any(axis=2).sum()
-                    state = tpcc.apply_delivery(
-                        state, jnp.asarray(1, jnp.int32),
-                        jnp.asarray(0, jnp.int32))
-                    cnt = cnt._replace(
-                        deliveries=cnt.deliveries + n_del.astype(jnp.int32))
+                state, cnt = step_tail(state, cnt, pay_b, os_b, sl_b, w_lo)
                 return (state, ring, cnt), None
 
             T = chunk.neworder.w.shape[0]
@@ -214,6 +229,44 @@ class FusedExecutor:
             (state, ring, counters), _ = jax.lax.scan(
                 step, (state, ring, counters), xs)
             return state, ring, counters
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, count_spec, esc_spec,
+                      shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec, esc_spec),
+            check_vma=False)
+        def _megastep_escrow(state: TPCCState, ring: OutboxRing,
+                             counters: MixCounters, esc: EscrowCounter,
+                             chunk: MixChunk):
+            idx = eng._shard_index()
+            w_lo = idx * eng.w_per_shard
+            rows = ring.valid.shape[0]
+
+            def step(carry, xs):
+                state, ring, cnt, esc = carry
+                no_b, pay_b, os_b, sl_b, i = xs
+                B = no_b.w.shape[0]
+                state, spent, delta, _, ok = tpcc.apply_neworder_escrow(
+                    state, esc.shares[0], esc.spent[0], no_b, scale,
+                    w_lo=w_lo, w_hi=w_lo + eng.w_per_shard,
+                    replica=idx, num_replicas=eng.n_shards)
+                esc = esc._replace(spent=spent[None])
+                ring = OutboxRing(*(
+                    jax.lax.dynamic_update_index_in_dim(r, v, i % rows, 0)
+                    for r, v in zip(ring, delta)))
+                n_ok = ok.sum().astype(jnp.int32)
+                cnt = cnt._replace(neworders=cnt.neworders + n_ok,
+                                   aborts=cnt.aborts + (B - n_ok))
+                state, cnt = step_tail(state, cnt, pay_b, os_b, sl_b, w_lo)
+                return (state, ring, cnt, esc), None
+
+            T = chunk.neworder.w.shape[0]
+            xs = (chunk.neworder, chunk.payment, chunk.order_status,
+                  chunk.stock_level, jnp.arange(T))
+            (state, ring, counters, esc), _ = jax.lax.scan(
+                step, (state, ring, counters, esc), xs)
+            return state, ring, counters, esc
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
@@ -226,14 +279,38 @@ class FusedExecutor:
             # the same body Engine.anti_entropy runs per outbox
             w_lo = eng._shard_index() * eng.w_per_shard
             state = gather_and_apply_outbox(state, ring, ax, w_lo,
-                                            eng.w_per_shard)
+                                            eng.w_per_shard,
+                                            restock=not self._escrow)
             return state, ring._replace(valid=jnp.zeros_like(ring.valid))
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, esc_spec),
+            out_specs=(state_spec, shard1_spec, esc_spec),
+            check_vma=False)
+        def _drain_refresh(state: TPCCState, ring: OutboxRing,
+                           esc: EscrowCounter):
+            # the escrow regime's amortized coordination point, fused into
+            # the chunk drain: apply every queued (strict) stock update, then
+            # re-partition the owners' post-drain stock into fresh shares —
+            # one collective program per refresh_every chunks
+            idx = eng._shard_index()
+            w_lo = idx * eng.w_per_shard
+            state = gather_and_apply_outbox(state, ring, ax, w_lo,
+                                            eng.w_per_shard, restock=False)
+            esc = gather_and_refresh_shares(state, ax, idx, eng.n_shards)
+            return state, ring._replace(
+                valid=jnp.zeros_like(ring.valid)), esc
 
         # donation: the executor owns ONE live copy of state/ring/counters
         # for the whole run — every call consumes its buffers and hands the
         # same allocation back (input_output_alias in the compiled module)
         self._megastep = jax.jit(_megastep, donate_argnums=(0, 1, 2))
+        self._megastep_esc = jax.jit(_megastep_escrow,
+                                     donate_argnums=(0, 1, 2, 3))
         self._drain = jax.jit(_drain, donate_argnums=(0, 1))
+        self._drain_refresh = jax.jit(_drain_refresh,
+                                      donate_argnums=(0, 1, 2))
 
     # -- device buffers ------------------------------------------------------
 
@@ -266,11 +343,25 @@ class FusedExecutor:
         if chunk.chunk_len > self.ring_rows:
             raise ValueError(f"chunk of {chunk.chunk_len} steps exceeds the "
                              f"{self.ring_rows}-row outbox ring")
+        if self._escrow:
+            raise RuntimeError("escrow-regime executor: use megastep_escrow")
         return self._megastep(state, ring, counters, chunk)
+
+    def megastep_escrow(self, state: TPCCState, ring: OutboxRing,
+                        counters: MixCounters, esc, chunk: MixChunk):
+        """Escrow-regime chunk: the EscrowCounter joins the donated carry."""
+        if chunk.chunk_len > self.ring_rows:
+            raise ValueError(f"chunk of {chunk.chunk_len} steps exceeds the "
+                             f"{self.ring_rows}-row outbox ring")
+        return self._megastep_esc(state, ring, counters, esc, chunk)
 
     def drain(self, state: TPCCState, ring: OutboxRing):
         """Batched anti-entropy over the whole ring; clears its valid bits."""
         return self._drain(state, ring)
+
+    def drain_refresh(self, state: TPCCState, ring: OutboxRing, esc):
+        """Drain + escrow share refresh fused into one collective program."""
+        return self._drain_refresh(state, ring, esc)
 
     def run(self, state: TPCCState, chunks: Sequence[MixChunk],
             *, warmup: bool = True) -> tuple[TPCCState, MixCounters, float]:
@@ -278,6 +369,8 @@ class FusedExecutor:
         final host sync. Returns (state, counters, wall_seconds); wall time
         excludes compilation (triggered on throwaway copies) and batch prep.
         """
+        if self._escrow:
+            raise RuntimeError("escrow-regime executor: use run_escrow")
         batch_per_shard = chunks[0].neworder.w.shape[1] // self.engine.n_shards
         state = self.engine.shard_state(state)  # commit: stable jit cache key
         ring = self.init_ring(batch_per_shard)
@@ -297,6 +390,43 @@ class FusedExecutor:
             state, ring = self.drain(state, ring)
         jax.block_until_ready((state, counters))
         return state, counters, time.perf_counter() - t0
+
+    def run_escrow(self, state: TPCCState, esc, chunks: Sequence[MixChunk],
+                   *, refresh_every: int = 1, warmup: bool = True
+                   ) -> tuple[TPCCState, "EscrowCounter", MixCounters,
+                              float, int]:
+        """Escrow-regime drive: scan megastep + one strict drain per chunk;
+        every ``refresh_every``-th drain additionally refreshes the escrow
+        shares (fused into the same collective program). Returns
+        (state, esc, counters, wall_seconds, refreshes)."""
+        if not self._escrow:
+            raise RuntimeError("executor is not in the escrow regime "
+                               "(engine plan says merge) — use run()")
+        batch_per_shard = chunks[0].neworder.w.shape[1] // self.engine.n_shards
+        state = self.engine.shard_state(state)
+        ring = self.init_ring(batch_per_shard)
+        counters = self.init_counters()
+        if warmup:
+            copy = lambda t: jax.tree.map(lambda x: x.copy(), t)
+            for T in sorted({c.chunk_len for c in chunks}):
+                chunk = next(c for c in chunks if c.chunk_len == T)
+                w = self.megastep_escrow(copy(state), copy(ring),
+                                         copy(counters), copy(esc), chunk)
+                w2 = self.drain_refresh(w[0], w[1], w[3])
+                jax.block_until_ready(self.drain(w2[0], w2[1]))
+
+        refreshes = 0
+        t0 = time.perf_counter()
+        for ci, chunk in enumerate(chunks):
+            state, ring, counters, esc = self.megastep_escrow(
+                state, ring, counters, esc, chunk)
+            if (ci + 1) % refresh_every == 0:
+                state, ring, esc = self.drain_refresh(state, ring, esc)
+                refreshes += 1
+            else:
+                state, ring = self.drain(state, ring)
+        jax.block_until_ready((state, esc, counters))
+        return state, esc, counters, time.perf_counter() - t0, refreshes
 
     # -- structural proofs ---------------------------------------------------
 
@@ -336,24 +466,43 @@ class FusedExecutor:
     def lowered_megastep(self, chunk_len: int = 8, batch_per_shard: int = 8,
                          read_per_shard: int = 2, payments: bool = True,
                          reads: bool = True):
-        return self._megastep.lower(
-            *self._arg_specs(chunk_len, batch_per_shard, read_per_shard,
-                             payments, reads))
+        """Lower the PLAN-SELECTED megastep (escrow variant includes the
+        EscrowCounter carry)."""
+        state_sds, ring_sds, cnt_sds, chunk = self._arg_specs(
+            chunk_len, batch_per_shard, read_per_shard, payments, reads)
+        if self._escrow:
+            return self._megastep_esc.lower(
+                state_sds, ring_sds, cnt_sds,
+                self.engine.escrow_input_specs(), chunk)
+        return self._megastep.lower(state_sds, ring_sds, cnt_sds, chunk)
 
     def prove_megastep_coordination_free(self, chunk_len: int = 8,
                                          batch_per_shard: int = 8,
                                          read_per_shard: int = 2) -> str:
         """Definition 5 on the fused hot path: merge_every full-mix
-        iterations compile to ZERO collective ops."""
+        iterations compile to ZERO collective ops. In the escrow regime this
+        covers the strict New-Order admission (``try_spend`` against the
+        device-resident shares) — everything between refreshes is
+        collective-free."""
+        ctx = "fused TPC-C escrow megastep" if self._escrow \
+            else "fused TPC-C megastep"
         text = self.lowered_megastep(chunk_len, batch_per_shard,
                                      read_per_shard).compile().as_text()
-        assert_no_collectives(text, context="fused TPC-C megastep")
+        assert_no_collectives(text, context=ctx)
         return collective_stats(text).describe()
 
     def count_drain_collectives(self, batch_per_shard: int = 8):
         text = self._drain.lower(
             tpcc.state_shape_dtypes(self.engine.scale),
             self._ring_specs(batch_per_shard)).compile().as_text()
+        return collective_stats(text)
+
+    def count_drain_refresh_collectives(self, batch_per_shard: int = 8):
+        """The escrow regime's fused drain+refresh — its only collectives."""
+        text = self._drain_refresh.lower(
+            tpcc.state_shape_dtypes(self.engine.scale),
+            self._ring_specs(batch_per_shard),
+            self.engine.escrow_input_specs()).compile().as_text()
         return collective_stats(text)
 
 
@@ -377,7 +526,7 @@ def get_fused_executor(engine: Engine, ring_rows: int = 8,
 
 
 def counters_to_stats(counters: MixCounters, *, anti_entropy_rounds: int,
-                      wall_seconds: float) -> MixStats:
+                      wall_seconds: float, refreshes: int = 0) -> MixStats:
     c = jax.device_get(counters)
     return MixStats(
         neworders=int(c.neworders.sum()),
@@ -389,6 +538,8 @@ def counters_to_stats(counters: MixCounters, *, anti_entropy_rounds: int,
         reads_found=int(c.reads_found.sum()),
         fractures_observed=int(c.fractures_observed.sum()),
         lines_repaired=int(c.lines_repaired.sum()),
+        aborts=int(c.aborts.sum()),
+        refreshes=refreshes,
         wall_seconds=wall_seconds)
 
 
@@ -414,3 +565,38 @@ def run_fused_loop(engine: Engine, state: TPCCState, *,
     return state, counters_to_stats(counters,
                                     anti_entropy_rounds=len(chunks),
                                     wall_seconds=wall)
+
+
+def run_fused_escrow_loop(engine: Engine, state: TPCCState, esc, *,
+                          batch_per_shard: int, n_batches: int,
+                          remote_frac: float = 0.01, merge_every: int = 8,
+                          refresh_every: int = 1, read_frac: float = 0.25,
+                          seed: int = 0, mix: bool = True,
+                          ) -> tuple[TPCCState, "EscrowCounter", MixStats]:
+    """The escrow regime on the fused executor: strict-stock New-Order (plus
+    the rest of the mix when ``mix=True``) with the escrow shares riding the
+    donated scan carry, one strict drain per chunk, and the share refresh
+    fused into every ``refresh_every``-th drain. Streams, drain points, and
+    refresh points are identical to the per-batch dispatch driver
+    (run_escrow_loop(fused=False)) — bit-exact final state/escrow/counters.
+    """
+    from .engine import generate_mix_batches, generate_neworder_stream
+    import numpy as np
+
+    if mix:
+        no_b, pay_b, os_b, sl_b = generate_mix_batches(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, read_frac=read_frac, seed=seed)
+    else:
+        no_b = generate_neworder_stream(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, rng=np.random.default_rng(seed))
+        pay_b = os_b = sl_b = None
+    chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
+    ex = get_fused_executor(engine, ring_rows=merge_every, deliveries=mix)
+    state, esc, counters, wall, refreshes = ex.run_escrow(
+        state, esc, chunks, refresh_every=refresh_every)
+    return state, esc, counters_to_stats(counters,
+                                         anti_entropy_rounds=len(chunks),
+                                         wall_seconds=wall,
+                                         refreshes=refreshes)

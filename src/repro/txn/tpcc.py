@@ -289,7 +289,8 @@ def _empty_delta(capacity: int) -> StockDelta:
 
 
 def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
-                        qty: Array, mask: Array, remote: Array) -> TPCCState:
+                        qty: Array, mask: Array, remote: Array,
+                        restock: bool = True) -> TPCCState:
     """Owner-side stock effect (TPC-C §2.4.2.2): decrement with restock.
 
     S_QUANTITY' = q - qty if q - qty >= 10 else q - qty + 91 ; S_YTD += qty;
@@ -297,6 +298,12 @@ def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
     commutative counters except S_QUANTITY, whose restock rule is applied by
     the owning shard at merge time (order-dependent but unconstrained by the
     twelve consistency criteria; see DESIGN.md §9).
+
+    ``restock=False`` is the strict-stock regime (``s_quantity >= 0``
+    enforced by escrow admission upstream, apply_neworder_escrow): the
+    decrement lands as-is, with no +91 re-up. Safety there comes from the
+    escrow shares — the sum of admitted spends can never exceed the stock
+    the shares partition.
     """
     w_idx = jnp.where(mask, w_idx, 0)
     i_idx = jnp.where(mask, i_idx, 0)
@@ -309,8 +316,9 @@ def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
     s_rcnt = state.s_remote_cnt.at[w_idx, i_idx].add(rem_m)
     # decrement-then-restock: apply total decrement, then add 91 while < 10.
     s_q = state.s_quantity.at[w_idx, i_idx].add(-qty_m)
-    deficit = jnp.maximum(0, jnp.ceil((10 - s_q) / 91.0)).astype(jnp.int32)
-    s_q = jnp.where(s_q < 10, s_q + deficit * 91, s_q)
+    if restock:
+        deficit = jnp.maximum(0, jnp.ceil((10 - s_q) / 91.0)).astype(jnp.int32)
+        s_q = jnp.where(s_q < 10, s_q + deficit * 91, s_q)
     return state._replace(s_quantity=s_q, s_ytd=s_ytd,
                           s_order_cnt=s_ocnt, s_remote_cnt=s_rcnt)
 
@@ -427,6 +435,166 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
     tax = state.w_tax[wl] + state.d_tax[wl, batch.d]
     total = amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
     return state, delta, total
+
+
+# ---------------------------------------------------------------------------
+# Escrowed strict-stock New-Order (paper §8: amortizing coordination)
+# ---------------------------------------------------------------------------
+
+
+def escrow_share_for(s_quantity, replica, num_replicas: int):
+    """Replica ``replica``'s share of every stock cell — THE partition
+    formula (one definition: init, refresh, and the fused drain+refresh all
+    call it, so the audit's conservation law can never desynchronize).
+
+    ``q // R`` each, with the remainder going to the lowest replica slots;
+    ``replica`` may be a traced scalar (shard index) or a broadcastable
+    array of slot ids.
+    """
+    q = jnp.asarray(s_quantity, jnp.int32)
+    r = jnp.asarray(replica, jnp.int32)
+    return q // num_replicas + (r < q % num_replicas).astype(jnp.int32)
+
+
+def make_escrow_shares(s_quantity, num_replicas: int):
+    """Partition every stock cell's quantity into per-replica shares.
+
+    Returns an int32 ``[R, W, I]`` array with ``shares.sum(0) == s_quantity``
+    exactly, so the global ``s_quantity >= 0`` invariant holds by
+    construction while each replica spends only from its own slot.
+    """
+    q = jnp.asarray(s_quantity, jnp.int32)
+    slots = jnp.arange(num_replicas, dtype=jnp.int32).reshape(
+        (num_replicas,) + (1,) * q.ndim)
+    return escrow_share_for(q, slots, num_replicas)
+
+
+def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
+                          batch: NewOrderBatch, scale: TPCCScale,
+                          w_lo: int = 0, w_hi: int | None = None,
+                          replica: Array | int = 0, num_replicas: int = 1
+                          ) -> tuple[TPCCState, Array, StockDelta, Array, Array]:
+    """Strict-stock New-Order: ``s_quantity >= 0`` with NO restock.
+
+    The non-confluent part of the transaction — decrements against the
+    stock floor — is admitted against this replica's escrow share
+    (``shares``/``spent`` are this replica's ``[W, I]`` slot of the global
+    EscrowCounter; W is the GLOBAL warehouse count, since any replica may
+    sell any warehouse's items). Admission is first-come-first-served in
+    batch (timestamp) order via an inner scan: a transaction commits iff
+    every valid line's quantity — including duplicate-cell demand within the
+    same transaction — fits in the remaining share; otherwise the WHOLE
+    transaction aborts with no effects (TPC-C's atomic rollback).
+
+    Committed effects mirror apply_neworder, except:
+      * stock decrements never restock (apply_stock_updates restock=False);
+      * sequential o_ids are assigned densely over the COMMITTED
+        transactions only (aborts leave no gaps — criterion 3.3.2.3);
+      * aborted transactions' scatters are dropped (indices redirected out
+        of range under mode="drop").
+
+    Everything stays replica-local: zero collectives — the only coordination
+    in the escrow regime is the amortized share refresh (engine/executor).
+
+    Returns (state, spent', remote outbox, totals, committed mask [B]).
+    """
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    ramp_ts = batch.ts * num_replicas + replica                    # [B]
+    B, L = batch.i_id.shape
+    D, OC, I = scale.districts, scale.order_capacity, scale.n_items
+    wl = batch.w - w_lo  # shard-local home-warehouse index
+
+    line_idx = jnp.arange(L)[None, :]
+    line_valid = line_idx < batch.n_lines[:, None]                 # [B, L]
+
+    # ---- escrow admission: FCFS scan over the batch ------------------------
+    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+
+    def _admit(spent, xs):
+        w_l, i_l, q_l, lv = xs                                     # [L] each
+        # demand already placed on the same (w, i) cell by EARLIER lines of
+        # this same transaction (duplicate items in one order)
+        same = (w_l * I + i_l)[None, :] == (w_l * I + i_l)[:, None]
+        prior = jnp.where(same & dup_lower & lv[None, :],
+                          q_l[None, :], 0).sum(axis=1)
+        have = shares[w_l, i_l] - spent[w_l, i_l]
+        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
+        spent = spent.at[w_l, i_l].add(jnp.where(lv & ok, q_l, 0))
+        return spent, ok
+
+    spent, committed = jax.lax.scan(
+        _admit, spent,
+        (batch.supply_w, batch.i_id, batch.qty, line_valid))
+    line_ok = line_valid & committed[:, None]                      # [B, L]
+
+    # ---- sequential ID assignment over COMMITTED txns only -----------------
+    key = batch.w * D + batch.d                                    # [B]
+    same = (key[None, :] == key[:, None])                          # [B, B]
+    lower = jnp.tril(jnp.ones((B, B), jnp.bool_), k=-1)
+    rank = (same & lower & committed[None, :]).sum(axis=1).astype(jnp.int32)
+    o_id = state.d_next_o_id[wl, batch.d] + rank                   # [B]
+    d_next = state.d_next_o_id.at[wl, batch.d].add(
+        committed.astype(jnp.int32))
+
+    # aborted txns scatter out of range and are dropped
+    slot = jnp.where(committed, o_id % OC, OC)                     # [B]
+
+    # ---- ORDER + NEW-ORDER inserts (committed only) ------------------------
+    at = lambda arr: arr.at[wl, batch.d, slot]
+    o_valid = at(state.o_valid).set(True, mode="drop")
+    o_c_id = at(state.o_c_id).set(batch.c, mode="drop")
+    o_ol_cnt = at(state.o_ol_cnt).set(batch.n_lines, mode="drop")
+    o_carrier = at(state.o_carrier).set(-1, mode="drop")
+    o_entry_d = at(state.o_entry_d).set(batch.ts, mode="drop")
+    no_valid = at(state.no_valid).set(True, mode="drop")
+    o_ts = at(state.o_ts).set(ramp_ts, mode="drop")
+
+    # ---- ORDER-LINE inserts (whole row per order, L as scatter window) -----
+    price = state.i_price[wl[:, None], batch.i_id]                 # [B, L]
+    amount = price * batch.qty.astype(price.dtype)
+    amount = jnp.where(line_valid, amount, 0.0)
+
+    ol_valid = at(state.ol_valid).set(line_valid, mode="drop")
+    ol_i_id = at(state.ol_i_id).set(batch.i_id, mode="drop")
+    ol_supply = at(state.ol_supply_w).set(batch.supply_w, mode="drop")
+    ol_qty = at(state.ol_qty).set(
+        jnp.where(line_valid, batch.qty, 0), mode="drop")
+    ol_amount = at(state.ol_amount).set(amount, mode="drop")
+    ol_ts = at(state.ol_ts).set(
+        jnp.where(line_valid, ramp_ts[:, None], -1), mode="drop")
+    ol_vis = at(state.ol_vis).set(line_valid, mode="drop")
+
+    state = state._replace(
+        d_next_o_id=d_next, o_valid=o_valid, o_c_id=o_c_id,
+        o_ol_cnt=o_ol_cnt, o_carrier=o_carrier, o_entry_d=o_entry_d,
+        no_valid=no_valid, ol_valid=ol_valid, ol_i_id=ol_i_id,
+        ol_supply_w=ol_supply, ol_qty=ol_qty, ol_amount=ol_amount,
+        o_ts=o_ts, ol_ts=ol_ts, ol_vis=ol_vis)
+
+    # ---- STOCK: admitted spends — local applied now, remote via outbox -----
+    flat_w = batch.supply_w.reshape(-1)
+    flat_i = batch.i_id.reshape(-1)
+    flat_q = batch.qty.reshape(-1)
+    flat_ok = line_ok.reshape(-1)
+    is_local = (flat_w >= w_lo) & (flat_w < w_hi)
+    is_remote_line = (batch.supply_w != batch.w[:, None]).reshape(-1)
+
+    state = apply_stock_updates(state, flat_w - w_lo, flat_i, flat_q,
+                                flat_ok & is_local, is_remote_line,
+                                restock=False)
+
+    rmask = flat_ok & ~is_local
+    delta = StockDelta(dst_w=jnp.where(rmask, flat_w, 0),
+                       i_id=jnp.where(rmask, flat_i, 0),
+                       qty=jnp.where(rmask, flat_q, 0),
+                       valid=rmask)
+
+    # ---- total amount (0 for aborted txns) ---------------------------------
+    disc = state.c_discount[wl, batch.d, batch.c]
+    tax = state.w_tax[wl] + state.d_tax[wl, batch.d]
+    total = amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
+    total = jnp.where(committed, total, 0.0)
+    return state, spent, delta, total, committed
 
 
 # ---------------------------------------------------------------------------
@@ -571,3 +739,138 @@ def tpcc_invariants() -> list[tuple[int, Invariant, bool]]:
                        params={"source": "order_line.ol_amount"}), True),
     ]
     return rows
+
+
+# ---------------------------------------------------------------------------
+# TPC-C as a planner state tree: every table/column the engine mutates,
+# declared as (lattice, ops, invariants). core/planner.plan() over these
+# specs is what SELECTS the engine's execution regime per state element —
+# the paper's "coordinate only where the analyzer proves non-confluence".
+# ---------------------------------------------------------------------------
+
+
+STOCK_INVARIANTS = ("restock", "strict", "serial")
+
+
+def tpcc_state_specs(stock_invariant: str = "restock"):
+    """TPC-C state elements as core.planner.StateSpec declarations.
+
+    ``stock_invariant`` is the *application's schema declaration* for
+    STOCK.S_QUANTITY (the knob is what invariant the app demands — the
+    execution regime is then derived by the analyzer, never hand-picked):
+
+      "restock" — the spec's §2.4.2.2 rule (+91 re-up keeps the quantity in
+          one residue window): no floor invariant to violate, decrements are
+          plain commutative counter updates -> COORDINATION_FREE (merge
+          path, asynchronous anti-entropy).
+      "strict"  — a hard ``s_quantity >= 0`` floor with no restock:
+          GREATER_THAN x decrement is NOT I-confluent (Table 2), but the
+          paper's §8 escrow method applies -> ESCROW (per-replica shares,
+          local try_spend, amortized refresh as the only collective).
+      "serial"  — an opaque/custom "exact serializable stock" demand the
+          analyzer has no local rule for -> COORDINATION_REQUIRED (the 2PC
+          engine is the fallback; see engine.plan_engine).
+    """
+    from repro.core.planner import StateSpec
+    from repro.core.txn import Op, OpKind
+
+    def inv(name, kind, target, params=None):
+        return Invariant(name, kind, target, None, params or {})
+
+    fk = InvariantKind.FOREIGN_KEY
+    mv = InvariantKind.MATERIALIZED_VIEW
+
+    if stock_invariant == "restock":
+        stock_spec = StateSpec(
+            "stock.s_quantity", "pncounter",
+            (Op(OpKind.DECREMENT, "stock.s_quantity"),
+             Op(OpKind.INCREMENT, "stock.s_quantity")),
+            (),
+            merge_every=0,
+            note="spec restock rule: decrement-then-+91 keeps one residue "
+                 "window; no floor invariant -> commutative counter")
+    elif stock_invariant == "strict":
+        stock_spec = StateSpec(
+            "stock.s_quantity", "escrow",
+            (Op(OpKind.DECREMENT, "stock.s_quantity"),),
+            (inv("s_quantity_nonneg", InvariantKind.GREATER_THAN,
+                 "stock.s_quantity", {"threshold": -1}),),
+            merge_every=0,
+            note="hard s_quantity >= 0 floor, no restock: concurrent "
+                 "decrements can jointly cross it -> escrow shares (§8)")
+    elif stock_invariant == "serial":
+        stock_spec = StateSpec(
+            "stock.s_quantity", "lww",
+            (Op(OpKind.DECREMENT, "stock.s_quantity"),),
+            (inv("s_quantity_serializable", InvariantKind.CUSTOM,
+                 "stock.s_quantity",
+                 {"semantics": "globally ordered exact stock"}),),
+            merge_every=1,
+            note="opaque serializability demand: no local rule -> "
+                 "synchronous coordination (2PC fallback)")
+    else:
+        raise ValueError(f"unknown stock_invariant {stock_invariant!r}; "
+                         f"choose from {STOCK_INVARIANTS}")
+
+    return [
+        StateSpec(
+            "warehouse.w_ytd", "sum",
+            (Op(OpKind.INCREMENT, "warehouse.w_ytd"),),
+            (inv("w_ytd_sums_history", mv, "warehouse.w_ytd",
+                 {"source": "history.h_amount"}),),
+            merge_every=0,
+            note="criteria 1/8: materialized payment sums, commutative"),
+        StateSpec(
+            "district.d_ytd", "sum",
+            (Op(OpKind.INCREMENT, "district.d_ytd"),),
+            (inv("d_ytd_sums_history", mv, "district.d_ytd",
+                 {"source": "history.h_amount"}),),
+            merge_every=0),
+        StateSpec(
+            "district.d_next_o_id", "max",
+            (Op(OpKind.INSERT, "district.d_next_o_id"),),
+            (inv("d_next_o_id_sequential", InvariantKind.AUTO_INCREMENT,
+                 "district.d_next_o_id"),),
+            merge_every=0,
+            note="criteria 2/3: dense sequential o_ids — deferred "
+                 "commit-time assignment by the district's owning shard "
+                 "(the batched increment-and-get in apply_neworder)"),
+        StateSpec(
+            "order.rows", "versioned",
+            (Op(OpKind.INSERT, "order.rows"),),
+            (inv("ol_count_matches_o_ol_cnt", fk, "order_line.o_id",
+                 {"references": "order.rows"}),),
+            merge_every=0,
+            note="criteria 4/6: FK inserts, I-confluent"),
+        StateSpec(
+            "new_order.rows", "2pset",
+            (Op(OpKind.INSERT, "new_order.rows"),
+             Op(OpKind.CASCADING_DELETE, "new_order.rows")),
+            (inv("carrier_null_iff_new_order", fk, "order.carrier",
+                 {"references": "new_order.rows"}),),
+            merge_every=0,
+            note="criteria 5/11: Delivery's removal is a cascading "
+                 "tombstone, monotone under merge"),
+        StateSpec(
+            "order_line.rows", "versioned",
+            (Op(OpKind.INSERT, "order_line.rows"),),
+            (inv("ol_delivery_iff_carrier", fk, "order_line.rows",
+                 {"references": "order.carrier"}),),
+            merge_every=0),
+        StateSpec(
+            "customer.c_balance", "sum",
+            (Op(OpKind.INCREMENT, "customer.c_balance"),
+             Op(OpKind.DECREMENT, "customer.c_balance")),
+            (inv("c_balance_materialized", mv, "customer.c_balance",
+                 {"source": "order_line.ol_amount"}),),
+            merge_every=0,
+            note="criteria 10/12: balance is a materialized view of "
+                 "payments and delivered order-lines"),
+        StateSpec(
+            "stock.s_ytd", "sum",
+            (Op(OpKind.INCREMENT, "stock.s_ytd"),),
+            (inv("s_ytd_materialized", mv, "stock.s_ytd",
+                 {"source": "order_line.ol_qty"}),),
+            merge_every=0),
+        stock_spec,
+    ]

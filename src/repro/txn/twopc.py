@@ -42,9 +42,20 @@ from .tpcc import NewOrderBatch, OrderStatusBatch, TPCCScale, TPCCState
 
 @dataclasses.dataclass
 class TwoPCEngine:
+    """``strict_stock=True`` is the COORDINATION_REQUIRED fallback the
+    planner selects for an opaque "serializable stock" invariant
+    (``engine.plan_engine(stock_invariant="serial")``): every step
+    synchronously broadcasts the full write intent — the global batch AND
+    the global state — and every shard replays the whole batch in timestamp
+    order against the gathered stock (strict ``s_quantity >= 0``, atomic
+    aborts, no restock), keeping only its own slice. That is exactly the
+    redundant, collective-heavy execution a serializable system pays for,
+    and the contrast to the escrow regime's local ``try_spend``."""
+
     scale: TPCCScale
     mesh: Mesh
     axis_names: tuple[str, ...] = ("data",)
+    strict_stock: bool = False
 
     def __post_init__(self):
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
@@ -112,10 +123,64 @@ class TwoPCEngine:
             ok = (vote == self.n_shards) & (granted.sum() > 0)
             return res._replace(found=res.found & ok)
 
-        self._step = jax.jit(_step, donate_argnums=0)
+        @functools.partial(shard_map, mesh=self.mesh,
+                           in_specs=(spec, spec),
+                           out_specs=(spec, spec),
+                           check_vma=False)
+        def _step_strict(state: TPCCState, batch: NewOrderBatch):
+            idx = jnp.asarray(0)
+            for a in ax:
+                idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+            w_lo = idx * self.w_per_shard
+            b_local = batch.w.shape[0]
+
+            def gather(x):
+                for a in reversed(ax):
+                    x = jax.lax.all_gather(x, a)
+                if len(ax) > 1:
+                    x = x.reshape((-1,) + x.shape[len(ax):])
+                return x
+
+            # prepare phase: broadcast the full write intent — the global
+            # batch AND the global state (lock acquisition payload)
+            g_batch = jax.tree.map(
+                lambda x: gather(x).reshape((-1,) + x.shape[1:]), batch)
+            g_state = jax.tree.map(
+                lambda x: gather(x).reshape((-1,) + x.shape[1:]), state)
+
+            # serializable execution: every shard replays the WHOLE batch in
+            # timestamp order with the entire stock as one escrow share —
+            # exact sequential strict-stock semantics, replicated work
+            shares = g_state.s_quantity
+            spent = jnp.zeros_like(shares)
+            g_state, _, delta, _, ok = tpcc.apply_neworder_escrow(
+                g_state, shares, spent, g_batch, self.scale,
+                w_lo=0, w_hi=self.scale.n_warehouses,
+                replica=0, num_replicas=1)
+            # everything is "local" in the global replay: empty outbox
+            del delta
+
+            # commit: keep only this participant's slice of the new state
+            state = jax.tree.map(
+                lambda g: jax.lax.dynamic_slice_in_dim(
+                    g, w_lo, self.w_per_shard, axis=0), g_state)
+            ok_local = jax.lax.dynamic_slice_in_dim(
+                ok, idx * b_local, b_local, axis=0)
+
+            # commit barrier: unanimous vote (all-reduce over shards)
+            vote = jnp.ones((), jnp.int32)
+            for a in ax:
+                vote = jax.lax.psum(vote, a)
+            ok_local = ok_local & (vote == self.n_shards)
+            return state, ok_local
+
+        self._step = jax.jit(_step_strict if self.strict_stock else _step,
+                             donate_argnums=0)
         self._read = jax.jit(_read)
 
     def step(self, state: TPCCState, batch: NewOrderBatch):
+        """Returns (state, totals) — or (state, committed mask) under
+        ``strict_stock`` (aborted transactions have no effects)."""
         return self._step(state, batch)
 
     def read_step(self, state: TPCCState, batch: OrderStatusBatch):
@@ -156,8 +221,10 @@ def run_closed_loop_2pc(engine: TwoPCEngine, state: TPCCState, *,
     """Drive the coordinated baseline. Per batch it charges
     ``commit_latency_s`` x (conflicting rounds on the hottest district) —
     the serialization the coordination-avoiding engine's batched
-    increment-and-get makes unnecessary."""
-    from .engine import RunStats
+    increment-and-get makes unnecessary. Under ``strict_stock`` the step
+    returns committed masks; aborted (insufficient-stock) transactions are
+    reported in ``stats.aborted``."""
+    from .engine import RunStats, _tree_copy
 
     rng = np.random.default_rng(seed)
     B = batch_per_shard * engine.n_shards
@@ -172,6 +239,28 @@ def run_closed_loop_2pc(engine: TwoPCEngine, state: TPCCState, *,
                 w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
             ts0 += batch_per_shard
         batches.append(jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
+
+    if engine.strict_stock:
+        # warmup on a copy so every batch is timed exactly once
+        warm, _ = engine.step(_tree_copy(state), batches[0])
+        jax.block_until_ready(warm)
+        del warm
+
+        stats = RunStats()
+        commit_acc = jnp.zeros((), jnp.int32)
+        latency_charged = 0.0
+        t0 = time.perf_counter()
+        for i in range(n_batches):
+            state, ok = engine.step(state, batches[i])
+            commit_acc = commit_acc + ok.sum().astype(jnp.int32)
+            stats.batches += 1
+            latency_charged += commit_latency_s * _conflict_rounds(
+                batches[i], engine.scale.districts)
+        jax.block_until_ready((state, commit_acc))
+        stats.wall_seconds = (time.perf_counter() - t0) + latency_charged
+        stats.committed = int(commit_acc)
+        stats.aborted = B * n_batches - stats.committed
+        return state, stats
 
     state, _ = engine.step(state, batches[0])  # warmup
     jax.block_until_ready(state)

@@ -19,6 +19,72 @@ def test_table2_matches_paper_exactly():
     assert len(rows) == len(an.TABLE2_ROWS)
 
 
+# The FULL (invariant kind x op kind) grid, frozen: the set of op kinds the
+# analyzer must call NOT-confluent for each invariant kind. Paper Table 2
+# pins the subset it lists; the remaining cells are the analyzer's documented
+# extensions (reads always confluent; unlisted ops that cannot affect the
+# invariant are confluent; CUSTOM is conservative). Any drift in classify()
+# — and hence in benchmarks/paper_figures.table2 — fails HERE, in tier 1,
+# instead of silently changing the benchmark row.
+GRID_NOT_CONFLUENT = {
+    InvariantKind.EQUALITY: set(),
+    InvariantKind.INEQUALITY: set(),
+    InvariantKind.UNIQUENESS: {OpKind.INSERT, OpKind.UPDATE,
+                               OpKind.ASSIGN_SPECIFIC},
+    InvariantKind.AUTO_INCREMENT: {OpKind.INSERT, OpKind.ASSIGN_SPECIFIC,
+                                   OpKind.ASSIGN_SOME, OpKind.DELETE,
+                                   OpKind.CASCADING_DELETE},
+    InvariantKind.FOREIGN_KEY: {OpKind.DELETE},
+    InvariantKind.SECONDARY_INDEX: set(),
+    InvariantKind.MATERIALIZED_VIEW: set(),
+    InvariantKind.GREATER_THAN: {OpKind.DECREMENT},
+    InvariantKind.LESS_THAN: {OpKind.INCREMENT},
+    InvariantKind.CONTAINS: set(),
+    InvariantKind.LIST_POSITION: {OpKind.LIST_MUTATE, OpKind.INSERT,
+                                  OpKind.DELETE, OpKind.CASCADING_DELETE,
+                                  OpKind.UPDATE},
+    InvariantKind.CUSTOM: set(OpKind) - {OpKind.READ},
+}
+
+
+def test_full_grid_parity_with_paper_table():
+    """Diff classify() over the ENTIRE (invariant kind x op kind) grid
+    against the frozen expectation — and re-derive the paper's Table 2 rows
+    from the same grid, so the two can never drift apart."""
+    assert set(GRID_NOT_CONFLUENT) == set(InvariantKind)
+    mismatches = []
+    for kind in InvariantKind:
+        for op in OpKind:
+            v = classify(Invariant("i", kind), Op(op))
+            expected_free = op not in GRID_NOT_CONFLUENT[kind]
+            if v.coordination_free != expected_free:
+                mismatches.append((kind.value, op.value, str(v)))
+    assert not mismatches, mismatches
+    # every row the paper's table pins is consistent with the grid
+    for label, kind, op_label, op_kind, paper_confluent in an.TABLE2_ROWS:
+        assert (op_kind not in GRID_NOT_CONFLUENT[kind]) == paper_confluent, \
+            (label, op_label)
+
+
+def test_grid_mitigation_strategies():
+    """The non-confluent cells carry the paper's prose mitigations: escrow
+    for threshold counters, deferred assignment for sequences, sync for the
+    rest."""
+    for kind, op, strategy in [
+            (InvariantKind.GREATER_THAN, OpKind.DECREMENT, Strategy.ESCROW),
+            (InvariantKind.LESS_THAN, OpKind.INCREMENT, Strategy.ESCROW),
+            (InvariantKind.AUTO_INCREMENT, OpKind.INSERT,
+             Strategy.DEFERRED_ASSIGNMENT),
+            (InvariantKind.UNIQUENESS, OpKind.ASSIGN_SPECIFIC,
+             Strategy.SYNC_COORDINATION),
+            (InvariantKind.CUSTOM, OpKind.DECREMENT,
+             Strategy.SYNC_COORDINATION),
+            (InvariantKind.LIST_POSITION, OpKind.CASCADING_DELETE,
+             Strategy.SYNC_COORDINATION)]:
+        v = classify(Invariant("i", kind), Op(op))
+        assert v.strategy is strategy, (kind, op, v)
+
+
 @pytest.mark.parametrize("kind,op,expected", [
     (InvariantKind.EQUALITY, OpKind.INSERT, True),
     (InvariantKind.EQUALITY, OpKind.DELETE, True),

@@ -83,3 +83,20 @@ def test_elastic_restore_new_sharding():
             lambda _: NamedSharding(mesh, P()), jax.eval_shape(lambda: s))
         out = ck.restore(d, man, jax.eval_shape(lambda: s), shardings)
         assert jnp.array_equal(out["params"]["b"], s["params"]["b"])
+
+
+def test_digit_prefixed_temp_id_does_not_shadow_committed():
+    """Regression: temp ids are random hex, so ~6% begin with six digits —
+    a temp manifest (seq_id=None) must never sort above a committed
+    ckpt-NNNNNN manifest in latest_manifest."""
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        man = ck.save(d, s, step=1)
+        committed = ck.assign_sequential(d, man)  # ckpt-000000
+        # adversarial temp manifest: six leading digits, sorts after
+        shadow = dataclasses.replace(man, temp_id="ckpt-999999aaaaaa")
+        with open(os.path.join(d, "ckpt-999999aaaaaa-w0.manifest.json"),
+                  "w") as f:
+            f.write(shadow.to_json())
+        latest = ck.latest_manifest(d)
+        assert latest.seq_id == committed.seq_id == 0

@@ -65,6 +65,12 @@ def test_dryrun_tpcc_zero_collective_hot_path():
         # the fused full-mix megastep (txn/executor.py) is collective-free
         # at spec scale too
         assert cells[0]["fused_megastep"]["collectives"]["counts"] == {}
+        # the plan-selected escrow regime: strict-stock hot path free at
+        # spec scale, and the concrete tier-1 escrow run passes the
+        # consistency audit (strict stock + escrow conservation)
+        assert cells[0]["escrow_neworder"]["collectives"]["counts"] == {}
+        assert cells[0]["escrow_audit"]["audit_ok"]
+        assert cells[0]["escrow_audit"]["committed"] > 0
 
 
 @pytest.mark.slow

@@ -10,8 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.planner import CoordClass
 from repro.txn import tpcc
-from repro.txn.engine import run_closed_loop, single_host_engine
+from repro.txn.audit import assert_audit
+from repro.txn.engine import (plan_engine, run_closed_loop, run_escrow_loop,
+                              single_host_engine)
 from repro.txn.tpcc import TPCCScale, check_consistency, init_state
 from repro.txn.twopc import TwoPCEngine, run_closed_loop_2pc
 
@@ -24,6 +27,11 @@ def engine():
     return single_host_engine(SCALE)
 
 
+@pytest.fixture(scope="module")
+def escrow_engine():
+    return single_host_engine(SCALE, stock_invariant="strict")
+
+
 def test_closed_loop_converges_consistent(engine):
     state = engine.shard_state(init_state(SCALE))
     state, stats = run_closed_loop(engine, state, batch_per_shard=16,
@@ -34,6 +42,7 @@ def test_closed_loop_converges_consistent(engine):
     assert stats.committed == 16 * 8
     c = check_consistency(state)
     assert all(c.values()), c
+    assert_audit(state)
 
 
 def test_hot_path_zero_collectives(engine):
@@ -52,9 +61,80 @@ def test_deferred_merge_windows_do_not_break_consistency(engine):
                                    n_batches=8, remote_frac=0.5,
                                    merge_every=merge_every, seed=1)
         assert all(check_consistency(state).values())
+        assert_audit(state)
         finals.append(jax.device_get(state.s_ytd).sum())
     # all stock updates reflected regardless of merge cadence
     assert np.allclose(finals[0], finals[1]) and np.allclose(finals[1], finals[2])
+
+
+# -- plan-selected regimes ---------------------------------------------------
+
+
+def test_plan_selects_regimes():
+    """The acceptance contract: the engine's regime comes from
+    core.planner.plan() over the declared invariants, never a hand flag."""
+    free = single_host_engine(SCALE)  # restock declaration
+    assert free.stock_regime is CoordClass.FREE
+    strict = single_host_engine(SCALE, stock_invariant="strict")
+    assert strict.stock_regime is CoordClass.ESCROW
+    # escrow methods are refused outside the plan-selected escrow regime
+    with pytest.raises(RuntimeError, match="not escrow"):
+        free.init_escrow(free.shard_state(init_state(SCALE)))
+    # a COORDINATION_REQUIRED verdict is refused by the avoiding engine ...
+    with pytest.raises(ValueError, match="COORDINATION_REQUIRED"):
+        single_host_engine(SCALE, stock_invariant="serial")
+    # ... and plan_engine falls back to the synchronous 2PC baseline
+    two = plan_engine(SCALE, free.mesh, free.axis_names,
+                      stock_invariant="serial")
+    assert isinstance(two, TwoPCEngine) and two.strict_stock
+    assert two.plan.entry("stock.s_quantity").coord_class \
+        is CoordClass.REQUIRED
+
+
+def test_escrow_regime_strict_stock_closed_loop(escrow_engine):
+    """The escrow regime end-to-end: strict s_quantity >= 0 holds, aborts
+    are atomic, the audit oracle (incl. escrow conservation) passes, and
+    the hot path is structurally collective-free while the refresh is the
+    regime's only collective."""
+    eng = escrow_engine
+    desc = eng.prove_coordination_free(batch_per_shard=8)
+    assert "NONE" in desc
+    assert eng.count_refresh_collectives().total_ops > 0
+
+    state = eng.shard_state(init_state(SCALE))
+    q0 = state.s_quantity.copy()
+    state, esc, stats = run_escrow_loop(
+        eng, state, batch_per_shard=16, n_batches=8, remote_frac=0.2,
+        merge_every=3, refresh_every=2, seed=0, mix=True, fused=False)
+    assert stats.neworders + stats.aborts == 16 * 8
+    assert stats.aborts > 0          # demand exceeds the tiny inventory
+    assert stats.refreshes == 1      # rounds=3, refresh_every=2
+    assert int(jax.device_get(state.s_quantity).min()) >= 0
+    assert_audit(state, escrow=esc, initial_stock=q0, strict_stock=True)
+
+
+def test_escrow_vs_2pc_same_strict_semantics(escrow_engine):
+    """Both strict engines enforce the same invariant: no negative stock,
+    exact conservation — the escrow one without hot-path collectives, the
+    2PC one with them (and more commits: it spends from the global pool
+    while escrow spends from per-replica shares)."""
+    eng = escrow_engine
+    two = plan_engine(SCALE, eng.mesh, eng.axis_names,
+                      stock_invariant="serial")
+    s1 = eng.shard_state(init_state(SCALE))
+    q0 = s1.s_quantity.copy()
+    s1, esc, st1 = run_escrow_loop(eng, s1, batch_per_shard=8, n_batches=5,
+                                   merge_every=2, seed=2, mix=False,
+                                   fused=False)
+    s2 = eng.shard_state(init_state(SCALE))
+    s2, st2 = run_closed_loop_2pc(two, s2, batch_per_shard=8, n_batches=5,
+                                  seed=2)
+    assert_audit(s1, escrow=esc, initial_stock=q0, strict_stock=True)
+    assert_audit(s2, initial_stock=q0, strict_stock=True)
+    assert two.hot_path_collectives(8).total_ops > 0
+    # the global-pool serializable baseline admits at least as much work as
+    # share-partitioned escrow on the identical stream
+    assert st2.committed >= st1.neworders
 
 
 def test_2pc_baseline_same_effects(engine):
@@ -74,9 +154,10 @@ def test_2pc_baseline_same_effects(engine):
 
 _SUBPROC = r"""
 import jax, numpy as np
-from repro.txn.engine import single_host_engine, run_closed_loop
+from repro.txn.engine import single_host_engine, run_closed_loop, run_escrow_loop
 from repro.txn.twopc import TwoPCEngine
 from repro.txn.tpcc import TPCCScale, init_state, check_consistency
+from repro.txn.audit import assert_audit
 assert len(jax.devices()) == 8, jax.devices()
 scale = TPCCScale(n_warehouses=8, districts=4, customers=8, n_items=64,
                   order_capacity=64, max_lines=15)
@@ -98,14 +179,41 @@ state = e.shard_state(init_state(scale))
 state, stats = run_closed_loop(e, state, batch_per_shard=4, n_batches=6,
                                remote_frac=0.4, merge_every=2)
 assert all(check_consistency(state).values())
+assert_audit(state)
+
+# -- escrow regime on 8 real shards: hot path free between refreshes,
+# refresh (the regime's only collective) communicates, fused == dispatch
+# bit-exactly, strict stock + conservation audited
+es = single_host_engine(scale, stock_invariant="strict")
+print("ESCROW:", es.prove_coordination_free(4))
+assert es.count_refresh_collectives().total_ops > 0, "refresh must gather"
+exs = FusedExecutor(es, ring_rows=2)
+print("ESCROW-MEGASTEP:", exs.prove_megastep_coordination_free(
+    chunk_len=2, batch_per_shard=4, read_per_shard=1))
+assert exs.count_drain_refresh_collectives(4).total_ops > 0
+kw = dict(batch_per_shard=4, n_batches=6, remote_frac=0.4, merge_every=2,
+          refresh_every=2, seed=1, mix=True)
+s1 = es.shard_state(init_state(scale))
+q0 = s1.s_quantity.copy()
+s1, esc1, st1 = run_escrow_loop(es, s1, fused=False, **kw)
+s2 = es.shard_state(init_state(scale))
+s2, esc2, st2 = run_escrow_loop(es, s2, fused=True, **kw)
+eq = jax.tree.map(lambda a, b: bool((a == b).all()), s1, s2)
+bad = [f for f, ok in zip(s1._fields, eq) if not ok]
+assert bad == [], bad
+assert bool((esc1.shares == esc2.shares).all())
+assert bool((esc1.spent == esc2.spent).all())
+assert (st1.neworders, st1.aborts) == (st2.neworders, st2.aborts)
+assert_audit(s1, escrow=esc1, initial_stock=q0, strict_stock=True)
 print("OK")
 """
 
 
 @pytest.mark.slow
 def test_multi_device_proof_subprocess():
-    """8 simulated devices: hot path + fused megastep free, anti-entropy,
-    ring drain & 2PC coordinate.
+    """8 simulated devices: hot path + fused megastep (both regimes) free;
+    anti-entropy, ring drain, escrow refresh & 2PC coordinate; escrow
+    fused == dispatch bit-exactly; strict-stock audit passes.
 
     Runs in a subprocess so the main test process keeps 1 CPU device.
     """
@@ -118,7 +226,9 @@ def test_multi_device_proof_subprocess():
     assert out.returncode == 0, out.stderr[-3000:]
     assert "HOTPATH: collectives: NONE" in out.stdout
     assert "MEGASTEP: collectives: NONE" in out.stdout
-    # New-Order, both RAMP reads, AND the fused full-mix megastep are
-    # collective-free on 8 real shards
-    assert out.stdout.count("collectives: NONE") == 4
+    assert "ESCROW: collectives: NONE" in out.stdout
+    assert "ESCROW-MEGASTEP: collectives: NONE" in out.stdout
+    # New-Order, both RAMP reads, the fused full-mix megastep, AND both
+    # escrow hot paths are collective-free on 8 real shards
+    assert out.stdout.count("collectives: NONE") == 6
     assert "OK" in out.stdout

@@ -1,0 +1,196 @@
+"""Escrow-regime property tests (paper §8, O'Neil's escrow method).
+
+Lattice level: for ARBITRARY interleavings of per-replica ``try_spend``s,
+gossip ``join``s, and global share ``refresh``es, the escrowed stock can
+never go below zero and the total admitted spend can never exceed the
+initial inventory — while a control protocol with naive local decrements
+(each replica checks only its own view of stock) does violate both.
+
+Engine level: random adversarial demand streams through the plan-selected
+escrow regime keep strict ``s_quantity >= 0`` and pass the full consistency
+audit (repro/txn/audit.py) on every run.
+
+The simulation core is shared between a deterministic seeded sweep (always
+runs) and a hypothesis-driven search (runs where hypothesis is installed —
+CI installs it via the ``test`` extra).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: deterministic sweep only
+    HAVE_HYPOTHESIS = False
+
+from repro.core.lattice import EscrowCounter
+from repro.txn.audit import assert_audit
+from repro.txn.engine import run_escrow_loop, single_host_engine
+from repro.txn.tpcc import TPCCScale, init_state
+
+R, W, I = 3, 2, 3  # replicas x warehouses x items (lattice-level model)
+
+
+def _partition(stock: np.ndarray) -> np.ndarray:
+    r = np.arange(R)[:, None, None]
+    return (stock // R + (r < stock % R)).astype(np.int64)
+
+
+def _join(a: EscrowCounter, b: EscrowCounter) -> EscrowCounter:
+    return EscrowCounter(np.minimum(a.shares, b.shares),
+                         np.maximum(a.spent, b.spent))
+
+
+def _simulate_escrow(seed: int, ops: list) -> None:
+    """Replay one interleaving; assert the invariants the paper's §8 escrow
+    method guarantees: Σ admitted spend <= initial inventory per cell, and
+    the replayed owner-side stock never dips below zero."""
+    rng = np.random.default_rng(seed)
+    stock0 = rng.integers(0, 60, (W, I)).astype(np.int64)
+    stock = stock0.copy()           # owner-side stock, updated at refresh
+    total_admitted = np.zeros((W, I), np.int64)
+
+    shares = _partition(stock)
+    views = [EscrowCounter(shares.copy(), np.zeros_like(shares))
+             for _ in range(R)]
+
+    def global_sync():
+        """Merge every view, apply the admitted spends to stock, and hand
+        out fresh shares — the amortized coordination point."""
+        nonlocal stock, views
+        m = views[0]
+        for v in views[1:]:
+            m = _join(m, v)
+        spent_total = m.spent.sum(0)
+        stock = stock - spent_total
+        assert np.all(stock >= 0), "refresh drove stock negative"
+        fresh_shares = _partition(stock)
+        views = [EscrowCounter(fresh_shares.copy(),
+                               np.zeros((R, W, I), np.int64))
+                 for _ in range(R)]
+
+    for op in ops:
+        if op[0] == "spend":
+            _, r, w, i, amt = op
+            v = views[r]
+            if v.spent[r, w, i] + amt <= v.shares[r, w, i]:  # try_spend
+                v.spent[r, w, i] += amt
+                total_admitted[w, i] += amt
+        elif op[0] == "gossip":
+            _, r1, r2 = op
+            views[r1] = _join(views[r1], views[r2])
+            # gossip must never manufacture admission capacity
+            assert np.all(views[r1].spent[r1] <= views[r1].shares[r1])
+        else:
+            global_sync()
+
+    global_sync()
+    assert np.all(total_admitted <= stock0), \
+        "escrow admitted more spend than the initial inventory"
+    assert np.array_equal(stock, stock0 - total_admitted)
+
+
+def _random_ops(rng: np.random.Generator, n: int) -> list:
+    ops = []
+    for _ in range(n):
+        k = rng.random()
+        if k < 0.75:
+            ops.append(("spend", int(rng.integers(R)), int(rng.integers(W)),
+                        int(rng.integers(I)), int(rng.integers(1, 41))))
+        elif k < 0.9:
+            ops.append(("gossip", int(rng.integers(R)),
+                        int(rng.integers(R))))
+        else:
+            ops.append(("refresh",))
+    return ops
+
+
+def test_escrow_interleavings_never_oversell_seeded():
+    """Deterministic sweep of the interleaving property (no hypothesis
+    needed): 60 seeded random schedules, spend-heavy and refresh-light."""
+    for seed in range(60):
+        rng = np.random.default_rng(1000 + seed)
+        _simulate_escrow(seed, _random_ops(rng, int(rng.integers(5, 61))))
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("spend"), st.integers(0, R - 1),
+                      st.integers(0, W - 1), st.integers(0, I - 1),
+                      st.integers(1, 40)),
+            st.tuples(st.just("gossip"), st.integers(0, R - 1),
+                      st.integers(0, R - 1)),
+            st.tuples(st.just("refresh"))),
+        min_size=5, max_size=60)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), ops=_ops)
+    def test_escrow_interleavings_never_oversell(seed, ops):
+        """Hypothesis search over spend/gossip/refresh interleavings."""
+        _simulate_escrow(seed, ops)
+
+
+def test_naive_local_decrements_do_oversell():
+    """The control: replicas that check only their LOCAL view of stock
+    (no shares) jointly cross the floor — the paper's two-withdrawals
+    anomaly, and why GREATER_THAN x decrement lands in Table 2's
+    non-confluent cell."""
+    stock0 = np.full((W, I), 50, np.int64)
+    local_spent = [np.zeros((W, I), np.int64) for _ in range(R)]
+    # every replica greedily sells 40 units of cell (0, 0): each sees
+    # 50 - 40 >= 0 locally and admits it
+    for r in range(R):
+        if stock0[0, 0] - local_spent[r][0, 0] - 40 >= 0:
+            local_spent[r][0, 0] += 40
+    total = sum(s[0, 0] for s in local_spent)
+    assert total > stock0[0, 0]             # oversold: 120 > 50
+    assert stock0[0, 0] - total < 0         # merged stock goes negative
+
+
+SCALE = TPCCScale(n_warehouses=2, districts=2, customers=8, n_items=32,
+                  order_capacity=256, max_lines=15)
+
+
+@pytest.fixture(scope="module")
+def escrow_engine():
+    return single_host_engine(SCALE, stock_invariant="strict")
+
+
+def _engine_stream_case(eng, seed, merge_every, refresh_every, remote_frac):
+    state = eng.shard_state(init_state(SCALE, seed=seed % 5))
+    q0 = state.s_quantity.copy()
+    state, esc, stats = run_escrow_loop(
+        eng, state, batch_per_shard=8, n_batches=6, remote_frac=remote_frac,
+        merge_every=merge_every, refresh_every=refresh_every, seed=seed,
+        mix=True, fused=True)
+    assert stats.neworders + stats.aborts == 8 * 6
+    assert int(jax.device_get(state.s_quantity).min()) >= 0
+    assert_audit(state, escrow=esc, initial_stock=q0, strict_stock=True)
+
+
+@pytest.mark.parametrize("seed,merge_every,refresh_every,remote_frac", [
+    (0, 2, 1, 0.0), (7, 3, 2, 0.5), (23, 2, 2, 0.5), (99, 3, 1, 0.0),
+])
+def test_engine_escrow_streams_audit_clean(escrow_engine, seed, merge_every,
+                                           refresh_every, remote_frac):
+    """Adversarial demand streams (inventory is tiny relative to demand)
+    through the plan-selected escrow regime: strict stock holds and the
+    full audit — incl. Σ(shares - spent) == s_quantity conservation —
+    passes for every seed/cadence."""
+    _engine_stream_case(escrow_engine, seed, merge_every, refresh_every,
+                        remote_frac)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           merge_every=st.sampled_from([2, 3]),
+           refresh_every=st.sampled_from([1, 2]),
+           remote_frac=st.sampled_from([0.0, 0.5]))
+    def test_engine_escrow_streams_audit_clean_hypothesis(
+            escrow_engine, seed, merge_every, refresh_every, remote_frac):
+        _engine_stream_case(escrow_engine, seed, merge_every, refresh_every,
+                            remote_frac)

@@ -15,8 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.txn.engine import (run_closed_loop, run_mixed_loop,
-                              single_host_engine)
+from repro.txn.audit import assert_audit
+from repro.txn.engine import (run_closed_loop, run_escrow_loop,
+                              run_mixed_loop, single_host_engine)
 from repro.txn.executor import (FusedExecutor, MixChunk, counters_to_stats,
                                 run_fused_loop, stack_chunks)
 from repro.txn.engine import generate_mix_batches
@@ -29,6 +30,11 @@ SCALE = TPCCScale(n_warehouses=4, districts=4, customers=8, n_items=64,
 @pytest.fixture(scope="module")
 def engine():
     return single_host_engine(SCALE)
+
+
+@pytest.fixture(scope="module")
+def escrow_engine():
+    return single_host_engine(SCALE, stock_invariant="strict")
 
 
 def _tree_equal(a, b):
@@ -54,6 +60,60 @@ def test_fused_bitexact_vs_dispatch(engine):
         assert getattr(m1, f) == getattr(m2, f), f
     assert m2.fractures_observed == 0  # RAMP atomic visibility holds fused
     assert all(check_consistency(s2).values())
+    assert_audit(s2)
+
+
+def test_escrow_fused_dispatch_legacy_bitexact(escrow_engine):
+    """The escrow-regime equivalence, three ways: fused (escrow counters in
+    the donated scan carry, refresh fused into the drain), per-batch
+    dispatch, and legacy (per-outbox drains, per-batch host stat reads) run
+    the identical stream at the identical drain/refresh cadence and land on
+    bit-identical state, escrow counters, and MixStats — including a ragged
+    tail chunk and a non-trivial refresh cadence."""
+    eng = escrow_engine
+    kw = dict(batch_per_shard=8, n_batches=10, merge_every=4,
+              refresh_every=2, remote_frac=0.3, read_frac=0.25, seed=3,
+              mix=True)
+    finals = {}
+    for name, mode in (("fused", dict(fused=True)),
+                       ("dispatch", dict(fused=False)),
+                       ("legacy", dict(legacy=True))):
+        s = eng.shard_state(init_state(SCALE))
+        q0 = s.s_quantity.copy()
+        finals[name] = run_escrow_loop(eng, s, **mode, **kw)
+    s_f, esc_f, m_f = finals["fused"]
+    for other in ("dispatch", "legacy"):
+        s_o, esc_o, m_o = finals[other]
+        assert _tree_equal(s_f, s_o) == [], other
+        assert _tree_equal(esc_f, esc_o) == [], other
+        for f in ("neworders", "aborts", "payments", "order_statuses",
+                  "stock_levels", "deliveries", "anti_entropy_rounds",
+                  "refreshes", "reads_found", "fractures_observed",
+                  "lines_repaired"):
+            assert getattr(m_f, f) == getattr(m_o, f), (other, f)
+    assert m_f.aborts > 0              # adversarial: demand exceeds shares
+    assert m_f.refreshes == 1          # 3 drains, refresh_every=2
+    assert m_f.fractures_observed == 0
+    assert_audit(s_f, escrow=esc_f, initial_stock=q0, strict_stock=True)
+
+
+def test_escrow_megastep_zero_collectives(escrow_engine):
+    """The escrow hot path between refreshes — merge_every full-mix
+    iterations including the try_spend admission scan — compiles with ZERO
+    collective ops; the fused drain+refresh is the only communicating
+    program of the regime."""
+    ex = FusedExecutor(escrow_engine, ring_rows=4)
+    desc = ex.prove_megastep_coordination_free(chunk_len=4, batch_per_shard=4,
+                                               read_per_shard=2)
+    assert "NONE" in desc
+    assert ex.count_drain_refresh_collectives(4).total_ops > 0
+    # escrow executors refuse the free-regime entry points and vice versa
+    state = escrow_engine.shard_state(init_state(SCALE))
+    with pytest.raises(RuntimeError, match="use run_escrow"):
+        ex.run(state, [])
+    ex_free = FusedExecutor(single_host_engine(SCALE), ring_rows=4)
+    with pytest.raises(RuntimeError, match="use run"):
+        ex_free.run_escrow(state, None, [])
 
 
 def test_megastep_hot_scan_zero_collectives(engine):
@@ -131,6 +191,7 @@ def test_reduced_mix_chunks(engine):
     s3, _ = run_closed_loop(engine, s3, payments=True, deliveries=True,
                             fused=True, **kw)
     assert all(check_consistency(s3).values())
+    assert_audit(s3)
 
 
 def test_chunk_longer_than_ring_rejected(engine):
@@ -152,3 +213,4 @@ def test_fused_loop_direct_api(engine):
     assert stats.anti_entropy_rounds == 1
     assert stats.throughput > 0
     assert all(check_consistency(state).values())
+    assert_audit(state)

@@ -85,3 +85,27 @@ def test_merge_many_balanced_fold():
     m = merge_mod.merge_many(names, states)
     assert int(m["x"]) == 9
     assert merge_mod.converged(names, states)
+
+
+def test_tpcc_state_specs_plan():
+    """The TPC-C state tree plans exactly as the engine consumes it: the
+    declared stock invariant is the only knob, and it flips stock between
+    the three regimes while everything else stays put."""
+    from repro.core.planner import plan
+    from repro.txn.tpcc import tpcc_state_specs
+
+    import pytest as _pytest
+    for mode, want in (("restock", CoordClass.FREE),
+                       ("strict", CoordClass.ESCROW),
+                       ("serial", CoordClass.REQUIRED)):
+        p = plan(tpcc_state_specs(mode))
+        assert p.entry("stock.s_quantity").coord_class is want, mode
+        # invariants of the rest of the schema are mode-independent
+        assert p.entry("district.d_next_o_id").coord_class \
+            is CoordClass.ESCROW  # deferred commit-time assignment
+        for free in ("warehouse.w_ytd", "district.d_ytd", "order.rows",
+                     "new_order.rows", "order_line.rows",
+                     "customer.c_balance", "stock.s_ytd"):
+            assert p.entry(free).coord_class is CoordClass.FREE, (mode, free)
+    with _pytest.raises(ValueError, match="unknown stock_invariant"):
+        tpcc_state_specs("bogus")

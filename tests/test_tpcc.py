@@ -6,9 +6,11 @@ import numpy as np
 import pytest
 
 from repro.txn import tpcc
+from repro.txn.audit import assert_audit, audit_tpcc
 from repro.txn.tpcc import (TPCCScale, apply_delivery, apply_neworder,
-                            apply_payment, check_consistency,
-                            generate_neworder, generate_payment, init_state,
+                            apply_neworder_escrow, apply_payment,
+                            check_consistency, generate_neworder,
+                            generate_payment, init_state, make_escrow_shares,
                             tpcc_invariants)
 
 SCALE = TPCCScale(n_warehouses=2, districts=4, customers=8, n_items=32,
@@ -145,3 +147,83 @@ def test_full_mix_consistency_after_interleaving():
                                    jnp.asarray(ts, jnp.int32))
         c = check_consistency(state)
         assert all(c.values()), (round_, c)
+    assert_audit(state)
+
+
+# -- strict-stock (escrow) New-Order variant ---------------------------------
+
+
+def test_escrow_neworder_atomic_aborts_and_dense_ids():
+    """Insufficient escrow aborts the WHOLE transaction (no partial
+    effects), committed transactions still get dense sequential o_ids, and
+    s_quantity never goes negative (no restock)."""
+    state = init_state(SCALE)
+    q0 = np.asarray(state.s_quantity).copy()
+    shares = make_escrow_shares(state.s_quantity, 1)[0]
+    spent = jnp.zeros_like(shares)
+    rng = np.random.default_rng(9)
+    committed_total = 0
+    for ts in range(8):
+        b = generate_neworder(rng, SCALE, 16, remote_frac=0.0, ts0=ts * 16)
+        state, spent, delta, total, ok = apply_neworder_escrow(
+            state, shares, spent, b, SCALE)
+        assert not bool(np.asarray(delta.valid).any())  # all lines local
+        # aborted txns return zero totals
+        assert np.all(np.asarray(total)[~np.asarray(ok)] == 0.0)
+        committed_total += int(ok.sum())
+    s = jax.device_get(state)
+    assert 0 < committed_total < 8 * 16      # adversarial stream: some abort
+    assert s.s_quantity.min() >= 0
+    # dense ids: d_next_o_id counts exactly the committed orders
+    assert int(s.d_next_o_id.sum()) == committed_total
+    assert int(s.o_valid.sum()) == committed_total
+    # conservation: every admitted unit left stock exactly once
+    assert np.array_equal(s.s_quantity + np.rint(s.s_ytd).astype(np.int32),
+                          q0)
+    assert np.array_equal(np.asarray(spent), q0 - s.s_quantity)
+    assert all(check_consistency(state).values())
+    assert_audit(state, initial_stock=q0, strict_stock=True)
+
+
+def test_escrow_neworder_respects_share_not_global_stock():
+    """A replica may only spend from ITS share: with the budget split
+    across 4 replicas, replica 0 aborts once its quarter is gone even
+    though global stock remains."""
+    state = init_state(SCALE)
+    shares = make_escrow_shares(state.s_quantity, 4)  # [4, W, I]
+    spent0 = jnp.zeros_like(shares[0])
+    rng = np.random.default_rng(3)
+    state, spent0, _, _, ok = apply_neworder_escrow(
+        state, shares[0], spent0, generate_neworder(rng, SCALE, 64,
+                                                    remote_frac=0.0),
+        SCALE, replica=0, num_replicas=4)
+    # replica 0 stayed within its quarter ...
+    assert np.all(np.asarray(spent0) <= np.asarray(shares[0]))
+    # ... and the quarter is binding: strictly fewer commits than the full
+    # budget admits on the same stream
+    state2 = init_state(SCALE)
+    full = make_escrow_shares(state2.s_quantity, 1)[0]
+    _, _, _, _, ok_full = apply_neworder_escrow(
+        state2, full, jnp.zeros_like(full),
+        generate_neworder(np.random.default_rng(3), SCALE, 64,
+                          remote_frac=0.0), SCALE)
+    assert int(ok.sum()) < int(ok_full.sum())
+
+
+def test_audit_oracle_catches_violations():
+    """The auditor is not a rubber stamp: corrupting the state flips it."""
+    state = init_state(SCALE)
+    q0 = np.asarray(state.s_quantity).copy()
+    assert audit_tpcc(state, initial_stock=q0, strict_stock=True).ok
+    # negative stock
+    bad = state._replace(s_quantity=state.s_quantity.at[0, 0].set(-1))
+    rep = audit_tpcc(bad, initial_stock=q0, strict_stock=True)
+    assert not rep.ok and "stock_nonnegative" in rep.failures
+    # phantom spend (conservation broken)
+    bad2 = state._replace(s_ytd=state.s_ytd.at[0, 0].add(5.0))
+    rep2 = audit_tpcc(bad2, initial_stock=q0, strict_stock=True)
+    assert not rep2.ok and "stock_conservation" in rep2.failures
+    # order-count drift
+    bad3 = state._replace(d_next_o_id=state.d_next_o_id.at[0, 0].add(1))
+    rep3 = audit_tpcc(bad3)
+    assert not rep3.ok and "d_next_o_id_counts_orders" in rep3.failures
