@@ -1,19 +1,29 @@
 """Benchmark-regression guard for CI.
 
-Compares a freshly measured ``fused_vs_dispatch`` row against the committed
-``BENCH_fused_executor.json`` baseline and fails (exit 1) when the fused
-executor's speedup over the legacy driver drops more than ``tolerance``
-below the committed value — a >20% perf regression on the hot path fails CI
-instead of silently riding along until the next manual benchmark read.
+Compares a freshly measured benchmark row against its committed JSON
+baseline and fails (exit 1) when the guarded ratio drops more than
+``tolerance`` below the committed value — a >20% perf regression on the hot
+path fails CI instead of silently riding along until the next manual
+benchmark read. Guarded rows:
+
+  * ``fused_vs_dispatch`` (BENCH_fused_executor.json, field
+    ``speedup_vs_legacy``) — the fused executor's win over the legacy
+    per-batch driver;
+  * ``escrow_sparse_vs_dense`` (BENCH_escrow_sparse.json, field
+    ``sparse_vs_dense``) — the hot-set layout's committed-throughput parity
+    with the dense escrow baseline on the hot-skewed stream.
 
 The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
-the fresh measurement when the fresh speedup is higher, and leaves it alone
+the fresh measurement when the fresh value is higher, and leaves it alone
 otherwise. A rolling baseline (always refreshed) would let a slow sequence
 of sub-20% drops compound without ever failing; anchoring the floor to the
 best measurement ever committed makes the guard cumulative.
 
   python -m benchmarks.regression_guard BENCH_fused_executor.json \
       fresh.json --promote
+  python -m benchmarks.regression_guard BENCH_escrow_sparse.json \
+      fresh.json --row escrow_sparse_vs_dense --field sparse_vs_dense \
+      --promote
 """
 
 from __future__ import annotations
@@ -24,16 +34,20 @@ import shutil
 import sys
 
 
-def load_speedup(path: str, field: str) -> float:
+def load_speedup(path: str, field: str,
+                 row: str = "fused_vs_dispatch") -> float:
     with open(path) as f:
         data = json.load(f)
-    return float(data["fused_vs_dispatch"][0][field])
+    return float(data[row][0][field])
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("committed", help="baseline JSON committed on main")
     ap.add_argument("fresh", help="JSON from the current run")
+    ap.add_argument("--row", default="fused_vs_dispatch",
+                    help="benchmark row name (its [0] entry carries the "
+                         "guarded field)")
     ap.add_argument("--field", default="speedup_vs_legacy")
     ap.add_argument("--tolerance", type=float, default=0.8,
                     help="fresh must reach tolerance x committed (default "
@@ -48,13 +62,13 @@ def main(argv=None) -> int:
                          "floor that honest runs cannot meet")
     args = ap.parse_args(argv)
 
-    committed = load_speedup(args.committed, args.field)
-    fresh = load_speedup(args.fresh, args.field)
+    committed = load_speedup(args.committed, args.field, args.row)
+    fresh = load_speedup(args.fresh, args.field, args.row)
     floor = committed * args.tolerance
-    print(f"{args.field}: committed {committed:.2f}x, fresh {fresh:.2f}x, "
-          f"floor {floor:.2f}x")
+    print(f"{args.row}.{args.field}: committed {committed:.2f}x, fresh "
+          f"{fresh:.2f}x, floor {floor:.2f}x")
     if fresh < floor:
-        print(f"REGRESSION: fused-executor {args.field} dropped "
+        print(f"REGRESSION: {args.row} {args.field} dropped "
               f">{(1 - args.tolerance) * 100:.0f}% below the committed "
               f"baseline")
         return 1

@@ -289,11 +289,118 @@ class EscrowCounter(NamedTuple):
 
     @staticmethod
     def join(a: "EscrowCounter", b: "EscrowCounter") -> "EscrowCounter":
+        """Slotwise merge. INTENTIONALLY CONSERVATIVE on ``shares``: when the
+        two sides diverged across a refresh epoch (one side carries fresh,
+        larger shares the other has not seen), ``min`` keeps the smaller
+        allocation, so the merged ``remaining()`` may *under*-state the true
+        headroom — capacity is lost until the next refresh, but admission
+        capacity is never manufactured, which is the safety direction the
+        §8 escrow argument needs (a ``max`` join could let two replicas
+        spend the same re-granted headroom twice). The headroom loss is
+        pinned by a regression test (tests/test_escrow.py::
+        test_join_of_diverged_refresh_is_conservative)."""
         return EscrowCounter(jnp.minimum(a.shares, b.shares),
                              jnp.maximum(a.spent, b.spent))
 
 
 register_lattice("escrow", EscrowCounter.join, EscrowCounter.make)
+
+
+# ---------------------------------------------------------------------------
+# Hot-set escrow — sparse two-tier variant (paper §8 + SCAR's "coordinate
+# only the minimal contended set"): escrow shares exist ONLY for the top-K
+# contended cells; everything else (the cold tail) is monotone owner-routed
+# work that needs no shares at all (Keeping CALM's monotone/coordination-free
+# split).
+# ---------------------------------------------------------------------------
+
+
+class HotSetEscrow(NamedTuple):
+    """Per-replica escrow shares over a sparse hot set of K contended cells.
+
+    The dense :class:`EscrowCounter` materializes ``[R, cells]`` shares for
+    the WHOLE keyspace; at TPC-C spec scale that is ~400 MB/device. This
+    variant keeps shares only for the K cells the access profile marks as
+    contended, behind a sorted index table:
+
+    * ``keys``   — ``[K]`` int32, sorted unique cell ids (the lookup table:
+      membership + position resolve with one ``searchsorted``, O(log K),
+      no dense ``[cells]`` index map that would defeat the memory cut);
+    * ``shares`` / ``spent`` — ``[R, K]`` per-replica slots with exactly the
+      dense counter's semantics (``try_spend`` local, join = min/max,
+      refresh re-partitions).
+
+    Cold cells carry NO escrow state: their decrements are serialized at the
+    owning replica (owner-routed through the outbox/anti-entropy machinery),
+    which preserves the floor invariant without shares. ``keys`` is a static
+    epoch parameter — join requires equal keys; promotion/demotion happens
+    at a refresh boundary by rebuilding the table (see ``rekey``), which the
+    property suite (tests/test_escrow_sparse.py) drives adversarially.
+    """
+
+    keys: Array    # [K] int32 sorted unique cell keys
+    shares: Array  # [R, K]
+    spent: Array   # [R, K]
+
+    @staticmethod
+    def make(num_replicas: int, keys, budgets, dtype=jnp.int32) -> "HotSetEscrow":
+        """Partition ``budgets`` ([K], the current stock of each hot cell)
+        into per-replica shares: ``shares.sum(0) == budgets`` exactly."""
+        keys = jnp.asarray(keys, jnp.int32)
+        q = jnp.asarray(budgets, dtype)
+        r = jnp.arange(num_replicas, dtype=dtype)[:, None]
+        shares = q[None, :] // num_replicas + (r < q[None, :] % num_replicas
+                                               ).astype(dtype)
+        return HotSetEscrow(keys, shares, jnp.zeros_like(shares))
+
+    @property
+    def n_hot(self) -> int:
+        return self.keys.shape[0]
+
+    def lookup(self, key: Array) -> tuple[Array, Array]:
+        """(position, is_hot) for cell ``key`` (vectorized, O(log K))."""
+        pos = jnp.searchsorted(self.keys, key).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, self.keys.shape[0] - 1)
+        return pos, self.keys[pos] == key
+
+    def try_spend(self, replica, key, amount) -> tuple["HotSetEscrow", Array]:
+        """Local, coordination-free spend against this replica's share of a
+        HOT cell. Returns (state, ok); a cold key is rejected (ok=False,
+        state unchanged) — cold spends belong to the owner route."""
+        pos, hot = self.lookup(jnp.asarray(key))
+        amount = jnp.asarray(amount, self.spent.dtype)
+        ok = hot & (self.spent[replica, pos] + amount
+                    <= self.shares[replica, pos])
+        new = jnp.where(ok, self.spent[replica, pos] + amount,
+                        self.spent[replica, pos])
+        return self._replace(spent=self.spent.at[replica, pos].set(new)), ok
+
+    def remaining(self) -> Array:
+        """Per-cell unspent headroom across replicas ([K])."""
+        return (self.shares - self.spent).sum(axis=0)
+
+    def refresh(self, budgets) -> "HotSetEscrow":
+        """The amortized coordination point: re-partition the hot cells'
+        post-drain stock (``budgets``) into fresh shares, spent resets."""
+        return HotSetEscrow.make(self.shares.shape[0], self.keys, budgets,
+                                 self.shares.dtype)
+
+    def rekey(self, num_replicas: int, keys, budgets) -> "HotSetEscrow":
+        """Promotion/demotion epoch change: rebuild the table over a new hot
+        set at a refresh boundary (cells leaving the set fold their
+        remaining headroom back into owner-side stock upstream)."""
+        return HotSetEscrow.make(num_replicas, keys, budgets,
+                                 self.shares.dtype)
+
+    @staticmethod
+    def join(a: "HotSetEscrow", b: "HotSetEscrow") -> "HotSetEscrow":
+        """Same-epoch merge (equal keys): min shares / max spent — the same
+        intentionally-conservative direction as EscrowCounter.join."""
+        return HotSetEscrow(a.keys, jnp.minimum(a.shares, b.shares),
+                            jnp.maximum(a.spent, b.spent))
+
+
+register_lattice("escrow_hot", HotSetEscrow.join, HotSetEscrow.make)
 
 
 # ---------------------------------------------------------------------------
@@ -382,7 +489,7 @@ def tree_join_flat(names: tuple, a: PyTree, b: PyTree) -> PyTree:
     a_leaves, treedef = jax.tree_util.tree_flatten(
         a, is_leaf=lambda x: isinstance(x, (GCounter, PNCounter, LWWRegister,
                                             TwoPhaseSet, EscrowCounter,
-                                            VersionedSlots)))
+                                            HotSetEscrow, VersionedSlots)))
     b_leaves = treedef.flatten_up_to(b)
     if len(names) != len(a_leaves):
         raise ValueError(f"{len(names)} names for {len(a_leaves)} state groups")

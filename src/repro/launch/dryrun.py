@@ -187,8 +187,14 @@ def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
         read_per_shard=max(1, batch_per_shard // 4))
     eng_escrow = Engine(scale, mesh, axes, stock_invariant="strict")
     escrow = eng_escrow.lowered_neworder_escrow(batch_per_shard)
+    # the fused escrow megastep (sparse hot-set carry in the donated scan):
+    # chunk_len strict-stock mix iterations between refreshes, at spec scale
+    escrow_megastep = FusedExecutor(
+        eng_escrow, ring_rows=chunk_len).lowered_megastep(
+        chunk_len=chunk_len, batch_per_shard=batch_per_shard,
+        read_per_shard=max(1, batch_per_shard // 4))
     return (eng.lowered_neworder(batch_per_shard), reads, megastep, escrow,
-            eng_escrow)
+            escrow_megastep, eng_escrow)
 
 
 _ESCROW_AUDIT_MEMO: dict = {}
@@ -213,16 +219,19 @@ def tpcc_escrow_audit_cell() -> dict:
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     scale = TPCCScale(n_warehouses=4, districts=4, customers=8, n_items=64,
                       order_capacity=128, max_lines=15)
-    eng = Engine(scale, mesh, ("data",), stock_invariant="strict")
+    eng = Engine(scale, mesh, ("data",), stock_invariant="strict",
+                 hot_items=8)
     state = eng.shard_state(init_state(scale))
     q0 = state.s_quantity.copy()
     state, esc, stats = run_escrow_loop(
         eng, state, batch_per_shard=8, n_batches=6, merge_every=2,
-        refresh_every=2, seed=0, mix=False, fused=False)
+        refresh_every=2, seed=0, mix=False, fused=False,
+        item_skew=1.1)
     rep = audit_tpcc(state, escrow=esc, initial_stock=q0, strict_stock=True)
     _ESCROW_AUDIT_MEMO.update(
         committed=stats.neworders, aborts=stats.aborts,
-        refreshes=stats.refreshes, audit_ok=rep.ok,
+        refreshes=stats.refreshes, cold_rejects=stats.cold_rejects,
+        escrow_layout=eng.escrow_layout, audit_ok=rep.ok,
         audit_failures=rep.failures)
     return dict(_ESCROW_AUDIT_MEMO)
 
@@ -308,7 +317,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
             "layout": layout}
     if arch == "tpcc":
         try:
-            lowered, reads, megastep, escrow, eng_escrow = lower_tpcc(mesh)
+            (lowered, reads, megastep, escrow, escrow_megastep,
+             eng_escrow) = lower_tpcc(mesh)
             cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
             # the RAMP read transactions must compile collective-free at
             # spec scale — the structural atomic-visibility-without-
@@ -340,6 +350,28 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
                     f"{esc['collectives']['describe']}")
             if eng_escrow.count_refresh_collectives().total_ops == 0:
                 raise AssertionError("escrow refresh must communicate")
+            # the FUSED escrow megastep: chunk_len whole strict-stock mix
+            # iterations (sparse hot-set carry in the donated scan) must be
+            # collective-free between refreshes, at spec scale
+            em = analyze(escrow_megastep, mesh, "tpcc-escrow-megastep", ())
+            cell["escrow_megastep"] = em
+            if em["collectives"]["counts"]:
+                raise AssertionError(
+                    f"fused escrow megastep has collectives at spec scale: "
+                    f"{em['collectives']['describe']}")
+            # the two-tier layout's memory claim, at spec cardinalities:
+            # the sparse hot-set table must cut per-device escrow residency
+            # >= 50x vs the dense [R, W, I] share layout (ROADMAP item)
+            mem = eng_escrow.escrow_bytes_per_device()
+            cell["escrow_layout"] = mem
+            if mem["layout"] != "sparse":
+                raise AssertionError("spec-scale escrow engine must lower "
+                                     "the sparse hot-set layout")
+            if mem["reduction_vs_dense"] < 50:
+                raise AssertionError(
+                    f"sparse escrow layout cuts only "
+                    f"{mem['reduction_vs_dense']:.1f}x vs dense "
+                    f"(target >= 50x): {mem}")
             # concrete tier-1-scale escrow run + consistency audit
             cell["escrow_audit"] = tpcc_escrow_audit_cell()
             if not cell["escrow_audit"]["audit_ok"]:

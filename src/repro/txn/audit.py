@@ -12,10 +12,17 @@ spec condition directly from the table arrays —
   * strict stock:   s_quantity >= 0 everywhere AND the conservation law
                     s_quantity + s_ytd == initial stock per (warehouse,
                     item) cell — no unit sold twice, none lost;
-  * escrow:         the global EscrowCounter covers the stock exactly:
-                    Σ_replicas (shares - spent) == s_quantity per cell and
-                    is never negative — total admitted spend can never
-                    exceed the inventory the shares partition (paper §8).
+  * escrow:         the escrow state covers the stock exactly. Dense
+                    EscrowCounter: Σ_replicas (shares - spent) ==
+                    s_quantity per cell and never negative (paper §8).
+                    Sparse HotSetEscrow (two-tier layout): the same law
+                    restricted to the K hot cells — Σ_replicas (shares -
+                    spent) == s_quantity at every hot cell — plus a sorted-
+                    unique key-table check; the COLD tier carries no shares
+                    by design, and its oversell-freedom is exactly the
+                    strict-stock conditions above (the owner serializes all
+                    cold decrements, so nonnegativity + conservation ARE
+                    the cold tier's laws).
 
 Every closed-loop test and the serve example end by calling
 :func:`assert_audit`; the benchmark rows carry ``audit_ok``.
@@ -96,10 +103,23 @@ def audit_tpcc(state: TPCCState, *, escrow=None, initial_stock=None,
         remaining = e.shares.sum(0).astype(np.int64) \
             - e.spent.sum(0).astype(np.int64)
         checks["escrow_remaining_nonnegative"] = bool(np.all(remaining >= 0))
-        # after the final drain, the escrow view and the owners' stock agree
-        # exactly: Σ_replicas (shares - spent) == s_quantity per cell
-        checks["escrow_covers_stock"] = bool(
-            np.array_equal(remaining, s.s_quantity.astype(np.int64)))
+        if hasattr(e, "keys"):
+            # sparse two-tier layout: the hot table's keys are a valid
+            # (sorted, unique) index, and after the final drain the escrow
+            # view agrees with the owners' stock on EVERY hot cell:
+            # Σ_replicas (shares - spent) == s_quantity[hot]. Cold cells
+            # carry no shares — their laws are the strict-stock conditions.
+            keys = np.asarray(e.keys, np.int64)
+            checks["hot_keys_sorted_unique"] = bool(
+                np.all(np.diff(keys) > 0)) if keys.size > 1 else True
+            q_hot = s.s_quantity.reshape(-1).astype(np.int64)[keys]
+            checks["escrow_covers_hot_stock"] = bool(
+                np.array_equal(remaining, q_hot))
+        else:
+            # dense layout: the same law over the whole keyspace — after
+            # the final drain, Σ_replicas (shares - spent) == s_quantity
+            checks["escrow_covers_stock"] = bool(
+                np.array_equal(remaining, s.s_quantity.astype(np.int64)))
 
     failures = [k for k, v in checks.items() if not v]
     return AuditReport(not failures, failures, checks)

@@ -1,0 +1,569 @@
+"""Consolidated closed-loop drivers for every TPC-C regime and mode.
+
+PR-3 grew three near-duplicate drivers inside engine.py (``run_closed_loop``
+/ ``run_mixed_loop`` / ``run_escrow_loop``, each with fused / dispatch /
+legacy variants). This module replaces them with ONE core, :func:`run_loop`,
+holding the shared pending-outbox / stats / audit skeleton:
+
+* **stream generation** — a single source draws the identical
+  home-partitioned batch streams for every execution mode (the fused ↔
+  dispatch bit-exactness contract rests on this), including the Zipfian
+  ``item_skew`` knob the sparse hot-set escrow layout is built around;
+* **execution** — ``fused=True`` (default) runs the chunked-scan megastep
+  executor (txn/executor.py); ``fused=False`` is the per-batch dispatch
+  baseline; ``legacy=True`` additionally restores the seed's host behavior
+  (per-batch ``int(...)`` stat reads forcing a device sync every batch, and
+  per-outbox anti-entropy calls in the merge regime — the escrow regime
+  always drains a whole window in one batched call, because the sparse cold
+  tier's per-cell all-or-nothing admission is defined over the window);
+* **regimes** — the engine's plan-selected regime picks the hot path: merge
+  (restock New-Order + asynchronous anti-entropy) or escrow (strict
+  New-Order against the hot-set/dense shares, strict drains, amortized
+  share refresh). 2PC lives in twopc.py, coordination is never a driver
+  concern here;
+* **refresh cadence** — fixed every ``refresh_every`` drains (the PR-3
+  behavior and the config fallback), or ADAPTIVE via
+  ``refresh_abort_rate``: refresh as soon as any replica's escrow abort
+  rate since the last refresh crosses the threshold. Adaptive mode reads
+  one small counter per drain window (a host sync the fixed cadence does
+  not pay) — feedback control is inherently a host decision;
+* **audit** — ``audit=True`` snapshots the initial stock and runs the
+  independent consistency oracle (txn/audit.py) on the final state.
+
+``run_closed_loop`` / ``run_mixed_loop`` / ``run_escrow_loop`` remain as
+thin signature-compatible wrappers; engine.py lazily re-exports them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import CoordClass
+
+from . import tpcc
+from .tpcc import NewOrderBatch, StockDelta, TPCCState
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunStats:
+    committed: int = 0
+    batches: int = 0
+    anti_entropy_rounds: int = 0
+    aborted: int = 0       # escrow regime: insufficient-share atomic aborts
+    refreshes: int = 0     # escrow regime: amortized share-refresh rounds
+    wall_seconds: float = 0.0
+
+    @property
+    def throughput(self) -> float:
+        return self.committed / self.wall_seconds if self.wall_seconds else 0.0
+
+
+@dataclasses.dataclass
+class MixStats:
+    """Closed-loop stats for the five-transaction mix."""
+
+    neworders: int = 0
+    payments: int = 0
+    order_statuses: int = 0
+    stock_levels: int = 0
+    deliveries: int = 0
+    anti_entropy_rounds: int = 0
+    reads_found: int = 0
+    fractures_observed: int = 0   # must stay 0: RAMP atomic visibility
+    lines_repaired: int = 0       # 2nd-round (lookback) activity
+    aborts: int = 0               # escrow regime: insufficient-share aborts
+    refreshes: int = 0            # escrow regime: share-refresh rounds
+    cold_rejects: int = 0         # sparse escrow: owner-rejected cold entries
+    wall_seconds: float = 0.0
+
+    @property
+    def committed(self) -> int:
+        return (self.neworders + self.payments + self.order_statuses
+                + self.stock_levels + self.deliveries)
+
+    @property
+    def throughput(self) -> float:
+        return self.committed / self.wall_seconds if self.wall_seconds else 0.0
+
+
+def counters_to_stats(counters, *, anti_entropy_rounds: int,
+                      wall_seconds: float, refreshes: int = 0,
+                      cold_rejects: int = 0) -> MixStats:
+    """One device_get over the executor's on-device counter pytree."""
+    c = jax.device_get(counters)
+    return MixStats(
+        neworders=int(c.neworders.sum()),
+        payments=int(c.payments.sum()),
+        order_statuses=int(c.order_statuses.sum()),
+        stock_levels=int(c.stock_levels.sum()),
+        deliveries=int(c.deliveries.sum()),
+        anti_entropy_rounds=anti_entropy_rounds,
+        reads_found=int(c.reads_found.sum()),
+        fractures_observed=int(c.fractures_observed.sum()),
+        lines_repaired=int(c.lines_repaired.sum()),
+        aborts=int(c.aborts.sum()),
+        refreshes=refreshes,
+        cold_rejects=cold_rejects,
+        wall_seconds=wall_seconds)
+
+
+# ---------------------------------------------------------------------------
+# Stream generation (the single source of the stream layout)
+# ---------------------------------------------------------------------------
+
+
+def _concat_outboxes(pending: list[StockDelta]) -> StockDelta:
+    """All queued outboxes as ONE StockDelta, applied in a single
+    anti-entropy call (vs the seed's one jitted call per outbox)."""
+    if len(pending) == 1:
+        return pending[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *pending)
+
+
+def _tree_copy(t):
+    return jax.tree.map(lambda x: x.copy(), t)
+
+
+def _neworder_batch(engine, rng: np.random.Generator, batch_per_shard: int,
+                    remote_frac: float, ts0: int,
+                    item_skew: float = 0.0) -> tuple[NewOrderBatch, int]:
+    """One home-partitioned New-Order batch (shard s gets txns for its
+    warehouse range); returns (batch, advanced ts0). The single source of
+    the stream layout — the fused/dispatch bit-exactness contract rests on
+    every driver drawing identical streams."""
+    parts = []
+    for s in range(engine.n_shards):
+        parts.append(tpcc.generate_neworder(
+            rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
+            w_lo=s * engine.w_per_shard,
+            w_hi=(s + 1) * engine.w_per_shard, ts0=ts0,
+            item_skew=item_skew))
+        ts0 += batch_per_shard
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts), ts0
+
+
+def generate_neworder_stream(engine, *, batch_per_shard: int,
+                             n_batches: int, remote_frac: float,
+                             rng: np.random.Generator, ts0: int = 0,
+                             item_skew: float = 0.0) -> list[NewOrderBatch]:
+    """Home-partitioned New-Order batches for a whole run."""
+    batches = []
+    for _ in range(n_batches):
+        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
+                                     remote_frac, ts0, item_skew)
+        batches.append(batch)
+    return batches
+
+
+def _home_partitioned(gen, rng, engine, per_shard: int, **kw):
+    parts = [gen(rng, engine.scale, per_shard,
+                 w_lo=s * engine.w_per_shard,
+                 w_hi=(s + 1) * engine.w_per_shard, **kw)
+             for s in range(engine.n_shards)]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+
+
+def generate_mix_batches(engine, *, batch_per_shard: int,
+                         n_batches: int, remote_frac: float = 0.01,
+                         read_frac: float = 0.25, seed: int = 0,
+                         item_skew: float = 0.0):
+    """Pre-generate the five-transaction-mix batch streams (home-partitioned,
+    one rng). Shared by the fused executor and the per-batch dispatch driver
+    so both execute the identical transaction stream."""
+    rng = np.random.default_rng(seed)
+    per_shard_reads = max(1, int(batch_per_shard * read_frac))
+    ts0 = 0
+    no_batches, pay_batches, os_batches, sl_batches = [], [], [], []
+    for _ in range(n_batches):
+        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
+                                     remote_frac, ts0, item_skew)
+        no_batches.append(batch)
+        pay_batches.append(_home_partitioned(
+            tpcc.generate_payment, rng, engine, batch_per_shard))
+        os_batches.append(_home_partitioned(
+            tpcc.generate_order_status, rng, engine, per_shard_reads))
+        sl_batches.append(_home_partitioned(
+            tpcc.generate_stock_level, rng, engine, per_shard_reads))
+    return no_batches, pay_batches, os_batches, sl_batches
+
+
+# ---------------------------------------------------------------------------
+# Adaptive refresh controller (satellite: abort-rate-triggered refresh)
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_refresh_due(aborts_since, txns_since, rate: float) -> bool:
+    """Refresh iff ANY replica's escrow abort rate since the last refresh
+    crossed ``rate``. Shared by the dispatch loop and the fused executor so
+    both make identical decisions from identical counters."""
+    ab = np.asarray(aborts_since, np.int64)
+    tx = np.maximum(1, np.asarray(txns_since, np.int64))
+    return bool((ab > rate * tx).any())
+
+
+# ---------------------------------------------------------------------------
+# THE consolidated closed-loop core
+# ---------------------------------------------------------------------------
+
+
+def run_loop(engine, state: TPCCState, esc=None, *,
+             batch_per_shard: int, n_batches: int,
+             remote_frac: float = 0.01, merge_every: int = 8,
+             refresh_every: int = 1, refresh_abort_rate: float | None = None,
+             read_frac: float = 0.25, item_skew: float = 0.0, seed: int = 0,
+             payments: bool = False, reads: bool = False,
+             deliveries: bool = False, fused: bool = True,
+             legacy: bool = False, audit: bool = False,
+             ) -> tuple[TPCCState, object, MixStats]:
+    """Drive the engine's plan-selected regime over a pre-generated stream.
+
+    One pending-outbox/stats/audit core for every (regime x mode x mix)
+    combination — see the module docstring for the knobs. Batches are
+    pre-generated (the generator is not the system under test); wall time
+    covers device execution only (compilation happens on throwaway copies,
+    so all ``n_batches`` batches are timed).
+
+    Returns ``(state, escrow-or-None, MixStats)``; ``stats.neworders``
+    counts COMMITTED New-Orders (escrow aborts land in ``stats.aborts``,
+    owner-side cold-tier rejections in ``stats.cold_rejects``).
+    """
+    escrow = engine.stock_regime is CoordClass.ESCROW
+    if legacy:
+        fused = False
+    if escrow and esc is None:
+        esc = engine.init_escrow(state)
+    q0 = state.s_quantity.copy() if audit else None
+
+    # -- streams: one source for every mode ---------------------------------
+    if reads:
+        no_b, pay_b, os_b, sl_b = generate_mix_batches(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, read_frac=read_frac, seed=seed,
+            item_skew=item_skew)
+        if not payments:
+            pay_b = None
+    else:
+        rng = np.random.default_rng(seed)
+        no_b = generate_neworder_stream(
+            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
+            remote_frac=remote_frac, rng=rng, item_skew=item_skew)
+        pay_b = [_home_partitioned(tpcc.generate_payment, rng, engine,
+                                   batch_per_shard)
+                 for _ in range(n_batches)] if payments else None
+        os_b = sl_b = None
+
+    if fused:
+        state, esc, stats = _fused_loop(
+            engine, state, esc, no_b, pay_b, os_b, sl_b,
+            merge_every=merge_every, refresh_every=refresh_every,
+            refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
+            escrow=escrow)
+    else:
+        state, esc, stats = _dispatch_loop(
+            engine, state, esc, no_b, pay_b, os_b, sl_b,
+            batch_per_shard=batch_per_shard, merge_every=merge_every,
+            refresh_every=refresh_every,
+            refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
+            escrow=escrow, legacy=legacy)
+
+    if audit:
+        from .audit import assert_audit
+        if escrow:
+            assert_audit(state, escrow=esc, initial_stock=q0,
+                         strict_stock=True)
+        else:
+            assert_audit(state)
+    return state, esc, stats
+
+
+def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
+                merge_every, refresh_every, refresh_abort_rate, deliveries,
+                escrow):
+    from .executor import get_fused_executor, stack_chunks
+
+    chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
+    ex = get_fused_executor(engine, ring_rows=merge_every,
+                            deliveries=deliveries)
+    if escrow:
+        state, esc, counters, wall, refreshes, cold = ex.run_escrow(
+            state, esc, chunks, refresh_every=refresh_every,
+            refresh_abort_rate=refresh_abort_rate)
+        return state, esc, counters_to_stats(
+            counters, anti_entropy_rounds=len(chunks), wall_seconds=wall,
+            refreshes=refreshes, cold_rejects=cold)
+    state, counters, wall = ex.run(state, chunks)
+    return state, None, counters_to_stats(
+        counters, anti_entropy_rounds=len(chunks), wall_seconds=wall)
+
+
+def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
+                   batch_per_shard, merge_every, refresh_every,
+                   refresh_abort_rate, deliveries, escrow, legacy):
+    """The per-batch dispatch baseline (one jitted call per transaction type
+    per batch) — the comparison target the fused executor is measured
+    against, and the reference semantics for bit-exactness tests."""
+    n_batches = len(no_b)
+    B = batch_per_shard * engine.n_shards
+    reads = os_b is not None
+    R = (max(1, os_b[0].w.shape[0] // engine.n_shards) * engine.n_shards
+         if reads else 0)
+
+    # -- warmup compiles on copies; the timed loop then covers every batch --
+    warm = _tree_copy(state)
+    wesc = _tree_copy(esc) if escrow else None
+    if escrow:
+        warm, wesc, outbox, _, _ = engine.neworder_escrow_step(warm, wesc,
+                                                               no_b[0])
+    else:
+        warm, outbox, _ = engine.neworder_step(warm, no_b[0])
+    if pay_b is not None:
+        warm = engine.payment_step(warm, pay_b[0])
+    res = (engine.order_status_step(warm, os_b[0]),
+           engine.stock_level_step(warm, sl_b[0])) if reads else None
+    if deliveries:
+        warm, _ = engine.delivery_step(warm)
+    # escrow windows drain batched in EVERY mode (the sparse cold tier's
+    # all-or-nothing admission is defined over the whole window); the merge
+    # regime keeps the seed's per-outbox drain under legacy
+    drain_shapes = {1} if (legacy and not escrow) else \
+        {min(merge_every, n_batches), n_batches % merge_every} - {0}
+    for k in drain_shapes:
+        if escrow:
+            warm, _ = engine.drain_strict(warm, _concat_outboxes([outbox] * k))
+        else:
+            warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
+    if escrow:
+        wesc = engine.refresh_escrow(warm, wesc)
+    jax.block_until_ready((warm, wesc, res))
+    del warm, wesc, outbox, res
+
+    stats = MixStats()
+    zero = 0 if legacy else jnp.zeros((), jnp.int32)
+    # on-device stat accumulators: no per-iteration host round-trips (the
+    # seed's int(...) reads — restored under ``legacy`` — forced a device
+    # sync every batch)
+    commit_acc, found_acc, fract_acc = zero, zero, zero
+    rep_acc, del_acc, rej_acc = zero, zero, zero
+    # per-replica commit tallies feed the adaptive refresh controller
+    adaptive = escrow and refresh_abort_rate is not None
+    pr_commit = jnp.zeros((engine.n_shards,), jnp.int32) if adaptive else None
+    commits_at_refresh = np.zeros(engine.n_shards, np.int64)
+    txns_at_refresh = 0
+    rounds = 0
+    pending: list[StockDelta] = []
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        if escrow:
+            state, esc, outbox, _, ok = engine.neworder_escrow_step(
+                state, esc, no_b[i])
+            commit_acc = commit_acc + (int(ok.sum()) if legacy
+                                       else ok.sum().astype(jnp.int32))
+            if adaptive:
+                pr_commit = pr_commit + ok.reshape(
+                    engine.n_shards, -1).sum(axis=1).astype(jnp.int32)
+        else:
+            state, outbox, _ = engine.neworder_step(state, no_b[i])
+            stats.neworders += B
+        pending.append(outbox)
+        if pay_b is not None:
+            state = engine.payment_step(state, pay_b[i])
+            stats.payments += B
+        if reads:
+            os_res = engine.order_status_step(state, os_b[i])
+            sl_res = engine.stock_level_step(state, sl_b[i])
+            stats.order_statuses += R
+            stats.stock_levels += R
+            if legacy:
+                # seed behavior: host-side int() reads force a device sync
+                # every single batch
+                found_acc = found_acc + int(os_res.found.sum())
+                fract_acc = fract_acc + int(os_res.fractures_observed()) \
+                    + int((sl_res.fractured - sl_res.repaired).sum())
+                rep_acc = rep_acc + int(os_res.repaired.sum()
+                                        + sl_res.repaired.sum())
+            else:
+                found_acc = found_acc + os_res.found.sum()
+                fract_acc = (fract_acc + os_res.fractures_observed()
+                             + (sl_res.fractured - sl_res.repaired).sum())
+                rep_acc = rep_acc + os_res.repaired.sum() + sl_res.repaired.sum()
+        if deliveries:
+            state, delivered = engine.delivery_step(state)
+            del_acc = (del_acc + int(delivered.sum())) if legacy \
+                else del_acc + delivered.sum()
+        if len(pending) == merge_every or i == n_batches - 1:
+            # one batched drain of all queued outboxes (Definition 3:
+            # convergence may lag the hot path, but must happen); merge-
+            # regime legacy mode keeps the seed's one jitted call per outbox
+            if escrow:
+                state, rej = engine.drain_strict(state,
+                                                 _concat_outboxes(pending))
+                rej_acc = rej_acc + (int(rej.sum()) if legacy
+                                     else rej.sum().astype(jnp.int32))
+            elif legacy:
+                for ob in pending:
+                    state = engine.anti_entropy(state, ob)
+            else:
+                state = engine.anti_entropy(state, _concat_outboxes(pending))
+            stats.anti_entropy_rounds += 1
+            rounds += 1
+            pending = []
+            if escrow:
+                if adaptive:
+                    # the one host read adaptive control costs, per window
+                    commits_now = np.asarray(jax.device_get(pr_commit),
+                                             np.int64)
+                    txns_now = batch_per_shard * (i + 1)
+                    due = _adaptive_refresh_due(
+                        (txns_now - txns_at_refresh)
+                        - (commits_now - commits_at_refresh),
+                        txns_now - txns_at_refresh, refresh_abort_rate)
+                    if due:
+                        commits_at_refresh = commits_now
+                        txns_at_refresh = txns_now
+                else:
+                    due = rounds % refresh_every == 0
+                if due:
+                    # the amortized coordination point, aligned with the drain
+                    esc = engine.refresh_escrow(state, esc)
+                    stats.refreshes += 1
+    jax.block_until_ready((state, esc, commit_acc, found_acc, fract_acc,
+                           rep_acc, del_acc, rej_acc))
+    stats.wall_seconds = time.perf_counter() - t0
+    # single host transfer for the data-dependent counters
+    if escrow:
+        stats.neworders = int(commit_acc)
+        stats.aborts = B * n_batches - stats.neworders
+        stats.cold_rejects = int(rej_acc)
+    stats.reads_found = int(found_acc)
+    stats.fractures_observed = int(fract_acc)
+    stats.lines_repaired = int(rep_acc)
+    stats.deliveries = int(del_acc)
+    return state, esc, stats
+
+
+# ---------------------------------------------------------------------------
+# Signature-compatible wrappers (the public driver API)
+# ---------------------------------------------------------------------------
+
+
+def run_closed_loop(engine, state: TPCCState, *,
+                    batch_per_shard: int, n_batches: int,
+                    remote_frac: float = 0.01, merge_every: int = 8,
+                    seed: int = 0, payments: bool = False,
+                    deliveries: bool = False, fused: bool = True,
+                    refresh_every: int = 1,
+                    refresh_abort_rate: float | None = None,
+                    item_skew: float = 0.0,
+                    ) -> tuple[TPCCState, RunStats]:
+    """New-Order closed loop (+ optional Payment/Delivery riders). On an
+    escrow-regime engine the New-Order-only stream runs the strict hot path
+    and the stats carry aborts/refreshes."""
+    escrow = engine.stock_regime is CoordClass.ESCROW
+    if escrow and (payments or deliveries):
+        raise NotImplementedError(
+            "escrow regime: use run_escrow_loop(mix=True) for the full "
+            "transaction mix")
+    state, _, m = run_loop(
+        engine, state, batch_per_shard=batch_per_shard, n_batches=n_batches,
+        remote_frac=remote_frac, merge_every=merge_every,
+        refresh_every=refresh_every, refresh_abort_rate=refresh_abort_rate,
+        item_skew=item_skew, seed=seed, payments=payments, reads=False,
+        deliveries=deliveries, fused=fused)
+    return state, RunStats(
+        committed=m.neworders, batches=n_batches,
+        anti_entropy_rounds=m.anti_entropy_rounds, aborted=m.aborts,
+        refreshes=m.refreshes, wall_seconds=m.wall_seconds)
+
+
+def run_mixed_loop(engine, state: TPCCState, *,
+                   batch_per_shard: int, n_batches: int,
+                   remote_frac: float = 0.01, merge_every: int = 8,
+                   read_frac: float = 0.25, seed: int = 0,
+                   fused: bool = True, legacy: bool = False,
+                   refresh_every: int = 1,
+                   refresh_abort_rate: float | None = None,
+                   item_skew: float = 0.0,
+                   ) -> tuple[TPCCState, MixStats]:
+    """The full five-transaction mix (New-Order, Payment, RAMP Order-Status
+    / Stock-Level, Delivery) under the engine's plan-selected regime."""
+    state, _, stats = run_loop(
+        engine, state, batch_per_shard=batch_per_shard, n_batches=n_batches,
+        remote_frac=remote_frac, merge_every=merge_every,
+        refresh_every=refresh_every, refresh_abort_rate=refresh_abort_rate,
+        read_frac=read_frac, item_skew=item_skew, seed=seed, payments=True,
+        reads=True, deliveries=True, fused=fused, legacy=legacy)
+    return state, stats
+
+
+def run_escrow_loop(engine, state: TPCCState, esc=None, *,
+                    batch_per_shard: int, n_batches: int,
+                    remote_frac: float = 0.01, merge_every: int = 8,
+                    refresh_every: int = 1,
+                    refresh_abort_rate: float | None = None,
+                    read_frac: float = 0.25, seed: int = 0, mix: bool = True,
+                    fused: bool = True, legacy: bool = False,
+                    item_skew: float = 0.0,
+                    ) -> tuple[TPCCState, object, MixStats]:
+    """Drive the escrow regime: strict-stock New-Order (plus the rest of the
+    mix when ``mix=True``), one batched strict drain per ``merge_every``
+    window, and the amortized share refresh — every ``refresh_every`` drains
+    (fixed fallback) or abort-rate-triggered via ``refresh_abort_rate``.
+
+    Returns (state, escrow, MixStats) — ``stats.neworders`` counts COMMITTED
+    New-Orders; insufficient-share atomic aborts are in ``stats.aborts``;
+    owner-side cold-tier rejections (sparse layout, remote cold lines that
+    lost the race at their owner) in ``stats.cold_rejects``.
+    """
+    engine._require_escrow()
+    state, esc, stats = run_loop(
+        engine, state, esc, batch_per_shard=batch_per_shard,
+        n_batches=n_batches, remote_frac=remote_frac,
+        merge_every=merge_every, refresh_every=refresh_every,
+        refresh_abort_rate=refresh_abort_rate, read_frac=read_frac,
+        item_skew=item_skew, seed=seed, payments=mix, reads=mix,
+        deliveries=mix, fused=fused, legacy=legacy)
+    return state, esc, stats
+
+
+def run_fused_loop(engine, state: TPCCState, *,
+                   batch_per_shard: int, n_batches: int,
+                   remote_frac: float = 0.01, merge_every: int = 8,
+                   read_frac: float = 0.25, seed: int = 0,
+                   ) -> tuple[TPCCState, MixStats]:
+    """The full five-transaction mix on the fused executor (the public entry
+    ``run_mixed_loop(fused=True)`` uses)."""
+    return run_mixed_loop(engine, state, batch_per_shard=batch_per_shard,
+                          n_batches=n_batches, remote_frac=remote_frac,
+                          merge_every=merge_every, read_frac=read_frac,
+                          seed=seed, fused=True)
+
+
+def run_fused_escrow_loop(engine, state: TPCCState, esc=None, *,
+                          batch_per_shard: int, n_batches: int,
+                          remote_frac: float = 0.01, merge_every: int = 8,
+                          refresh_every: int = 1, read_frac: float = 0.25,
+                          seed: int = 0, mix: bool = True,
+                          refresh_abort_rate: float | None = None,
+                          ) -> tuple[TPCCState, object, MixStats]:
+    """The escrow regime on the fused executor (the public entry
+    ``run_escrow_loop(fused=True)`` uses)."""
+    return run_escrow_loop(engine, state, esc,
+                           batch_per_shard=batch_per_shard,
+                           n_batches=n_batches, remote_frac=remote_frac,
+                           merge_every=merge_every,
+                           refresh_every=refresh_every,
+                           refresh_abort_rate=refresh_abort_rate,
+                           read_frac=read_frac, seed=seed, mix=mix,
+                           fused=True)

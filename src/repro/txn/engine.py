@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.lattice import EscrowCounter
+from repro.core.lattice import EscrowCounter, HotSetEscrow
 from repro.core.planner import CoordClass, plan as plan_specs
 from repro.core.analyzer import Strategy
 from repro.utils.compat import shard_map
@@ -66,12 +66,27 @@ class Engine:
     ``stock_invariant`` ("restock" | "strict" | "serial") is the
     application's schema declaration for STOCK.S_QUANTITY — the knob is
     *what invariant is demanded*; the regime is derived by the analyzer.
+
+    ``escrow_layout`` selects the ESCROW regime's state layout:
+
+      * "sparse" (default) — the two-tier hot-set layout: a compact
+        device-resident HotSetEscrow over the top-K contended cells of the
+        Zipfian access profile (``hot_items`` popular item ids x every
+        warehouse; see tpcc.select_hot_cells), with the cold tail
+        owner-routed through the outbox and serialized strictly at the
+        owning shard. ~67x less escrow residency per device at spec scale
+        (tpcc.escrow_layout_bytes; asserted >= 50x in the dry-run).
+      * "dense" — the PR-3 ``[R, W, I]`` EscrowCounter (every replica holds
+        a share of every cell); kept as the comparison baseline for the
+        ``escrow_sparse_vs_dense`` benchmark.
     """
 
     scale: TPCCScale
     mesh: Mesh
     axis_names: tuple[str, ...] = ("data",)
     stock_invariant: str = "restock"
+    escrow_layout: str = "sparse"
+    hot_items: int | None = None
 
     def __post_init__(self):
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
@@ -99,7 +114,19 @@ class Engine:
 
         self.state_spec = P(self.axis_names)   # shard dim 0 (warehouse)
         self.batch_spec = P(self.axis_names)   # per-shard home batches
-        self.escrow_spec = P(self.axis_names)  # shard dim 0 (replica slot)
+        # escrow state sharding, per layout: dense shards the whole
+        # EscrowCounter on its replica-slot dim; sparse replicates the [K]
+        # key table and shards the [R, K] share/spent slots
+        if self.escrow_layout not in ("sparse", "dense"):
+            raise ValueError(f"unknown escrow_layout {self.escrow_layout!r};"
+                             f" choose 'sparse' or 'dense'")
+        if self.hot_items is None:
+            self.hot_items = tpcc.default_hot_items(self.scale)
+        if self.escrow_layout == "sparse":
+            self.escrow_spec = HotSetEscrow(P(), P(self.axis_names),
+                                            P(self.axis_names))
+        else:
+            self.escrow_spec = P(self.axis_names)
         ax = self.axis_names
 
         @functools.partial(
@@ -175,20 +202,34 @@ class Engine:
         self._stock_level = jax.jit(_stock_level)
 
         if self.stock_regime is CoordClass.ESCROW:
+            sparse = self.escrow_layout == "sparse"
+            self._hot_keys_np = tpcc.select_hot_cells(self.scale,
+                                                      self.hot_items)
+            self.hot_keys = jnp.asarray(self._hot_keys_np)
+
             @functools.partial(
                 shard_map, mesh=self.mesh,
                 in_specs=(self.state_spec, self.escrow_spec, self.batch_spec),
                 out_specs=(self.state_spec, self.escrow_spec, self.batch_spec,
                            self.batch_spec, self.batch_spec),
                 check_vma=False)
-            def _neworder_escrow(state: TPCCState, esc: EscrowCounter,
-                                 batch: NewOrderBatch):
+            def _neworder_escrow(state: TPCCState, esc, batch: NewOrderBatch):
                 idx = self._shard_index()
                 w_lo = idx * self.w_per_shard
-                state, spent, delta, total, ok = tpcc.apply_neworder_escrow(
-                    state, esc.shares[0], esc.spent[0], batch, self.scale,
-                    w_lo=w_lo, w_hi=w_lo + self.w_per_shard,
-                    replica=idx, num_replicas=self.n_shards)
+                if sparse:
+                    state, spent, delta, total, ok = \
+                        tpcc.apply_neworder_escrow_sparse(
+                            state, esc.keys, esc.shares[0], esc.spent[0],
+                            batch, self.scale, w_lo=w_lo,
+                            w_hi=w_lo + self.w_per_shard,
+                            replica=idx, num_replicas=self.n_shards)
+                else:
+                    state, spent, delta, total, ok = \
+                        tpcc.apply_neworder_escrow(
+                            state, esc.shares[0], esc.spent[0], batch,
+                            self.scale, w_lo=w_lo,
+                            w_hi=w_lo + self.w_per_shard,
+                            replica=idx, num_replicas=self.n_shards)
                 return (state, esc._replace(spent=spent[None]), delta, total,
                         ok)
 
@@ -197,17 +238,45 @@ class Engine:
                 in_specs=(self.state_spec, self.escrow_spec),
                 out_specs=self.escrow_spec,
                 check_vma=False)
-            def _refresh(state: TPCCState, esc: EscrowCounter):
+            def _refresh(state: TPCCState, esc):
                 # THE amortized coordination point of the escrow regime:
-                # gather the owners' post-drain stock and re-partition it
-                # into fresh per-replica shares (spent resets to zero)
-                return gather_and_refresh_shares(state, ax,
-                                                 self._shard_index(),
+                # re-partition the owners' post-drain stock into fresh
+                # per-replica shares (spent resets to zero). Sparse gathers
+                # ONLY the K hot cells (one psum over [K]) instead of the
+                # dense layout's full [W, I] stock all-gather.
+                idx = self._shard_index()
+                if sparse:
+                    return gather_and_refresh_hot_shares(
+                        state, esc.keys, ax, idx, self.n_shards,
+                        self.scale.n_items, idx * self.w_per_shard,
+                        self.w_per_shard)
+                return gather_and_refresh_shares(state, ax, idx,
                                                  self.n_shards)
+
+            @functools.partial(
+                shard_map, mesh=self.mesh,
+                in_specs=(self.state_spec, self.batch_spec),
+                out_specs=(self.state_spec, self.batch_spec),
+                check_vma=False)
+            def _drain_strict(state: TPCCState, outbox: StockDelta):
+                # strict-regime anti-entropy: hot entries (escrow-admitted)
+                # apply unconditionally; cold entries are serialized here, at
+                # their owner, with per-cell all-or-nothing admission —
+                # oversell-free without shares. Dense has no cold tier.
+                w_lo = self._shard_index() * self.w_per_shard
+                if sparse:
+                    return gather_and_apply_outbox_strict(
+                        state, outbox, self.hot_keys, ax, w_lo,
+                        self.w_per_shard, self.scale.n_items)
+                state = gather_and_apply_outbox(state, outbox, ax, w_lo,
+                                                self.w_per_shard,
+                                                restock=False)
+                return state, jnp.zeros((1,), jnp.int32)
 
             self._neworder_escrow = jax.jit(_neworder_escrow,
                                             donate_argnums=(0, 1))
             self._refresh_escrow = jax.jit(_refresh, donate_argnums=1)
+            self._drain_strict = jax.jit(_drain_strict, donate_argnums=0)
 
     # -- helpers --------------------------------------------------------------
 
@@ -236,10 +305,22 @@ class Engine:
                 f"construct the engine with stock_invariant='strict' (the "
                 f"plan, not a flag, selects the escrow path)")
 
-    def init_escrow(self, state: TPCCState) -> EscrowCounter:
-        """Device-resident per-replica shares partitioning the current stock
-        ([R, W, I], sharded on the replica-slot dim)."""
+    def init_escrow(self, state: TPCCState):
+        """Device-resident per-replica shares partitioning the current stock.
+
+        sparse layout — a HotSetEscrow over the K hot cells (keys replicated,
+        [R, K] shares/spent sharded on the replica-slot dim); dense layout —
+        the full [R, W, I] EscrowCounter."""
         self._require_escrow()
+        if self.escrow_layout == "sparse":
+            q = np.asarray(jax.device_get(state.s_quantity))
+            budgets = q.reshape(-1)[self._hot_keys_np]
+            esc = HotSetEscrow.make(self.n_shards, self._hot_keys_np, budgets)
+            rep = NamedSharding(self.mesh, P())
+            sh = NamedSharding(self.mesh, P(self.axis_names))
+            return HotSetEscrow(jax.device_put(esc.keys, rep),
+                                jax.device_put(esc.shares, sh),
+                                jax.device_put(esc.spent, sh))
         shares = tpcc.make_escrow_shares(jax.device_get(state.s_quantity),
                                          self.n_shards)
         sh = NamedSharding(self.mesh, self.escrow_spec)
@@ -254,12 +335,31 @@ class Engine:
         self._require_escrow()
         return self._neworder_escrow(state, esc, batch)
 
-    def refresh_escrow(self, state: TPCCState,
-                       esc: EscrowCounter) -> EscrowCounter:
+    def refresh_escrow(self, state: TPCCState, esc):
         """The amortized coordination point: re-partition post-drain stock
         into fresh shares (contains collectives; off the hot path)."""
         self._require_escrow()
         return self._refresh_escrow(state, esc)
+
+    def drain_strict(self, state: TPCCState,
+                     outbox: StockDelta) -> tuple[TPCCState, Array]:
+        """Strict-regime anti-entropy: apply queued outbox entries without
+        restock — hot entries unconditionally (share-admitted upstream),
+        cold entries under the owner's per-cell all-or-nothing admission.
+        Returns (state, per-shard cold-reject counts [n_shards])."""
+        self._require_escrow()
+        return self._drain_strict(state, outbox)
+
+    def escrow_bytes_per_device(self) -> dict:
+        """Per-device escrow residency of this engine's layout vs the dense
+        baseline (the dry-run's >= 50x memory-cut assertion reads this)."""
+        self._require_escrow()
+        out = tpcc.escrow_layout_bytes(self.scale, self.hot_items)
+        out["layout"] = self.escrow_layout
+        out["bytes_per_device"] = (
+            out["sparse_bytes_per_device"] if self.escrow_layout == "sparse"
+            else out["dense_bytes_per_device"])
+        return out
 
     def anti_entropy(self, state: TPCCState, outbox: StockDelta) -> TPCCState:
         """Asynchronous convergence step (contains collectives, off hot path)."""
@@ -303,7 +403,13 @@ class Engine:
         assert_no_collectives(text, context="TPC-C New-Order hot path")
         return collective_stats(text).describe()
 
-    def escrow_input_specs(self) -> EscrowCounter:
+    def escrow_input_specs(self):
+        if self.escrow_layout == "sparse":
+            K = self._hot_keys_np.shape[0]
+            return HotSetEscrow(
+                jax.ShapeDtypeStruct((K,), jnp.int32),
+                jax.ShapeDtypeStruct((self.n_shards, K), jnp.int32),
+                jax.ShapeDtypeStruct((self.n_shards, K), jnp.int32))
         W, I = self.scale.n_warehouses, self.scale.n_items
         f = jax.ShapeDtypeStruct((self.n_shards, W, I), jnp.int32)
         return EscrowCounter(f, f)
@@ -406,17 +512,60 @@ def gather_and_refresh_shares(state: TPCCState, axis_names, replica,
     return EscrowCounter(share[None], jnp.zeros_like(share)[None])
 
 
+def gather_and_apply_outbox_strict(state: TPCCState, outbox, hot_keys,
+                                   axis_names, w_lo, w_per_shard,
+                                   n_items: int) -> tuple[TPCCState, Array]:
+    """The sparse strict-drain body, shared by Engine.drain_strict and the
+    fused executor's ring drain (one definition keeps the owner-routed cold
+    tier's admission — per-cell all-or-nothing, order-invariant over the
+    drain window — bit-identical across drivers): all-gather every shard's
+    outbox and strictly apply the entries this shard owns, split by hot-set
+    tier (tpcc.apply_stock_updates_strict_tiered).
+
+    Returns (state, cold-reject count [1])."""
+    gathered = jax.tree.map(
+        lambda x: _multi_axis_all_gather(x, axis_names), outbox)
+    dst = gathered.dst_w.reshape(-1)
+    i_id = gathered.i_id.reshape(-1)
+    qty = gathered.qty.reshape(-1)
+    valid = gathered.valid.reshape(-1)
+    own = valid & (dst >= w_lo) & (dst < w_lo + w_per_shard)
+    state, rejects = tpcc.apply_stock_updates_strict_tiered(
+        state, hot_keys, dst, i_id, qty, own, jnp.ones_like(own),
+        n_items, w_lo=w_lo)
+    return state, rejects.reshape(1)
+
+
+def gather_and_refresh_hot_shares(state: TPCCState, hot_keys, axis_names,
+                                  replica, n_shards: int, n_items: int,
+                                  w_lo, w_per_shard) -> "HotSetEscrow":
+    """The sparse share-refresh body: sum the owners' current stock of the K
+    hot cells across shards (one psum over [K] — vs the dense layout's full
+    [W, I] all-gather) and re-partition it into this replica's fresh share
+    slot (spent resets to zero)."""
+    kw = hot_keys // n_items
+    ki = hot_keys % n_items
+    own = (kw >= w_lo) & (kw < w_lo + w_per_shard)
+    q = jnp.where(own, state.s_quantity[jnp.where(own, kw - w_lo, 0), ki], 0)
+    for a in reversed(axis_names):
+        q = jax.lax.psum(q, a)
+    share = tpcc.escrow_share_for(q, replica, n_shards)
+    return HotSetEscrow(hot_keys, share[None], jnp.zeros_like(share)[None])
+
+
 def single_host_engine(scale: TPCCScale,
-                       stock_invariant: str = "restock") -> Engine:
+                       stock_invariant: str = "restock",
+                       **engine_kwargs) -> Engine:
     """Engine over the current process's devices (1 on CPU tests)."""
     devs = np.array(jax.devices())
     mesh = Mesh(devs.reshape(len(devs)), ("data",))
-    return Engine(scale, mesh, ("data",), stock_invariant=stock_invariant)
+    return Engine(scale, mesh, ("data",), stock_invariant=stock_invariant,
+                  **engine_kwargs)
 
 
 def plan_engine(scale: TPCCScale, mesh: Mesh | None = None,
                 axis_names: tuple[str, ...] = ("data",),
-                stock_invariant: str = "restock"):
+                stock_invariant: str = "restock", **engine_kwargs):
     """Plan-driven engine selection — the paper's decision procedure as a
     factory: run the analyzer over the declared TPC-C state specs and return
 
@@ -437,489 +586,27 @@ def plan_engine(scale: TPCCScale, mesh: Mesh | None = None,
         eng = TwoPCEngine(scale, mesh, axis_names, strict_stock=True)
         eng.plan = cplan
         return eng
-    return Engine(scale, mesh, axis_names, stock_invariant=stock_invariant)
+    return Engine(scale, mesh, axis_names, stock_invariant=stock_invariant,
+                  **engine_kwargs)
 
 
 # ---------------------------------------------------------------------------
-# Closed-loop driver used by benchmarks and the serve example
+# Closed-loop drivers live in txn/drivers.py (one consolidated
+# pending-outbox/stats/audit core for every regime x mode); the names below
+# stay importable from this module for compatibility. PEP 562 lazy re-export
+# avoids an import cycle (drivers imports this module).
 # ---------------------------------------------------------------------------
 
-
-@dataclasses.dataclass
-class RunStats:
-    committed: int = 0
-    batches: int = 0
-    anti_entropy_rounds: int = 0
-    aborted: int = 0       # escrow regime: insufficient-share atomic aborts
-    refreshes: int = 0     # escrow regime: amortized share-refresh rounds
-    wall_seconds: float = 0.0
-
-    @property
-    def throughput(self) -> float:
-        return self.committed / self.wall_seconds if self.wall_seconds else 0.0
+_DRIVER_EXPORTS = (
+    "RunStats", "MixStats", "run_closed_loop", "run_mixed_loop",
+    "run_escrow_loop", "run_loop", "generate_mix_batches",
+    "generate_neworder_stream", "counters_to_stats", "_concat_outboxes",
+    "_home_partitioned", "_neworder_batch", "_tree_copy",
+)
 
 
-def _concat_outboxes(pending: list[StockDelta]) -> StockDelta:
-    """All queued outboxes as ONE StockDelta, applied in a single
-    anti-entropy call (vs the seed's one jitted call per outbox)."""
-    if len(pending) == 1:
-        return pending[0]
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *pending)
-
-
-def _tree_copy(t):
-    return jax.tree.map(lambda x: x.copy(), t)
-
-
-def _neworder_batch(engine: Engine, rng: np.random.Generator,
-                    batch_per_shard: int, remote_frac: float,
-                    ts0: int) -> tuple[NewOrderBatch, int]:
-    """One home-partitioned New-Order batch (shard s gets txns for its
-    warehouse range); returns (batch, advanced ts0). The single source of
-    the stream layout — the fused/dispatch bit-exactness contract rests on
-    every driver drawing identical streams."""
-    parts = []
-    for s in range(engine.n_shards):
-        parts.append(tpcc.generate_neworder(
-            rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
-            w_lo=s * engine.w_per_shard,
-            w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
-        ts0 += batch_per_shard
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts), ts0
-
-
-def generate_neworder_stream(engine: Engine, *, batch_per_shard: int,
-                             n_batches: int, remote_frac: float,
-                             rng: np.random.Generator,
-                             ts0: int = 0) -> list[NewOrderBatch]:
-    """Home-partitioned New-Order batches for a whole run."""
-    batches = []
-    for _ in range(n_batches):
-        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
-                                     remote_frac, ts0)
-        batches.append(batch)
-    return batches
-
-
-def run_closed_loop(engine: Engine, state: TPCCState, *,
-                    batch_per_shard: int, n_batches: int,
-                    remote_frac: float = 0.01, merge_every: int = 8,
-                    seed: int = 0,
-                    payments: bool = False, deliveries: bool = False,
-                    fused: bool = True,
-                    ) -> tuple[TPCCState, RunStats]:
-    """Drive the engine: New-Order hot path + periodic anti-entropy.
-
-    With ``fused=True`` (default) the loop runs on the chunked-scan
-    megastep executor (txn/executor.py): merge_every iterations per jitted
-    call, outboxes ring-buffered on device, one batched drain per chunk.
-    ``fused=False`` keeps the per-batch dispatch driver as a baseline.
-
-    Batches are pre-generated (the generator is not the system under test);
-    wall time covers device execution only — compilation is triggered on
-    throwaway copies, so all ``n_batches`` batches are timed.
-
-    On an escrow-regime engine (stock_invariant="strict") the loop routes
-    to :func:`run_escrow_loop` (New-Order only; ``payments``/``deliveries``
-    are a mixed-loop feature there).
-    """
-    import time
-
-    if engine.stock_regime is CoordClass.ESCROW:
-        if payments or deliveries:
-            raise NotImplementedError(
-                "escrow regime: use run_escrow_loop(mix=True) for the full "
-                "transaction mix")
-        state, _, mix = run_escrow_loop(
-            engine, state, batch_per_shard=batch_per_shard,
-            n_batches=n_batches, remote_frac=remote_frac,
-            merge_every=merge_every, seed=seed, mix=False, fused=fused)
-        return state, RunStats(
-            committed=mix.neworders, batches=n_batches,
-            anti_entropy_rounds=mix.anti_entropy_rounds, aborted=mix.aborts,
-            refreshes=mix.refreshes, wall_seconds=mix.wall_seconds)
-
-    rng = np.random.default_rng(seed)
-    B = batch_per_shard * engine.n_shards
-    batches = generate_neworder_stream(
-        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-        remote_frac=remote_frac, rng=rng)
-    # payments home-partitioned like every other stream: shard s only ever
-    # sees its own warehouses (positional sharding of the batch)
-    pay_batches = [_home_partitioned(tpcc.generate_payment, rng, engine,
-                                     batch_per_shard)
-                   for _ in range(n_batches)] if payments else None
-
-    if fused:
-        from .executor import get_fused_executor, stack_chunks
-
-        chunks = stack_chunks(batches, pay_batches, None, None, merge_every)
-        ex = get_fused_executor(engine, ring_rows=merge_every,
-                                deliveries=deliveries)
-        state, counters, wall = ex.run(state, chunks)
-        del counters  # New-Order-only stats are statically known
-        return state, RunStats(committed=B * n_batches, batches=n_batches,
-                               anti_entropy_rounds=len(chunks),
-                               wall_seconds=wall)
-
-    # -- per-batch dispatch baseline ----------------------------------------
-    # warmup compiles on copies (timed loop then covers every batch)
-    warm = _tree_copy(state)
-    warm, outbox, _ = engine.neworder_step(warm, batches[0])
-    if payments:
-        warm = engine.payment_step(warm, pay_batches[0])
-    if deliveries:
-        warm, _ = engine.delivery_step(warm)
-    for k in {min(merge_every, n_batches), n_batches % merge_every} - {0}:
-        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
-    jax.block_until_ready(warm)
-    del warm, outbox
-
-    stats = RunStats()
-    t0 = time.perf_counter()
-    pending: list[StockDelta] = []
-    for i in range(n_batches):
-        state, outbox, totals = engine.neworder_step(state, batches[i])
-        pending.append(outbox)
-        stats.committed += B
-        stats.batches += 1
-        if payments:
-            state = engine.payment_step(state, pay_batches[i])
-        if deliveries:
-            state, _ = engine.delivery_step(state)
-        if len(pending) == merge_every or i == n_batches - 1:
-            # anti-entropy drains the queued outboxes in one call
-            # (convergence may lag the hot path arbitrarily — Definition 3
-            # — but must happen)
-            state = engine.anti_entropy(state, _concat_outboxes(pending))
-            stats.anti_entropy_rounds += 1
-            pending = []
-    jax.block_until_ready(state)
-    stats.wall_seconds = time.perf_counter() - t0
-    return state, stats
-
-
-# ---------------------------------------------------------------------------
-# Full TPC-C mix: writes + RAMP reads (the paper's complete transaction set)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class MixStats:
-    """Closed-loop stats for the five-transaction mix."""
-
-    neworders: int = 0
-    payments: int = 0
-    order_statuses: int = 0
-    stock_levels: int = 0
-    deliveries: int = 0
-    anti_entropy_rounds: int = 0
-    reads_found: int = 0
-    fractures_observed: int = 0   # must stay 0: RAMP atomic visibility
-    lines_repaired: int = 0       # 2nd-round (lookback) activity
-    aborts: int = 0               # escrow regime: insufficient-share aborts
-    refreshes: int = 0            # escrow regime: share-refresh rounds
-    wall_seconds: float = 0.0
-
-    @property
-    def committed(self) -> int:
-        return (self.neworders + self.payments + self.order_statuses
-                + self.stock_levels + self.deliveries)
-
-    @property
-    def throughput(self) -> float:
-        return self.committed / self.wall_seconds if self.wall_seconds else 0.0
-
-
-def _home_partitioned(gen, rng, engine: Engine, per_shard: int, **kw):
-    parts = [gen(rng, engine.scale, per_shard,
-                 w_lo=s * engine.w_per_shard,
-                 w_hi=(s + 1) * engine.w_per_shard, **kw)
-             for s in range(engine.n_shards)]
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
-
-
-def generate_mix_batches(engine: Engine, *, batch_per_shard: int,
-                         n_batches: int, remote_frac: float = 0.01,
-                         read_frac: float = 0.25, seed: int = 0):
-    """Pre-generate the five-transaction-mix batch streams (home-partitioned,
-    one rng). Shared by the fused executor and the per-batch dispatch driver
-    so both execute the identical transaction stream."""
-    rng = np.random.default_rng(seed)
-    per_shard_reads = max(1, int(batch_per_shard * read_frac))
-    ts0 = 0
-    no_batches, pay_batches, os_batches, sl_batches = [], [], [], []
-    for _ in range(n_batches):
-        batch, ts0 = _neworder_batch(engine, rng, batch_per_shard,
-                                     remote_frac, ts0)
-        no_batches.append(batch)
-        pay_batches.append(_home_partitioned(
-            tpcc.generate_payment, rng, engine, batch_per_shard))
-        os_batches.append(_home_partitioned(
-            tpcc.generate_order_status, rng, engine, per_shard_reads))
-        sl_batches.append(_home_partitioned(
-            tpcc.generate_stock_level, rng, engine, per_shard_reads))
-    return no_batches, pay_batches, os_batches, sl_batches
-
-
-def run_mixed_loop(engine: Engine, state: TPCCState, *,
-                   batch_per_shard: int, n_batches: int,
-                   remote_frac: float = 0.01, merge_every: int = 8,
-                   read_frac: float = 0.25, seed: int = 0,
-                   fused: bool = True, legacy: bool = False,
-                   ) -> tuple[TPCCState, MixStats]:
-    """Drive the full TPC-C mix: New-Order + Payment writes, periodic
-    Delivery, and the RAMP read transactions (Order-Status, Stock-Level).
-
-    Reads run against the live sharded state between write batches — the
-    workload the paper's RAMP-F prototype measures. ``read_frac`` sizes the
-    read batches relative to the write batches (the spec mix is ~8% reads;
-    the default stresses the read path harder).
-
-    ``fused=True`` (default) runs on the megastep executor
-    (txn/executor.py): merge_every full-mix iterations per jitted scan,
-    outboxes ring-buffered on device, MixStats accumulated as on-device
-    counters with ONE host transfer at run end. ``fused=False`` keeps the
-    per-batch dispatch driver (one jitted call per transaction type per
-    batch) as the comparison baseline; both modes execute the identical
-    pre-generated stream with the same drain cadence and produce
-    bit-identical final state (tests/test_executor.py).
-
-    ``legacy=True`` selects the dispatch path (overriding ``fused``) and
-    additionally restores the original driver's host behavior —
-    per-iteration ``int(...)`` stat reads (a device sync every batch) and
-    one jitted anti-entropy call per queued outbox — as the benchmark
-    baseline for what the executor eliminates.
-    """
-    import time
-
-    if engine.stock_regime is CoordClass.ESCROW:
-        state, _, stats = run_escrow_loop(
-            engine, state, batch_per_shard=batch_per_shard,
-            n_batches=n_batches, remote_frac=remote_frac,
-            merge_every=merge_every, read_frac=read_frac, seed=seed,
-            mix=True, fused=fused, legacy=legacy)
-        return state, stats
-
-    if legacy:
-        fused = False
-    if fused:
-        from .executor import run_fused_loop
-
-        return run_fused_loop(engine, state, batch_per_shard=batch_per_shard,
-                              n_batches=n_batches, remote_frac=remote_frac,
-                              merge_every=merge_every, read_frac=read_frac,
-                              seed=seed)
-
-    B = batch_per_shard * engine.n_shards
-    R = max(1, int(batch_per_shard * read_frac)) * engine.n_shards
-    no_batches, pay_batches, os_batches, sl_batches = generate_mix_batches(
-        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-        remote_frac=remote_frac, read_frac=read_frac, seed=seed)
-
-    # warmup compiles on copies (one per transaction type + drain shapes);
-    # the timed loop then covers every batch
-    warm = _tree_copy(state)
-    warm, outbox, _ = engine.neworder_step(warm, no_batches[0])
-    warm = engine.payment_step(warm, pay_batches[0])
-    warm, _ = engine.delivery_step(warm)
-    res = (engine.order_status_step(warm, os_batches[0]),
-           engine.stock_level_step(warm, sl_batches[0]))
-    drain_shapes = {1} if legacy else \
-        {min(merge_every, n_batches), n_batches % merge_every} - {0}
-    for k in drain_shapes:
-        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
-    jax.block_until_ready((warm, res))
-    del warm, outbox, res
-
-    stats = MixStats()
-    zero = 0 if legacy else jnp.zeros((), jnp.int32)
-    # on-device stat accumulators: no per-iteration host round-trips (the
-    # seed's int(...) reads — restored under ``legacy`` — forced a device
-    # sync every batch)
-    found_acc, fract_acc, rep_acc, del_acc = zero, zero, zero, zero
-    t0 = time.perf_counter()
-    pending: list[StockDelta] = []
-    for i in range(n_batches):
-        state, outbox, _ = engine.neworder_step(state, no_batches[i])
-        pending.append(outbox)
-        stats.neworders += B
-        state = engine.payment_step(state, pay_batches[i])
-        stats.payments += B
-
-        os_res = engine.order_status_step(state, os_batches[i])
-        sl_res = engine.stock_level_step(state, sl_batches[i])
-        stats.order_statuses += R
-        stats.stock_levels += R
-        if legacy:
-            # seed behavior: host-side int() reads force a device sync
-            # every single batch
-            found_acc = found_acc + int(os_res.found.sum())
-            fract_acc = fract_acc + int(os_res.fractures_observed()) + int(
-                (sl_res.fractured - sl_res.repaired).sum())
-            rep_acc = rep_acc + int(os_res.repaired.sum()
-                                    + sl_res.repaired.sum())
-        else:
-            found_acc = found_acc + os_res.found.sum()
-            fract_acc = (fract_acc + os_res.fractures_observed()
-                         + (sl_res.fractured - sl_res.repaired).sum())
-            rep_acc = rep_acc + os_res.repaired.sum() + sl_res.repaired.sum()
-
-        state, delivered = engine.delivery_step(state)
-        del_acc = (del_acc + int(delivered.sum())) if legacy \
-            else del_acc + delivered.sum()
-        if len(pending) == merge_every or i == n_batches - 1:
-            # one batched drain of all queued outboxes (Definition 3:
-            # convergence may lag the hot path, but must happen);
-            # legacy mode keeps the seed's one jitted call per outbox
-            if legacy:
-                for ob in pending:
-                    state = engine.anti_entropy(state, ob)
-            else:
-                state = engine.anti_entropy(state, _concat_outboxes(pending))
-            stats.anti_entropy_rounds += 1
-            pending = []
-    jax.block_until_ready((state, found_acc, fract_acc, rep_acc, del_acc))
-    stats.wall_seconds = time.perf_counter() - t0
-    # single host transfer for the data-dependent counters
-    stats.reads_found = int(found_acc)
-    stats.fractures_observed = int(fract_acc)
-    stats.lines_repaired = int(rep_acc)
-    stats.deliveries = int(del_acc)
-    return state, stats
-
-
-# ---------------------------------------------------------------------------
-# Escrow-regime closed loop (plan-selected; paper §8 amortized coordination)
-# ---------------------------------------------------------------------------
-
-
-def run_escrow_loop(engine: Engine, state: TPCCState,
-                    esc: "EscrowCounter | None" = None, *,
-                    batch_per_shard: int, n_batches: int,
-                    remote_frac: float = 0.01, merge_every: int = 8,
-                    refresh_every: int = 1, read_frac: float = 0.25,
-                    seed: int = 0, mix: bool = True,
-                    fused: bool = True, legacy: bool = False,
-                    ) -> tuple[TPCCState, "EscrowCounter", MixStats]:
-    """Drive the escrow regime: strict-stock New-Order (plus the rest of the
-    mix when ``mix=True``), one batched strict drain per ``merge_every``
-    window, and the amortized share refresh every ``refresh_every`` drains —
-    the regime's ONLY collective beyond the drain itself.
-
-    ``fused=True`` (default) runs on the megastep executor with the escrow
-    counters joining the donated scan carry and the refresh fused into the
-    per-chunk drain program; ``fused=False`` is the per-batch dispatch
-    baseline; ``legacy=True`` additionally restores per-outbox drains and
-    per-batch host stat reads. All three execute the identical stream at the
-    identical drain/refresh cadence and land on bit-identical (integer)
-    state, escrow, and counters (tests/test_executor.py).
-
-    Returns (state, escrow, MixStats) — ``stats.neworders`` counts COMMITTED
-    New-Orders; insufficient-share atomic aborts are in ``stats.aborts``.
-    """
-    import time
-
-    engine._require_escrow()
-    if legacy:
-        fused = False
-    if esc is None:
-        esc = engine.init_escrow(state)
-    if fused:
-        from .executor import run_fused_escrow_loop
-
-        return run_fused_escrow_loop(
-            engine, state, esc, batch_per_shard=batch_per_shard,
-            n_batches=n_batches, remote_frac=remote_frac,
-            merge_every=merge_every, refresh_every=refresh_every,
-            read_frac=read_frac, seed=seed, mix=mix)
-
-    B = batch_per_shard * engine.n_shards
-    if mix:
-        R = max(1, int(batch_per_shard * read_frac)) * engine.n_shards
-        no_b, pay_b, os_b, sl_b = generate_mix_batches(
-            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-            remote_frac=remote_frac, read_frac=read_frac, seed=seed)
-    else:
-        R = 0
-        no_b = generate_neworder_stream(
-            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-            remote_frac=remote_frac, rng=np.random.default_rng(seed))
-
-    # warmup compiles on copies; the timed loop covers every batch
-    warm, wesc = _tree_copy(state), _tree_copy(esc)
-    warm, wesc, outbox, _, _ = engine.neworder_escrow_step(warm, wesc,
-                                                           no_b[0])
-    if mix:
-        warm = engine.payment_step(warm, pay_b[0])
-        res = (engine.order_status_step(warm, os_b[0]),
-               engine.stock_level_step(warm, sl_b[0]))
-        warm, _ = engine.delivery_step(warm)
-    else:
-        res = None
-    drain_shapes = {1} if legacy else \
-        {min(merge_every, n_batches), n_batches % merge_every} - {0}
-    for k in drain_shapes:
-        warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
-    wesc = engine.refresh_escrow(warm, wesc)
-    jax.block_until_ready((warm, wesc, res))
-    del warm, wesc, outbox, res
-
-    stats = MixStats()
-    zero = 0 if legacy else jnp.zeros((), jnp.int32)
-    commit_acc, found_acc, fract_acc = zero, zero, zero
-    rep_acc, del_acc = zero, zero
-    rounds = 0
-    pending: list[StockDelta] = []
-    t0 = time.perf_counter()
-    for i in range(n_batches):
-        state, esc, outbox, _, ok = engine.neworder_escrow_step(
-            state, esc, no_b[i])
-        pending.append(outbox)
-        commit_acc = commit_acc + (int(ok.sum()) if legacy
-                                   else ok.sum().astype(jnp.int32))
-        if mix:
-            state = engine.payment_step(state, pay_b[i])
-            stats.payments += B
-            os_res = engine.order_status_step(state, os_b[i])
-            sl_res = engine.stock_level_step(state, sl_b[i])
-            stats.order_statuses += R
-            stats.stock_levels += R
-            if legacy:
-                found_acc = found_acc + int(os_res.found.sum())
-                fract_acc = fract_acc + int(os_res.fractures_observed()) \
-                    + int((sl_res.fractured - sl_res.repaired).sum())
-                rep_acc = rep_acc + int(os_res.repaired.sum()
-                                        + sl_res.repaired.sum())
-            else:
-                found_acc = found_acc + os_res.found.sum()
-                fract_acc = (fract_acc + os_res.fractures_observed()
-                             + (sl_res.fractured - sl_res.repaired).sum())
-                rep_acc = (rep_acc + os_res.repaired.sum()
-                           + sl_res.repaired.sum())
-            state, delivered = engine.delivery_step(state)
-            del_acc = (del_acc + int(delivered.sum())) if legacy \
-                else del_acc + delivered.sum()
-        if len(pending) == merge_every or i == n_batches - 1:
-            if legacy:
-                for ob in pending:
-                    state = engine.anti_entropy(state, ob)
-            else:
-                state = engine.anti_entropy(state, _concat_outboxes(pending))
-            stats.anti_entropy_rounds += 1
-            rounds += 1
-            pending = []
-            if rounds % refresh_every == 0:
-                # the amortized coordination point, aligned with the drain
-                esc = engine.refresh_escrow(state, esc)
-                stats.refreshes += 1
-    jax.block_until_ready((state, esc, commit_acc, found_acc, fract_acc,
-                           rep_acc, del_acc))
-    stats.wall_seconds = time.perf_counter() - t0
-    stats.neworders = int(commit_acc)
-    stats.aborts = B * n_batches - stats.neworders
-    stats.reads_found = int(found_acc)
-    stats.fractures_observed = int(fract_acc)
-    stats.lines_repaired = int(rep_acc)
-    stats.deliveries = int(del_acc)
-    return state, esc, stats
+def __getattr__(name):
+    if name in _DRIVER_EXPORTS:
+        from . import drivers
+        return getattr(drivers, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

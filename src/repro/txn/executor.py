@@ -49,6 +49,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lattice import EscrowCounter
 from repro.core.planner import CoordClass
@@ -56,7 +57,9 @@ from repro.utils.compat import shard_map
 from repro.utils.hlo import assert_no_collectives, collective_stats
 
 from . import ramp, tpcc
-from .engine import (Engine, MixStats, gather_and_apply_outbox,
+from .engine import (Engine, gather_and_apply_outbox,
+                     gather_and_apply_outbox_strict,
+                     gather_and_refresh_hot_shares,
                      gather_and_refresh_shares)
 from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
                    StockLevelBatch, TPCCState)
@@ -158,9 +161,11 @@ class FusedExecutor:
         count_spec = eng.batch_spec
         # the engine's coordination plan selects the executor's hot path:
         # FREE -> restock New-Order + restocking drain; ESCROW -> strict
-        # New-Order with the EscrowCounter joining the donated scan carry,
-        # strict drain, and the share refresh fused into the drain program
+        # New-Order with the escrow counters joining the donated scan carry
+        # (sparse HotSetEscrow or dense EscrowCounter per engine layout),
+        # strict tiered drain, and the share refresh fused into the drain
         self._escrow = eng.stock_regime is CoordClass.ESCROW
+        self._sparse = self._escrow and eng.escrow_layout == "sparse"
         esc_spec = eng.escrow_spec
 
         def step_tail(state, cnt, pay_b, os_b, sl_b, w_lo):
@@ -237,7 +242,7 @@ class FusedExecutor:
             out_specs=(state_spec, shard1_spec, count_spec, esc_spec),
             check_vma=False)
         def _megastep_escrow(state: TPCCState, ring: OutboxRing,
-                             counters: MixCounters, esc: EscrowCounter,
+                             counters: MixCounters, esc,
                              chunk: MixChunk):
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
@@ -247,10 +252,18 @@ class FusedExecutor:
                 state, ring, cnt, esc = carry
                 no_b, pay_b, os_b, sl_b, i = xs
                 B = no_b.w.shape[0]
-                state, spent, delta, _, ok = tpcc.apply_neworder_escrow(
-                    state, esc.shares[0], esc.spent[0], no_b, scale,
-                    w_lo=w_lo, w_hi=w_lo + eng.w_per_shard,
-                    replica=idx, num_replicas=eng.n_shards)
+                if self._sparse:
+                    state, spent, delta, _, ok = \
+                        tpcc.apply_neworder_escrow_sparse(
+                            state, esc.keys, esc.shares[0], esc.spent[0],
+                            no_b, scale, w_lo=w_lo,
+                            w_hi=w_lo + eng.w_per_shard,
+                            replica=idx, num_replicas=eng.n_shards)
+                else:
+                    state, spent, delta, _, ok = tpcc.apply_neworder_escrow(
+                        state, esc.shares[0], esc.spent[0], no_b, scale,
+                        w_lo=w_lo, w_hi=w_lo + eng.w_per_shard,
+                        replica=idx, num_replicas=eng.n_shards)
                 esc = esc._replace(spent=spent[None])
                 ring = OutboxRing(*(
                     jax.lax.dynamic_update_index_in_dim(r, v, i % rows, 0)
@@ -279,28 +292,56 @@ class FusedExecutor:
             # the same body Engine.anti_entropy runs per outbox
             w_lo = eng._shard_index() * eng.w_per_shard
             state = gather_and_apply_outbox(state, ring, ax, w_lo,
-                                            eng.w_per_shard,
-                                            restock=not self._escrow)
+                                            eng.w_per_shard, restock=True)
             return state, ring._replace(valid=jnp.zeros_like(ring.valid))
+
+        def _strict_drain_body(state, ring, hot_keys, w_lo):
+            # the escrow regime's strict ring drain — hot entries apply
+            # unconditionally (share-admitted), cold entries under the
+            # owner's per-cell all-or-nothing admission (sparse layout);
+            # dense has no cold tier, so rejects are structurally zero
+            if self._sparse:
+                return gather_and_apply_outbox_strict(
+                    state, ring, hot_keys, ax, w_lo, eng.w_per_shard,
+                    scale.n_items)
+            state = gather_and_apply_outbox(state, ring, ax, w_lo,
+                                            eng.w_per_shard, restock=False)
+            return state, jnp.zeros((1,), jnp.int32)
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec),
+            check_vma=False)
+        def _drain_strict(state: TPCCState, ring: OutboxRing):
+            w_lo = eng._shard_index() * eng.w_per_shard
+            state, rej = _strict_drain_body(
+                state, ring, getattr(eng, "hot_keys", None), w_lo)
+            return state, ring._replace(
+                valid=jnp.zeros_like(ring.valid)), rej
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
             in_specs=(state_spec, shard1_spec, esc_spec),
-            out_specs=(state_spec, shard1_spec, esc_spec),
+            out_specs=(state_spec, shard1_spec, esc_spec, count_spec),
             check_vma=False)
-        def _drain_refresh(state: TPCCState, ring: OutboxRing,
-                           esc: EscrowCounter):
+        def _drain_refresh(state: TPCCState, ring: OutboxRing, esc):
             # the escrow regime's amortized coordination point, fused into
             # the chunk drain: apply every queued (strict) stock update, then
             # re-partition the owners' post-drain stock into fresh shares —
-            # one collective program per refresh_every chunks
+            # one collective program per refresh
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
-            state = gather_and_apply_outbox(state, ring, ax, w_lo,
-                                            eng.w_per_shard, restock=False)
-            esc = gather_and_refresh_shares(state, ax, idx, eng.n_shards)
+            hot_keys = esc.keys if self._sparse else None
+            state, rej = _strict_drain_body(state, ring, hot_keys, w_lo)
+            if self._sparse:
+                esc = gather_and_refresh_hot_shares(
+                    state, esc.keys, ax, idx, eng.n_shards, scale.n_items,
+                    w_lo, eng.w_per_shard)
+            else:
+                esc = gather_and_refresh_shares(state, ax, idx, eng.n_shards)
             return state, ring._replace(
-                valid=jnp.zeros_like(ring.valid)), esc
+                valid=jnp.zeros_like(ring.valid)), esc, rej
 
         # donation: the executor owns ONE live copy of state/ring/counters
         # for the whole run — every call consumes its buffers and hands the
@@ -309,6 +350,7 @@ class FusedExecutor:
         self._megastep_esc = jax.jit(_megastep_escrow,
                                      donate_argnums=(0, 1, 2, 3))
         self._drain = jax.jit(_drain, donate_argnums=(0, 1))
+        self._drain_strict = jax.jit(_drain_strict, donate_argnums=(0, 1))
         self._drain_refresh = jax.jit(_drain_refresh,
                                       donate_argnums=(0, 1, 2))
 
@@ -356,11 +398,18 @@ class FusedExecutor:
         return self._megastep_esc(state, ring, counters, esc, chunk)
 
     def drain(self, state: TPCCState, ring: OutboxRing):
-        """Batched anti-entropy over the whole ring; clears its valid bits."""
+        """Batched anti-entropy over the whole ring; clears its valid bits
+        (merge regime: restocking apply)."""
         return self._drain(state, ring)
 
+    def drain_strict(self, state: TPCCState, ring: OutboxRing):
+        """Strict-regime ring drain (hot unconditional, cold all-or-nothing
+        at the owner). Returns (state, ring, per-shard cold rejects)."""
+        return self._drain_strict(state, ring)
+
     def drain_refresh(self, state: TPCCState, ring: OutboxRing, esc):
-        """Drain + escrow share refresh fused into one collective program."""
+        """Strict drain + escrow share refresh fused into one collective
+        program. Returns (state, ring, esc, per-shard cold rejects)."""
         return self._drain_refresh(state, ring, esc)
 
     def run(self, state: TPCCState, chunks: Sequence[MixChunk],
@@ -392,13 +441,18 @@ class FusedExecutor:
         return state, counters, time.perf_counter() - t0
 
     def run_escrow(self, state: TPCCState, esc, chunks: Sequence[MixChunk],
-                   *, refresh_every: int = 1, warmup: bool = True
-                   ) -> tuple[TPCCState, "EscrowCounter", MixCounters,
-                              float, int]:
+                   *, refresh_every: int = 1,
+                   refresh_abort_rate: float | None = None,
+                   warmup: bool = True
+                   ) -> tuple[TPCCState, object, MixCounters,
+                              float, int, int]:
         """Escrow-regime drive: scan megastep + one strict drain per chunk;
-        every ``refresh_every``-th drain additionally refreshes the escrow
-        shares (fused into the same collective program). Returns
-        (state, esc, counters, wall_seconds, refreshes)."""
+        the escrow shares refresh every ``refresh_every``-th drain (fused
+        into the same collective program), or adaptively when any replica's
+        abort rate since the last refresh crosses ``refresh_abort_rate`` —
+        adaptive control reads the on-device abort counters once per chunk
+        (the one host sync the fixed cadence does not pay). Returns
+        (state, esc, counters, wall_seconds, refreshes, cold_rejects)."""
         if not self._escrow:
             raise RuntimeError("executor is not in the escrow regime "
                                "(engine plan says merge) — use run()")
@@ -413,20 +467,42 @@ class FusedExecutor:
                 w = self.megastep_escrow(copy(state), copy(ring),
                                          copy(counters), copy(esc), chunk)
                 w2 = self.drain_refresh(w[0], w[1], w[3])
-                jax.block_until_ready(self.drain(w2[0], w2[1]))
+                jax.block_until_ready(self.drain_strict(w2[0], w2[1]))
 
+        adaptive = refresh_abort_rate is not None
+        aborts_at_refresh = np.zeros(self.engine.n_shards, np.int64)
+        txns_at_refresh = 0
+        txns_so_far = 0
         refreshes = 0
+        rejs = []
         t0 = time.perf_counter()
         for ci, chunk in enumerate(chunks):
             state, ring, counters, esc = self.megastep_escrow(
                 state, ring, counters, esc, chunk)
-            if (ci + 1) % refresh_every == 0:
-                state, ring, esc = self.drain_refresh(state, ring, esc)
+            if adaptive:
+                from .drivers import _adaptive_refresh_due
+                # per-replica abort rate since the last refresh — one small
+                # counter transfer per chunk
+                ab = np.asarray(jax.device_get(counters.aborts), np.int64)
+                txns_so_far += chunk.chunk_len * batch_per_shard
+                due = _adaptive_refresh_due(ab - aborts_at_refresh,
+                                            txns_so_far - txns_at_refresh,
+                                            refresh_abort_rate)
+                if due:
+                    aborts_at_refresh = ab
+                    txns_at_refresh = txns_so_far
+            else:
+                due = (ci + 1) % refresh_every == 0
+            if due:
+                state, ring, esc, rej = self.drain_refresh(state, ring, esc)
                 refreshes += 1
             else:
-                state, ring = self.drain(state, ring)
+                state, ring, rej = self.drain_strict(state, ring)
+            rejs.append(rej)
         jax.block_until_ready((state, esc, counters))
-        return state, esc, counters, time.perf_counter() - t0, refreshes
+        cold = int(np.asarray(jax.device_get(rejs)).sum()) if rejs else 0
+        return (state, esc, counters, time.perf_counter() - t0, refreshes,
+                cold)
 
     # -- structural proofs ---------------------------------------------------
 
@@ -521,82 +597,18 @@ def get_fused_executor(engine: Engine, ring_rows: int = 8,
 
 
 # ---------------------------------------------------------------------------
-# Closed-loop driver on the fused executor
+# The closed-loop drivers (run_fused_loop / run_fused_escrow_loop /
+# counters_to_stats) moved into txn/drivers.py — the one consolidated
+# pending-outbox/stats/audit core. Lazy re-export keeps old imports working
+# without an import cycle.
 # ---------------------------------------------------------------------------
 
-
-def counters_to_stats(counters: MixCounters, *, anti_entropy_rounds: int,
-                      wall_seconds: float, refreshes: int = 0) -> MixStats:
-    c = jax.device_get(counters)
-    return MixStats(
-        neworders=int(c.neworders.sum()),
-        payments=int(c.payments.sum()),
-        order_statuses=int(c.order_statuses.sum()),
-        stock_levels=int(c.stock_levels.sum()),
-        deliveries=int(c.deliveries.sum()),
-        anti_entropy_rounds=anti_entropy_rounds,
-        reads_found=int(c.reads_found.sum()),
-        fractures_observed=int(c.fractures_observed.sum()),
-        lines_repaired=int(c.lines_repaired.sum()),
-        aborts=int(c.aborts.sum()),
-        refreshes=refreshes,
-        wall_seconds=wall_seconds)
+_DRIVER_EXPORTS = ("counters_to_stats", "run_fused_loop",
+                   "run_fused_escrow_loop", "MixStats")
 
 
-def run_fused_loop(engine: Engine, state: TPCCState, *,
-                   batch_per_shard: int, n_batches: int,
-                   remote_frac: float = 0.01, merge_every: int = 8,
-                   read_frac: float = 0.25, seed: int = 0,
-                   ) -> tuple[TPCCState, MixStats]:
-    """The full five-transaction mix on the fused executor.
-
-    Batch streams are generated exactly as the per-batch dispatch driver
-    (``run_mixed_loop(..., fused=False)``) generates them, so the two are
-    comparable transaction-for-transaction — and bit-exact in final state.
-    """
-    from .engine import generate_mix_batches
-
-    no_b, pay_b, os_b, sl_b = generate_mix_batches(
-        engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-        remote_frac=remote_frac, read_frac=read_frac, seed=seed)
-    chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
-    ex = get_fused_executor(engine, ring_rows=merge_every, deliveries=True)
-    state, counters, wall = ex.run(state, chunks)
-    return state, counters_to_stats(counters,
-                                    anti_entropy_rounds=len(chunks),
-                                    wall_seconds=wall)
-
-
-def run_fused_escrow_loop(engine: Engine, state: TPCCState, esc, *,
-                          batch_per_shard: int, n_batches: int,
-                          remote_frac: float = 0.01, merge_every: int = 8,
-                          refresh_every: int = 1, read_frac: float = 0.25,
-                          seed: int = 0, mix: bool = True,
-                          ) -> tuple[TPCCState, "EscrowCounter", MixStats]:
-    """The escrow regime on the fused executor: strict-stock New-Order (plus
-    the rest of the mix when ``mix=True``) with the escrow shares riding the
-    donated scan carry, one strict drain per chunk, and the share refresh
-    fused into every ``refresh_every``-th drain. Streams, drain points, and
-    refresh points are identical to the per-batch dispatch driver
-    (run_escrow_loop(fused=False)) — bit-exact final state/escrow/counters.
-    """
-    from .engine import generate_mix_batches, generate_neworder_stream
-    import numpy as np
-
-    if mix:
-        no_b, pay_b, os_b, sl_b = generate_mix_batches(
-            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-            remote_frac=remote_frac, read_frac=read_frac, seed=seed)
-    else:
-        no_b = generate_neworder_stream(
-            engine, batch_per_shard=batch_per_shard, n_batches=n_batches,
-            remote_frac=remote_frac, rng=np.random.default_rng(seed))
-        pay_b = os_b = sl_b = None
-    chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
-    ex = get_fused_executor(engine, ring_rows=merge_every, deliveries=mix)
-    state, esc, counters, wall, refreshes = ex.run_escrow(
-        state, esc, chunks, refresh_every=refresh_every)
-    return state, esc, counters_to_stats(counters,
-                                         anti_entropy_rounds=len(chunks),
-                                         wall_seconds=wall,
-                                         refreshes=refreshes)
+def __getattr__(name):
+    if name in _DRIVER_EXPORTS:
+        from . import drivers
+        return getattr(drivers, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

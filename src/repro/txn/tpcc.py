@@ -184,13 +184,24 @@ class StockLevelBatch(NamedTuple):
 def generate_neworder(rng: np.random.Generator, scale: TPCCScale, batch: int,
                       remote_frac: float = 0.01,
                       w_lo: int = 0, w_hi: int | None = None,
-                      ts0: int = 0) -> NewOrderBatch:
-    """Random New-Order inputs for home warehouses in [w_lo, w_hi)."""
+                      ts0: int = 0, item_skew: float = 0.0) -> NewOrderBatch:
+    """Random New-Order inputs for home warehouses in [w_lo, w_hi).
+
+    ``item_skew`` > 0 draws item ids from the Zipfian access profile
+    (item_popularity: id == popularity rank) instead of uniformly — the
+    contended-workload knob the sparse hot-set escrow layout is built for.
+    ``item_skew=0`` (default) keeps the seed's exact uniform stream.
+    """
     w_hi = scale.n_warehouses if w_hi is None else w_hi
     L = scale.max_lines
     w = rng.integers(w_lo, w_hi, batch).astype(np.int32)
     n_lines = rng.integers(5, L + 1, batch).astype(np.int32)
-    i_id = rng.integers(0, scale.n_items, (batch, L)).astype(np.int32)
+    if item_skew > 0:
+        cdf = np.cumsum(item_popularity(scale.n_items, item_skew))
+        i_id = np.searchsorted(cdf, rng.random((batch, L))).astype(np.int32)
+        i_id = np.minimum(i_id, scale.n_items - 1)
+    else:
+        i_id = rng.integers(0, scale.n_items, (batch, L)).astype(np.int32)
     remote = rng.random((batch, L)) < remote_frac
     other = rng.integers(0, scale.n_warehouses, (batch, L)).astype(np.int32)
     supply = np.where(remote, other, w[:, None]).astype(np.int32)
@@ -525,6 +536,24 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
     spent, committed = jax.lax.scan(
         _admit, spent,
         (batch.supply_w, batch.i_id, batch.qty, line_valid))
+    state, delta, total = _neworder_committed_effects(
+        state, batch, scale, committed, line_valid, ramp_ts, w_lo, w_hi)
+    return state, spent, delta, total, committed
+
+
+def _neworder_committed_effects(state: TPCCState, batch: NewOrderBatch,
+                                scale: TPCCScale, committed: Array,
+                                line_valid: Array, ramp_ts: Array,
+                                w_lo: int, w_hi: int
+                                ) -> tuple[TPCCState, StockDelta, Array]:
+    """Committed-only strict-stock New-Order effects, shared by the dense and
+    sparse escrow admission paths (one definition keeps the two layouts'
+    committed semantics bit-identical): dense o_ids over committed txns,
+    dropped scatters for aborts, restock-free stock decrements, remote lines
+    emitted as the outbox."""
+    B, L = batch.i_id.shape
+    D, OC = scale.districts, scale.order_capacity
+    wl = batch.w - w_lo
     line_ok = line_valid & committed[:, None]                      # [B, L]
 
     # ---- sequential ID assignment over COMMITTED txns only -----------------
@@ -594,7 +623,195 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
     tax = state.w_tax[wl] + state.d_tax[wl, batch.d]
     total = amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
     total = jnp.where(committed, total, 0.0)
-    return state, spent, delta, total, committed
+    return state, delta, total
+
+
+# ---------------------------------------------------------------------------
+# Sparse hot-set escrow (two-tier layout): escrow only the contended cells,
+# owner-route the cold tail. The access profile is Zipfian over item ids
+# (id == popularity rank), so the hot set is analytic: the top ``hot_items``
+# ids of every warehouse. See core/lattice.py HotSetEscrow.
+# ---------------------------------------------------------------------------
+
+
+def item_popularity(n_items: int, theta: float) -> np.ndarray:
+    """Zipfian access profile over the item catalog: item id == popularity
+    rank, p(i) ∝ 1 / (i + 1)**theta. ``theta=0`` is uniform."""
+    p = 1.0 / np.power(np.arange(1, n_items + 1, dtype=np.float64), theta)
+    return p / p.sum()
+
+
+def default_hot_items(scale: TPCCScale) -> int:
+    """Default hot-set width: the top 1% of the item catalog (>= 1). At spec
+    scale (100k items) that is 1000 items x every warehouse — the cells that
+    soak up the bulk of a Zipfian stream while cutting the escrow residency
+    by ~67x (see escrow_layout_bytes)."""
+    return max(1, scale.n_items // 100)
+
+
+def select_hot_cells(scale: TPCCScale, hot_items: int) -> np.ndarray:
+    """The top-K contended (warehouse, item) cells as sorted int32 keys
+    ``w * n_items + i``. Item popularity is Zipfian by id and uniform over
+    warehouses, so the top cells are exactly the ``hot_items`` most popular
+    item ids crossed with every warehouse; key order (w-major, ascending
+    item) is already sorted."""
+    hot_items = min(max(1, hot_items), scale.n_items)
+    w = np.arange(scale.n_warehouses, dtype=np.int64)[:, None]
+    i = np.arange(hot_items, dtype=np.int64)[None, :]
+    keys = (w * scale.n_items + i).reshape(-1)
+    assert keys[-1] <= np.iinfo(np.int32).max, "cell key overflows int32"
+    return keys.astype(np.int32)
+
+
+def escrow_layout_bytes(scale: TPCCScale, hot_items: int) -> dict:
+    """Per-device escrow residency of the two layouts (int32 everywhere).
+
+    dense  — the replica's ``[1, W, I]`` slice of shares + spent;
+    sparse — the replicated ``[K]`` key table + the replica's ``[1, K]``
+             slice of shares + spent, K = W * hot_items.
+    """
+    dense = 2 * scale.n_warehouses * scale.n_items * 4
+    K = scale.n_warehouses * min(max(1, hot_items), scale.n_items)
+    sparse = 3 * K * 4
+    return {"dense_bytes_per_device": dense,
+            "sparse_bytes_per_device": sparse,
+            "hot_cells": K,
+            "reduction_vs_dense": dense / sparse}
+
+
+def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
+                                 hot_shares: Array, hot_spent: Array,
+                                 batch: NewOrderBatch, scale: TPCCScale,
+                                 w_lo: int = 0, w_hi: int | None = None,
+                                 replica: Array | int = 0,
+                                 num_replicas: int = 1
+                                 ) -> tuple[TPCCState, Array, StockDelta,
+                                            Array, Array]:
+    """Strict-stock New-Order over the TWO-TIER escrow layout.
+
+    Admission splits per line by hot-set membership (one ``searchsorted``
+    against the sorted ``hot_keys`` table):
+
+      * HOT cell — ``try_spend`` against this replica's ``[K]`` share slot
+        (``hot_shares``/``hot_spent``), exactly the dense regime's rule but
+        indexed through the hot table;
+      * COLD cell, locally owned — strict check-and-reserve against this
+        shard's own ``s_quantity`` (the shard IS the cell's owner, and the
+        admission scan serializes it, so no shares are needed);
+      * COLD cell, remote — admitted optimistically and routed to the
+        owning shard through the outbox; the owner serializes all spends on
+        its cold cells and applies the entry strictly at drain time
+        (apply_stock_updates_strict_tiered), REJECTING it if the cell lacks
+        stock. The floor invariant therefore never breaks, at the price of
+        best-effort fulfillment for the (rare: remote x cold) tail — the
+        reject count is surfaced as MixStats.cold_rejects.
+
+    Everything is replica-local: zero collectives. Returns
+    (state, hot_spent', remote outbox, totals, committed mask [B]).
+    """
+    w_hi = scale.n_warehouses if w_hi is None else w_hi
+    ramp_ts = batch.ts * num_replicas + replica                    # [B]
+    B, L = batch.i_id.shape
+    I = scale.n_items
+    K = hot_keys.shape[0]
+
+    line_idx = jnp.arange(L)[None, :]
+    line_valid = line_idx < batch.n_lines[:, None]                 # [B, L]
+
+    # hot-table lookup, vectorized over the whole batch
+    cell_key = batch.supply_w * I + batch.i_id                     # [B, L]
+    pos = jnp.clip(jnp.searchsorted(hot_keys, cell_key), 0, K - 1
+                   ).astype(jnp.int32)
+    is_hot = hot_keys[pos] == cell_key                             # [B, L]
+    is_local = (batch.supply_w >= w_lo) & (batch.supply_w < w_hi)  # [B, L]
+    wl_line = jnp.where(is_local, batch.supply_w - w_lo, 0)        # [B, L]
+
+    # ONE availability vector unifies the three admission domains so the
+    # FCFS scan costs a single gather + a single scatter per step (the dense
+    # layout pays two gathers + one scatter):
+    #   [0, K)            hot-cell headroom  (shares - spent, this replica)
+    #   [K, K + Wl*I)     cold LOCAL stock   (the shard's own s_quantity at
+    #                     call entry; the scan's reservations ARE the
+    #                     owner's serialization of its cold cells)
+    #   [K + Wl*I]        sentinel for cold REMOTE lines — effectively
+    #                     infinite: they are admitted optimistically and
+    #                     settled strictly at their owner during the drain
+    Wl = state.s_quantity.shape[0]
+    BIG = jnp.asarray(jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    avail0 = jnp.concatenate([
+        hot_shares - hot_spent,
+        state.s_quantity.reshape(-1),
+        BIG[None]])
+    slot = jnp.where(is_hot, pos,
+                     jnp.where(is_local, K + wl_line * I + batch.i_id,
+                               K + Wl * I)).astype(jnp.int32)      # [B, L]
+
+    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+
+    def _admit(avail, xs):
+        slot_l, q_l, lv = xs                                       # [L] each
+        # demand already placed on the same cell by EARLIER lines of this
+        # same transaction (duplicate items in one order); slots identify
+        # cells (hot < K <= cold local < sentinel; remote-cold collisions on
+        # the sentinel only over-count against BIG, which cannot matter)
+        same = slot_l[None, :] == slot_l[:, None]
+        prior = jnp.where(same & dup_lower & lv[None, :],
+                          q_l[None, :], 0).sum(axis=1)
+        have = avail[slot_l]
+        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
+        avail = avail.at[slot_l].add(jnp.where(lv & ok, -q_l, 0))
+        return avail, ok
+
+    avail, committed = jax.lax.scan(
+        _admit, avail0, (slot, batch.qty, line_valid))
+    hot_spent = hot_shares - avail[:K]
+
+    state, delta, total = _neworder_committed_effects(
+        state, batch, scale, committed, line_valid, ramp_ts, w_lo, w_hi)
+    return state, hot_spent, delta, total, committed
+
+
+def apply_stock_updates_strict_tiered(state: TPCCState, hot_keys: Array,
+                                      dst_w: Array, i_idx: Array, qty: Array,
+                                      mask: Array, remote: Array,
+                                      n_items: int, w_lo: int = 0
+                                      ) -> tuple[TPCCState, Array]:
+    """Owner-side strict apply of drained outbox entries, split by tier.
+
+    HOT entries were admitted against escrow shares upstream, so they apply
+    unconditionally (the shares guarantee capacity). COLD entries were
+    admitted optimistically by remote senders; the owner — the only writer
+    of its cold cells — enforces the floor here with per-cell ALL-OR-NOTHING
+    admission over the drain window: a cell's queued entries land iff their
+    total fits its stock, else the whole cell's window is rejected.
+
+    All-or-nothing (instead of FCFS within the window) is intentionally
+    conservative: admission depends only on the per-cell TOTAL, which is
+    invariant to entry order — exactly what keeps the fused ring drain and
+    the dispatch driver's concatenated-outbox drain bit-identical (the
+    windows contain the same entries in different orders).
+
+    ``dst_w`` is the GLOBAL destination warehouse (the hot-key space);
+    ``w_lo`` rebases it onto this owner's local state rows. Returns
+    (state, rejected-entry count).
+    """
+    key = dst_w * n_items + i_idx                     # global cell key
+    pos = jnp.clip(jnp.searchsorted(hot_keys, key), 0,
+                   hot_keys.shape[0] - 1)
+    is_hot = hot_keys[pos] == key
+    w_idx = jnp.where(mask, dst_w - w_lo, 0)
+    i_idx = jnp.where(mask, i_idx, 0)
+    cold = mask & ~is_hot
+    demand = jnp.zeros_like(state.s_quantity).at[
+        jnp.where(cold, w_idx, 0), jnp.where(cold, i_idx, 0)].add(
+        jnp.where(cold, qty, 0))
+    fits = demand <= state.s_quantity
+    admit_cold = cold & fits[w_idx, i_idx]
+    rejects = (cold & ~admit_cold).sum().astype(jnp.int32)
+    state = apply_stock_updates(state, w_idx, i_idx, qty,
+                                (mask & is_hot) | admit_cold, remote,
+                                restock=False)
+    return state, rejects
 
 
 # ---------------------------------------------------------------------------

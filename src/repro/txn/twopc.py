@@ -217,7 +217,8 @@ def _conflict_rounds(batch, districts: int) -> int:
 def run_closed_loop_2pc(engine: TwoPCEngine, state: TPCCState, *,
                         batch_per_shard: int, n_batches: int,
                         remote_frac: float = 0.01, seed: int = 0,
-                        commit_latency_s: float = 0.0):
+                        commit_latency_s: float = 0.0,
+                        item_skew: float = 0.0):
     """Drive the coordinated baseline. Per batch it charges
     ``commit_latency_s`` x (conflicting rounds on the hottest district) —
     the serialization the coordination-avoiding engine's batched
@@ -236,7 +237,8 @@ def run_closed_loop_2pc(engine: TwoPCEngine, state: TPCCState, *,
             parts.append(tpcc.generate_neworder(
                 rng, engine.scale, batch_per_shard, remote_frac=remote_frac,
                 w_lo=s * engine.w_per_shard,
-                w_hi=(s + 1) * engine.w_per_shard, ts0=ts0))
+                w_hi=(s + 1) * engine.w_per_shard, ts0=ts0,
+                item_skew=item_skew))
             ts0 += batch_per_shard
         batches.append(jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
 

@@ -69,8 +69,16 @@ def test_dryrun_tpcc_zero_collective_hot_path():
         # spec scale, and the concrete tier-1 escrow run passes the
         # consistency audit (strict stock + escrow conservation)
         assert cells[0]["escrow_neworder"]["collectives"]["counts"] == {}
+        # ... the FUSED escrow megastep (sparse hot-set carry in the donated
+        # scan) is collective-free between refreshes at spec scale too
+        assert cells[0]["escrow_megastep"]["collectives"]["counts"] == {}
+        # the two-tier layout's memory claim at spec cardinalities: >= 50x
+        # less escrow residency per device than the dense [R, W, I] shares
+        assert cells[0]["escrow_layout"]["layout"] == "sparse"
+        assert cells[0]["escrow_layout"]["reduction_vs_dense"] >= 50
         assert cells[0]["escrow_audit"]["audit_ok"]
         assert cells[0]["escrow_audit"]["committed"] > 0
+        assert cells[0]["escrow_audit"]["escrow_layout"] == "sparse"
 
 
 @pytest.mark.slow

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.lattice import EscrowCounter, check_lattice_laws
+from repro.core.lattice import (EscrowCounter, HotSetEscrow,
+                                check_lattice_laws)
 
 R, BUDGET, FLOOR = 4, 100.0, 20.0
 
@@ -97,3 +98,61 @@ def test_lattice_laws_on_samples():
     b, _ = base.try_spend(2, 9.0)
     c, _ = a.try_spend(3, 2.5)
     check_lattice_laws(EscrowCounter.join, [base, a, b, c])
+
+
+def test_join_of_diverged_refresh_is_conservative():
+    """The min(shares) headroom loss, pinned as INTENTIONAL (see
+    EscrowCounter.join): when one side refreshed (fresh, larger shares) and
+    the other did not, the join keeps the smaller allocation — merged
+    headroom UNDER-states the truth (capacity lost until the next refresh),
+    but per-slot admission capacity never exceeds either input's, which is
+    the safety direction the §8 argument needs (a max-join would let the
+    same re-granted headroom be spent twice)."""
+    base = _make()
+    a, ok = base.try_spend(0, float(base.shares[0]))   # replica 0 exhausted
+    assert bool(ok)
+    refreshed = a.refresh()        # rebalanced: replica 0 re-granted
+    m = EscrowCounter.join(refreshed, a)
+
+    # conservative: per-slot headroom of the join never exceeds either side
+    for side in (refreshed, a):
+        assert np.all(np.asarray(m.shares - m.spent)
+                      <= np.asarray(side.shares - side.spent) + 1e-6)
+    # the loss is real (strictly less headroom than the refreshed side saw):
+    # the diverged stale view pins replica 0 back to its pre-refresh share
+    assert float(m.remaining()) < float(refreshed.remaining())
+    # and safety holds: total spendable capacity still respects the floor
+    worst_spend = float(np.maximum(
+        0.0, np.asarray(m.shares - m.spent)).sum()
+        + np.asarray(m.spent).sum())
+    assert BUDGET - worst_spend >= FLOOR - 1e-5
+
+
+# -- sparse hot-set variant (core/lattice.py HotSetEscrow) -------------------
+
+
+def test_hot_set_escrow_lattice_laws_and_lookup():
+    """Same-epoch HotSetEscrow joins satisfy the lattice laws; the sorted
+    key table resolves hot membership; cold keys cannot spend."""
+    keys = np.asarray([3, 7, 11, 42], np.int32)
+    budgets = np.asarray([10, 20, 30, 40], np.int32)
+    base = HotSetEscrow.make(3, keys, budgets)
+    assert np.array_equal(np.asarray(base.shares.sum(0)), budgets)
+    a, ok = base.try_spend(0, 7, 5)
+    assert bool(ok)
+    b, ok = base.try_spend(2, 42, 13)
+    assert bool(ok)
+    c, ok = a.try_spend(1, 11, 10)
+    assert bool(ok)
+    check_lattice_laws(HotSetEscrow.join, [base, a, b, c])
+    # overspend of one replica's slot rejected, state unchanged
+    d, ok = base.try_spend(0, 3, 99)
+    assert not bool(ok)
+    assert np.array_equal(np.asarray(d.spent), np.asarray(base.spent))
+    # cold key: rejected (the owner route handles it, not the table)
+    _, ok = base.try_spend(0, 5, 1)
+    assert not bool(ok)
+    # refresh re-partitions new budgets exactly
+    r = a.refresh(jnp.asarray([9, 9, 9, 9], jnp.int32))
+    assert int(np.asarray(r.spent).sum()) == 0
+    assert np.array_equal(np.asarray(r.shares.sum(0)), [9, 9, 9, 9])

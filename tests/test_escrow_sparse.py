@@ -1,0 +1,377 @@
+"""Sparse hot-set escrow (two-tier layout) property tests.
+
+Lattice/protocol level: a host-side model of the two-tier protocol —
+per-replica ``try_spend`` against hot-set shares, owner-serialized cold
+applies (local immediate, remote via owner inboxes with per-cell
+all-or-nothing drain admission), amortized refreshes, and hot-set
+PROMOTION/DEMOTION at refresh boundaries — must, for ARBITRARY
+interleavings, never drive any cell's stock below zero and never apply more
+total spend than the initial inventory, with promotion/demotion preserving
+total stock conservation exactly. A control that applies remote cold
+entries unconditionally (no owner admission) provably oversells.
+
+Engine level: the plan-selected escrow regime on the sparse layout —
+Zipf-skewed adversarial streams audit clean (incl. the hot-cover
+conservation law), ``hot_items = catalog`` makes sparse bit-identical to
+the dense layout on the same stream, the dense layout stays supported, the
+adaptive abort-rate refresh trigger fires (and stays quiet when inventory
+is plentiful), and the spec-scale residency cut meets the >= 50x target.
+
+The simulation core is shared between a deterministic seeded sweep (always
+runs) and a hypothesis-driven search (runs where hypothesis is installed).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: deterministic sweep only
+    HAVE_HYPOTHESIS = False
+
+from repro.txn.audit import assert_audit
+from repro.txn.drivers import run_escrow_loop
+from repro.txn.engine import single_host_engine
+from repro.txn.tpcc import (TPCCScale, default_hot_items,
+                            escrow_layout_bytes, init_state)
+
+R, W, I = 2, 4, 4        # replicas x warehouses x items (protocol model)
+W_PER = W // R           # owner(w) = w // W_PER
+
+
+def _owner(w: int) -> int:
+    return w // W_PER
+
+
+def _partition(budgets: np.ndarray) -> np.ndarray:
+    """shares [R, K] with shares.sum(0) == budgets exactly."""
+    r = np.arange(R)[:, None]
+    return (budgets[None, :] // R
+            + (r < budgets[None, :] % R)).astype(np.int64)
+
+
+class _TwoTierModel:
+    """Host-side replay of the two-tier escrow protocol."""
+
+    def __init__(self, seed: int, strict_cold_drain: bool = True):
+        rng = np.random.default_rng(seed)
+        self.stock = rng.integers(0, 60, (W, I)).astype(np.int64)
+        self.q0 = self.stock.copy()
+        self.applied = np.zeros((W, I), np.int64)
+        self.rejected = 0
+        self.strict_cold_drain = strict_cold_drain
+        # initial hot set: a few random cells
+        n_hot = int(rng.integers(1, 6))
+        cells = rng.choice(W * I, size=n_hot, replace=False)
+        self.hot = sorted(int(c) for c in cells)
+        self.inbox = [[] for _ in range(R)]
+        self._grant_shares()
+
+    def _grant_shares(self):
+        budgets = np.array([self.stock.reshape(-1)[k] for k in self.hot],
+                           np.int64)
+        self.shares = _partition(budgets)
+        self.spent = np.zeros_like(self.shares)
+
+    def _apply(self, w, i, amt):
+        self.stock[w, i] -= amt
+        self.applied[w, i] += amt
+        assert self.stock[w, i] >= 0, "oversold: stock went negative"
+
+    # -- ops -----------------------------------------------------------------
+
+    def hot_spend(self, r, k_idx, amt):
+        """try_spend against replica r's own share slot of hot cell k_idx."""
+        if not self.hot:
+            return
+        k_idx %= len(self.hot)
+        if self.spent[r, k_idx] + amt > self.shares[r, k_idx]:
+            return  # local atomic abort, no effects
+        self.spent[r, k_idx] += amt
+        cell = self.hot[k_idx]
+        w, i = divmod(cell, I)
+        if _owner(w) == r:
+            self._apply(w, i, amt)          # local: applied immediately
+        else:
+            self.inbox[_owner(w)].append(("hot", cell, amt))
+
+    def cold_spend(self, r, cell, amt):
+        """Cold-tier decrement: owner-local strict check, or optimistic
+        routing to the owner's inbox."""
+        if cell in self.hot:
+            return  # generator aimed at a hot cell; not a cold op
+        w, i = divmod(cell, I)
+        if _owner(w) == r:
+            if self.stock[w, i] - amt >= 0:
+                self._apply(w, i, amt)
+            else:
+                self.rejected += 1          # local atomic abort
+        else:
+            self.inbox[_owner(w)].append(("cold", cell, amt))
+
+    def drain(self, o):
+        """Owner o applies its queued window: hot entries unconditionally
+        (share-admitted upstream), cold entries per-cell all-or-nothing."""
+        window, self.inbox[o] = self.inbox[o], []
+        cold_demand: dict[int, int] = {}
+        for kind, cell, amt in window:
+            if kind == "hot":
+                w, i = divmod(cell, I)
+                self._apply(w, i, amt)      # must never go negative
+            else:
+                cold_demand[cell] = cold_demand.get(cell, 0) + amt
+        if not self.strict_cold_drain:
+            for kind, cell, amt in window:  # the overselling control
+                if kind == "cold":
+                    w, i = divmod(cell, I)
+                    self.stock[w, i] -= amt
+                    self.applied[w, i] += amt
+            return
+        admitted = {c: d <= self.stock[c // I, c % I]
+                    for c, d in cold_demand.items()}
+        for kind, cell, amt in window:
+            if kind != "cold":
+                continue
+            w, i = divmod(cell, I)
+            if admitted[cell]:
+                self._apply(w, i, amt)
+            else:
+                self.rejected += 1
+
+    def refresh(self, promote=None, demote=None):
+        """The global sync: drain every inbox, optionally promote/demote a
+        cell, re-partition the hot cells' current stock into fresh shares."""
+        for o in range(R):
+            self.drain(o)
+        total_before = int(self.stock.sum())
+        if demote is not None and len(self.hot) > 1:
+            self.hot.pop(demote % len(self.hot))
+        if promote is not None:
+            cell = promote % (W * I)
+            if cell not in self.hot:
+                self.hot = sorted(self.hot + [cell])
+        self._grant_shares()
+        # promotion/demotion is a pure re-indexing of escrow VIEWS — the
+        # authoritative stock is untouched, and the fresh shares partition
+        # the hot cells' stock exactly
+        assert int(self.stock.sum()) == total_before
+        budgets = np.array([self.stock.reshape(-1)[k] for k in self.hot],
+                           np.int64)
+        assert np.array_equal(self.shares.sum(0), budgets)
+
+    def finish(self):
+        self.refresh()
+        assert np.all(self.applied <= self.q0), \
+            "total applied spend exceeds the initial inventory"
+        assert np.array_equal(self.stock, self.q0 - self.applied), \
+            "conservation broken: stock != q0 - applied"
+        assert np.all(self.stock >= 0)
+
+
+def _run_ops(model: _TwoTierModel, ops: list) -> None:
+    for op in ops:
+        kind = op[0]
+        if kind == "hot":
+            model.hot_spend(op[1], op[2], op[3])
+        elif kind == "cold":
+            model.cold_spend(op[1], op[2] % (W * I), op[3])
+        elif kind == "drain":
+            model.drain(op[1])
+        elif kind == "promote":
+            model.refresh(promote=op[1])
+        elif kind == "demote":
+            model.refresh(demote=op[1])
+        else:
+            model.refresh()
+    model.finish()
+
+
+def _random_ops(rng: np.random.Generator, n: int) -> list:
+    ops = []
+    for _ in range(n):
+        k = rng.random()
+        if k < 0.35:
+            ops.append(("hot", int(rng.integers(R)), int(rng.integers(16)),
+                        int(rng.integers(1, 41))))
+        elif k < 0.7:
+            ops.append(("cold", int(rng.integers(R)),
+                        int(rng.integers(W * I)), int(rng.integers(1, 41))))
+        elif k < 0.82:
+            ops.append(("drain", int(rng.integers(R))))
+        elif k < 0.88:
+            ops.append(("promote", int(rng.integers(W * I))))
+        elif k < 0.94:
+            ops.append(("demote", int(rng.integers(8))))
+        else:
+            ops.append(("refresh",))
+    return ops
+
+
+def test_two_tier_interleavings_never_oversell_seeded():
+    """Deterministic sweep: 80 seeded random schedules over hot try_spends,
+    cold local/remote applies, owner drains, refreshes, and hot-set
+    promotion/demotion — stock never negative, spend never exceeds
+    inventory, conservation exact."""
+    for seed in range(80):
+        rng = np.random.default_rng(2000 + seed)
+        _run_ops(_TwoTierModel(seed), _random_ops(rng,
+                                                  int(rng.integers(5, 81))))
+
+
+def test_unconditional_cold_drain_does_oversell():
+    """The control: if owners applied remote cold entries WITHOUT the
+    per-cell admission, concurrent remote demand would drive stock negative
+    — the all-or-nothing owner admission is load-bearing."""
+    m = _TwoTierModel(0, strict_cold_drain=False)
+    m.hot = []          # everything cold
+    m._grant_shares()
+    m.stock[:] = 10
+    # both replicas flood warehouse 0 (owner 0) from replica 1's side
+    for _ in range(4):
+        m.inbox[0].append(("cold", 0, 8))
+    m.stock[0, 0] = 10
+    m.drain(0)
+    assert m.stock[0, 0] < 0   # oversold without owner admission
+    # and the strict model on the same schedule rejects instead
+    m2 = _TwoTierModel(0)
+    m2.hot = []
+    m2._grant_shares()
+    m2.stock[:] = 10
+    for _ in range(4):
+        m2.inbox[0].append(("cold", 0, 8))
+    m2.drain(0)
+    assert m2.stock[0, 0] == 10 and m2.rejected == 4
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("hot"), st.integers(0, R - 1),
+                      st.integers(0, 15), st.integers(1, 40)),
+            st.tuples(st.just("cold"), st.integers(0, R - 1),
+                      st.integers(0, W * I - 1), st.integers(1, 40)),
+            st.tuples(st.just("drain"), st.integers(0, R - 1)),
+            st.tuples(st.just("promote"), st.integers(0, W * I - 1)),
+            st.tuples(st.just("demote"), st.integers(0, 7)),
+            st.tuples(st.just("refresh"))),
+        min_size=5, max_size=80)
+
+    @settings(max_examples=80, deadline=None)
+    @given(seed=st.integers(0, 10_000), ops=_ops)
+    def test_two_tier_interleavings_never_oversell(seed, ops):
+        """Hypothesis search over hot/cold/drain/refresh/promote/demote
+        interleavings."""
+        _run_ops(_TwoTierModel(seed), list(ops))
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+
+SCALE = TPCCScale(n_warehouses=2, districts=2, customers=8, n_items=32,
+                  order_capacity=256, max_lines=15)
+
+
+def _tree_equal(a, b):
+    eq = jax.tree.map(lambda x, y: bool((x == y).all()), a, b)
+    return [f for f, ok in zip(a._fields, eq) if not ok]
+
+
+def test_sparse_skewed_stream_audits_clean():
+    """Zipf-skewed adversarial demand through the sparse layout: strict
+    stock holds, the hot-cover conservation law and the cold-tail laws all
+    pass, and the hot tier actually absorbs work (aborts observed)."""
+    eng = single_host_engine(SCALE, stock_invariant="strict", hot_items=4)
+    state = eng.shard_state(init_state(SCALE))
+    q0 = state.s_quantity.copy()
+    state, esc, stats = run_escrow_loop(
+        eng, state, batch_per_shard=8, n_batches=6, remote_frac=0.3,
+        merge_every=2, refresh_every=2, seed=3, mix=True, fused=True,
+        item_skew=1.2)
+    assert stats.neworders + stats.aborts == 8 * 6
+    assert stats.aborts > 0
+    assert int(jax.device_get(state.s_quantity).min()) >= 0
+    rep = assert_audit(state, escrow=esc, initial_stock=q0,
+                       strict_stock=True)
+    assert "escrow_covers_hot_stock" in rep.checks
+    assert "hot_keys_sorted_unique" in rep.checks
+
+
+def test_sparse_with_full_hot_set_is_bitexact_with_dense():
+    """``hot_items = n_items`` makes the hot set the whole keyspace — the
+    two-tier layout degenerates to exactly the dense counter's admission
+    rule, and the final STATE must be bit-identical to the dense layout on
+    the identical stream (the anchor tying the two implementations)."""
+    kw = dict(batch_per_shard=8, n_batches=6, remote_frac=0.2,
+              merge_every=2, refresh_every=2, seed=5, mix=False, fused=True)
+    sparse = single_host_engine(SCALE, stock_invariant="strict",
+                                escrow_layout="sparse",
+                                hot_items=SCALE.n_items)
+    dense = single_host_engine(SCALE, stock_invariant="strict",
+                               escrow_layout="dense")
+    s1 = sparse.shard_state(init_state(SCALE))
+    s1, esc1, m1 = run_escrow_loop(sparse, s1, **kw)
+    s2 = dense.shard_state(init_state(SCALE))
+    s2, esc2, m2 = run_escrow_loop(dense, s2, **kw)
+    assert _tree_equal(s1, s2) == []
+    assert (m1.neworders, m1.aborts) == (m2.neworders, m2.aborts)
+    assert m1.cold_rejects == 0          # no cold tier exists
+    # the sparse spent table IS the dense spent table, re-indexed
+    assert np.array_equal(
+        np.asarray(jax.device_get(esc1.spent)).reshape(-1),
+        np.asarray(jax.device_get(esc2.spent)).reshape(-1))
+
+
+def test_dense_layout_still_supported():
+    """escrow_layout='dense' keeps the PR-3 behavior (benchmark baseline):
+    end-to-end run + dense conservation law."""
+    eng = single_host_engine(SCALE, stock_invariant="strict",
+                             escrow_layout="dense")
+    state = eng.shard_state(init_state(SCALE))
+    q0 = state.s_quantity.copy()
+    state, esc, stats = run_escrow_loop(
+        eng, state, batch_per_shard=8, n_batches=4, merge_every=2,
+        refresh_every=1, seed=0, mix=False, fused=True)
+    rep = assert_audit(state, escrow=esc, initial_stock=q0,
+                       strict_stock=True)
+    assert "escrow_covers_stock" in rep.checks
+
+
+def test_adaptive_refresh_triggers_on_abort_rate():
+    """The abort-rate trigger: under starvation pressure it refreshes
+    (without any fixed cadence), with plentiful inventory it stays quiet —
+    and fused/dispatch make identical adaptive decisions."""
+    eng = single_host_engine(SCALE, stock_invariant="strict", hot_items=4)
+    kw = dict(batch_per_shard=8, n_batches=6, remote_frac=0.0,
+              merge_every=2, refresh_abort_rate=0.05, seed=11, mix=False)
+    state = eng.shard_state(init_state(SCALE))
+    state, _, starved = run_escrow_loop(eng, state, fused=True, **kw)
+    assert starved.aborts > 0
+    assert starved.refreshes >= 1        # pressure crossed the threshold
+    s2 = eng.shard_state(init_state(SCALE))
+    s2, _, st2 = run_escrow_loop(eng, s2, fused=False, **kw)
+    assert st2.refreshes == starved.refreshes
+    assert _tree_equal(state, s2) == []
+
+    plush = eng.shard_state(init_state(SCALE))
+    plush = plush._replace(s_quantity=plush.s_quantity * 1000)
+    plush, _, quiet = run_escrow_loop(eng, plush, fused=True, **kw)
+    assert quiet.aborts == 0
+    assert quiet.refreshes == 0          # no pressure, no coordination
+
+
+def test_spec_scale_memory_cut():
+    """The ROADMAP claim, as arithmetic the dry-run re-asserts at spec
+    scale: the sparse layout cuts per-device escrow residency >= 50x."""
+    spec = TPCCScale.spec_scale(512)
+    mem = escrow_layout_bytes(spec, default_hot_items(spec))
+    assert mem["dense_bytes_per_device"] > 400e6      # the ~400 MB problem
+    assert mem["sparse_bytes_per_device"] < 10e6
+    assert mem["reduction_vs_dense"] >= 50
+    eng = single_host_engine(SCALE, stock_invariant="strict")
+    out = eng.escrow_bytes_per_device()
+    assert out["layout"] == "sparse"
+    assert out["bytes_per_device"] == out["sparse_bytes_per_device"]
