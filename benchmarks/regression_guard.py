@@ -11,7 +11,10 @@ benchmark read. Guarded rows:
     per-batch driver;
   * ``escrow_sparse_vs_dense`` (BENCH_escrow_sparse.json, field
     ``sparse_vs_dense``) — the hot-set layout's committed-throughput parity
-    with the dense escrow baseline on the hot-skewed stream.
+    with the dense escrow baseline on the hot-skewed stream;
+  * ``escrow_admission`` (BENCH_escrow_admit.json, field
+    ``kernel_vs_scan``) — the two-level gate+kernel admission's best-cell
+    speedup over the sequential-scan baseline at batch >= 256.
 
 The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
 the fresh measurement when the fresh value is higher, and leaves it alone

@@ -100,6 +100,29 @@ register_lattice("and", and_join, lambda shape=(), dtype=jnp.bool_: jnp.ones(sha
 register_lattice("sum", sum_join, lambda shape=(), dtype=jnp.float32: jnp.zeros(shape, dtype))
 
 
+def hot_position(hot_keys: Array, key: Array) -> tuple[Array, Array]:
+    """THE hot-table probe: ``(position, is_hot)`` of cell ``key`` in the
+    sorted ``hot_keys`` table (vectorized, O(log K) per query).
+
+    One definition shared by sparse escrow admission
+    (``tpcc.apply_neworder_escrow_sparse``), the owner-side strict drain
+    (``tpcc.apply_stock_updates_strict_tiered``, which the executor's ring
+    drain routes through), and :meth:`HotSetEscrow.lookup` — the probe's
+    clip-then-compare idiom must never drift between the admission side and
+    the drain side, or a cell could be hot at admission and cold at apply.
+
+    ``K == 0`` (an empty hot set: every cell cold) is a valid table and
+    returns ``is_hot == False`` everywhere instead of indexing out of range.
+    """
+    K = hot_keys.shape[0]
+    key = jnp.asarray(key)
+    if K == 0:
+        pos = jnp.zeros(key.shape, jnp.int32)
+        return pos, jnp.zeros(key.shape, jnp.bool_)
+    pos = jnp.clip(jnp.searchsorted(hot_keys, key), 0, K - 1).astype(jnp.int32)
+    return pos, hot_keys[pos] == key
+
+
 # ---------------------------------------------------------------------------
 # GCounter / PNCounter — per-replica slot counters (paper §5.2 ADTs)
 # ---------------------------------------------------------------------------
@@ -358,10 +381,9 @@ class HotSetEscrow(NamedTuple):
         return self.keys.shape[0]
 
     def lookup(self, key: Array) -> tuple[Array, Array]:
-        """(position, is_hot) for cell ``key`` (vectorized, O(log K))."""
-        pos = jnp.searchsorted(self.keys, key).astype(jnp.int32)
-        pos = jnp.clip(pos, 0, self.keys.shape[0] - 1)
-        return pos, self.keys[pos] == key
+        """(position, is_hot) for cell ``key`` — the shared
+        :func:`hot_position` probe over this table."""
+        return hot_position(self.keys, key)
 
     def try_spend(self, replica, key, amount) -> tuple["HotSetEscrow", Array]:
         """Local, coordination-free spend against this replica's share of a

@@ -4,4 +4,6 @@
 #   rwkv6_scan.py      — chunked data-dependent-decay WKV scan
 #   lattice_merge.py   — fused versioned-table join ⊔ + invariant audit
 #   ramp_read.py       — fused RAMP atomic-visibility read (txn/ramp.py)
+#   escrow_admit.py    — contention gate + VMEM-resident residual FCFS
+#                        escrow admission (txn/tpcc.py admit_fcfs)
 from . import ops, ref

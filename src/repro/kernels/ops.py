@@ -65,6 +65,56 @@ def lattice_merge(a_valid, a_ver, a_pay, b_valid, b_ver, b_pay,
                                 interpret=_interpret())
 
 
+def escrow_admit(avail0, slot, qty, line_valid):
+    """Two-level escrow admission: contention gate (Level 1, vectorized jnp)
+    + residual FCFS in the VMEM-resident Pallas kernel (Level 2). Bit-exact
+    with the sequential-scan semantics (ref.escrow_admit_ref, property-
+    tested in tests/test_escrow_admission.py).
+
+    avail0 [A] int32; slot/qty/line_valid [B, L].
+    Returns (committed [B] bool, avail [A] int32 after all reservations).
+
+    NOT jit-wrapped here: the caller (txn/tpcc.py admit_fcfs) always sits
+    inside a jitted megastep/engine step, and an inner jit would break
+    donation and shard_map tracing.
+
+    Backend dispatch for Level 2: on TPU the Pallas kernel runs natively
+    (avail in VMEM scratch); off-TPU the same algorithm runs as the jitted
+    ``residual_fcfs`` fori_loop — interpret-mode Pallas pays ~100x per
+    load/store, which would bury the gate's win, while the fallback keeps
+    the collapsed sequential depth AND stays bit-exact with the kernel
+    (whose interpret-mode path the kernel tests pin against the oracle).
+    """
+    from .escrow_admit import (contention_gate, escrow_admit_kernel,
+                               residual_fcfs, residual_order)
+
+    fast, demand, _ = contention_gate(avail0, slot, qty, line_valid)
+
+    def everyone_fast(_):
+        # no contended cell anywhere: every transaction commits, and the
+        # admitted demand IS the gate's per-cell total — one vector subtract
+        # replaces both the residual pass and the settle scatter
+        return jnp.ones_like(fast), avail0 - demand
+
+    def with_residue(_):
+        res_idx, n_res = residual_order(fast)
+        if _interpret():
+            committed, avail = residual_fcfs(avail0, slot, qty, line_valid,
+                                             fast, res_idx, n_res)
+        else:
+            committed, avail = escrow_admit_kernel(
+                avail0, slot, qty, line_valid, fast, res_idx, n_res)
+        # settle the fast path's reservations with ONE vectorized scatter
+        # (Level 2's avail carries residual reservations only); fast txns
+        # always commit (gate proof)
+        adm = line_valid & fast[:, None]
+        avail = avail.at[jnp.where(adm, slot, 0)].add(
+            -jnp.where(adm, qty, 0).astype(jnp.int32))
+        return committed, avail
+
+    return jax.lax.cond(fast.all(), everyone_fast, with_residue, None)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows",))
 def ramp_read_select(req_ts, nlines, ol_ts, ol_vis, ol_prep, amount, i_id,
                      block_rows: int = 256):

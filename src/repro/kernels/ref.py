@@ -72,6 +72,35 @@ def lattice_merge_ref(a_valid: Array, a_ver: Array, a_pay: Array,
     return valid, version, payload, violation
 
 
+def escrow_admit_ref(avail0: Array, slot: Array, qty: Array,
+                     line_valid: Array) -> tuple[Array, Array]:
+    """FCFS escrow admission oracle — the DEFINITIONAL sequential semantics
+    (txn/tpcc.py ``admit_fcfs(admission="scan")``): walk the batch in order;
+    a transaction commits iff every valid line's quantity, plus the demand
+    already placed on the same cell by its own earlier lines (duplicate
+    items in one order), fits the cell's remaining availability; commits
+    reserve, aborts leave no trace.
+
+    avail0: [A] int32; slot/qty/line_valid: [B, L].
+    Returns (committed [B] bool, avail [A] after all reservations).
+    """
+    L = slot.shape[1]
+    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+
+    def step(avail, xs):
+        slot_l, q_l, lv = xs
+        same = slot_l[None, :] == slot_l[:, None]
+        prior = jnp.where(same & dup_lower & lv[None, :],
+                          q_l[None, :], 0).sum(axis=1)
+        have = avail[slot_l]
+        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
+        avail = avail.at[slot_l].add(jnp.where(lv & ok, -q_l, 0))
+        return avail, ok
+
+    avail, committed = jax.lax.scan(step, avail0, (slot, qty, line_valid))
+    return committed, avail
+
+
 def ramp_read_ref(req_ts: Array, nlines: Array, ol_ts: Array, ol_vis: Array,
                   ol_prep: Array, amount: Array, i_id: Array):
     """Fused RAMP read oracle (txn/ramp.py read_lines + aggregation).

@@ -193,8 +193,15 @@ def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
         eng_escrow, ring_rows=chunk_len).lowered_megastep(
         chunk_len=chunk_len, batch_per_shard=batch_per_shard,
         read_per_shard=max(1, batch_per_shard // 4))
+    # two-level admission at spec scale: admission="kernel" forces the
+    # contention gate + residual FCFS pipeline into the escrow hot path
+    # (off-TPU the Level-2 lowering is the jitted fori_loop fallback; on TPU
+    # it is the Pallas kernel with avail in VMEM scratch)
+    eng_admit = Engine(scale, mesh, axes, stock_invariant="strict",
+                       admission="kernel")
+    admission = eng_admit.lowered_neworder_escrow(batch_per_shard)
     return (eng.lowered_neworder(batch_per_shard), reads, megastep, escrow,
-            escrow_megastep, eng_escrow)
+            escrow_megastep, eng_escrow, admission, eng_admit)
 
 
 _ESCROW_AUDIT_MEMO: dict = {}
@@ -318,7 +325,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
     if arch == "tpcc":
         try:
             (lowered, reads, megastep, escrow, escrow_megastep,
-             eng_escrow) = lower_tpcc(mesh)
+             eng_escrow, admission, eng_admit) = lower_tpcc(mesh)
             cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
             # the RAMP read transactions must compile collective-free at
             # spec scale — the structural atomic-visibility-without-
@@ -372,6 +379,24 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
                     f"sparse escrow layout cuts only "
                     f"{mem['reduction_vs_dense']:.1f}x vs dense "
                     f"(target >= 50x): {mem}")
+            # TWO-LEVEL ADMISSION at spec scale: the contention-gated
+            # escrow hot path (admission="kernel") must also compile
+            # collective-free, and the availability vector the Pallas FCFS
+            # kernel keeps resident in VMEM must fit a TPU core's ~16 MB
+            adm = analyze(admission, mesh, "tpcc-escrow-admission", ())
+            cell["escrow_admission"] = adm
+            if adm["collectives"]["counts"]:
+                raise AssertionError(
+                    f"gate+kernel escrow admission has collectives at spec "
+                    f"scale: {adm['collectives']['describe']}")
+            A = (eng_admit.hot_keys.shape[0]
+                 + eng_admit.w_per_shard * eng_admit.scale.n_items + 1)
+            adm["avail_cells"] = A
+            adm["avail_vmem_bytes"] = 4 * A
+            if 4 * A > 16 * 2 ** 20:
+                raise AssertionError(
+                    f"admission avail vector ({4 * A / 2**20:.1f} MB) "
+                    f"exceeds the ~16 MB VMEM budget")
             # concrete tier-1-scale escrow run + consistency audit
             cell["escrow_audit"] = tpcc_escrow_audit_cell()
             if not cell["escrow_audit"]["audit_ok"]:

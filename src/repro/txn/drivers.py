@@ -126,10 +126,63 @@ def counters_to_stats(counters, *, anti_entropy_rounds: int,
 
 def _concat_outboxes(pending: list[StockDelta]) -> StockDelta:
     """All queued outboxes as ONE StockDelta, applied in a single
-    anti-entropy call (vs the seed's one jitted call per outbox)."""
+    anti-entropy call (vs the seed's one jitted call per outbox).
+
+    No longer on any driver path — the dispatch loop accumulates into a
+    reused device-resident window buffer instead of re-concatenating a
+    host-side pending list every drain (see :class:`_OutboxWindow`) —
+    but kept importable (engine.py re-exports it) for external callers."""
     if len(pending) == 1:
         return pending[0]
     return jax.tree.map(lambda *xs: jnp.concatenate(xs), *pending)
+
+
+# the window buffer's three device ops, jitted once (module-level cache) and
+# donated so every drain window reuses ONE allocation instead of fresh
+# concatenate buffers per drain
+_window_put = jax.jit(
+    lambda buf, delta, i: jax.tree.map(
+        lambda b, v: jax.lax.dynamic_update_index_in_dim(b, v, i, 0),
+        buf, delta),
+    donate_argnums=0)
+_window_flat = jax.jit(
+    lambda buf: jax.tree.map(lambda x: x.reshape(-1), buf))
+_window_clear = jax.jit(
+    lambda buf: buf._replace(valid=jnp.zeros_like(buf.valid)),
+    donate_argnums=0)
+
+
+class _OutboxWindow:
+    """Fixed-size ``[rows, R]`` on-device outbox accumulator for the
+    dispatch drivers (the per-batch analog of the fused executor's
+    OutboxRing): per-batch deltas are written into successive rows of one
+    donated buffer, and each drain reads the SAME flattened shape —
+    replacing the old host-side pending list whose re-concatenation
+    allocated fresh buffers every window and compiled a second drain shape
+    for the ragged tail (tail rows simply stay ``valid=False``)."""
+
+    def __init__(self, delta: StockDelta, rows: int):
+        self.rows = rows
+        self._buf = jax.tree.map(
+            lambda x: jnp.zeros((rows,) + x.shape, x.dtype), delta)
+        self._n = 0
+
+    def put(self, delta: StockDelta) -> None:
+        self._buf = _window_put(self._buf, delta,
+                                jnp.asarray(self._n, jnp.int32))
+        self._n += 1
+
+    def flat(self) -> StockDelta:
+        """The window as one flattened StockDelta (row-major: identical
+        entry order to concatenating the per-batch deltas)."""
+        return _window_flat(self._buf)
+
+    def clear(self) -> None:
+        self._buf = _window_clear(self._buf)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
 
 
 def _tree_copy(t):
@@ -336,14 +389,22 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
         warm, _ = engine.delivery_step(warm)
     # escrow windows drain batched in EVERY mode (the sparse cold tier's
     # all-or-nothing admission is defined over the whole window); the merge
-    # regime keeps the seed's per-outbox drain under legacy
-    drain_shapes = {1} if (legacy and not escrow) else \
-        {min(merge_every, n_batches), n_batches % merge_every} - {0}
-    for k in drain_shapes:
+    # regime keeps the seed's per-outbox drain under legacy. Batched modes
+    # accumulate into ONE reused [rows, R] device window buffer, so every
+    # drain compiles to a single flattened shape (ragged tails ride along as
+    # valid=False rows instead of a second compile)
+    rows = min(merge_every, n_batches)
+    if legacy and not escrow:
+        warm = engine.anti_entropy(warm, outbox)
+    else:
+        wwin = _OutboxWindow(outbox, rows)
+        wwin.put(outbox)
         if escrow:
-            warm, _ = engine.drain_strict(warm, _concat_outboxes([outbox] * k))
+            warm, _ = engine.drain_strict(warm, wwin.flat())
         else:
-            warm = engine.anti_entropy(warm, _concat_outboxes([outbox] * k))
+            warm = engine.anti_entropy(warm, wwin.flat())
+        wwin.clear()
+        del wwin
     if escrow:
         wesc = engine.refresh_escrow(warm, wesc)
     jax.block_until_ready((warm, wesc, res))
@@ -362,7 +423,8 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
     commits_at_refresh = np.zeros(engine.n_shards, np.int64)
     txns_at_refresh = 0
     rounds = 0
-    pending: list[StockDelta] = []
+    pending: list[StockDelta] = []   # legacy merge mode only
+    window: _OutboxWindow | None = None
     t0 = time.perf_counter()
     for i in range(n_batches):
         if escrow:
@@ -376,7 +438,12 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
         else:
             state, outbox, _ = engine.neworder_step(state, no_b[i])
             stats.neworders += B
-        pending.append(outbox)
+        if legacy and not escrow:
+            pending.append(outbox)
+        else:
+            if window is None:
+                window = _OutboxWindow(outbox, rows)
+            window.put(outbox)
         if pay_b is not None:
             state = engine.payment_step(state, pay_b[i])
             stats.payments += B
@@ -402,23 +469,25 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
             state, delivered = engine.delivery_step(state)
             del_acc = (del_acc + int(delivered.sum())) if legacy \
                 else del_acc + delivered.sum()
-        if len(pending) == merge_every or i == n_batches - 1:
-            # one batched drain of all queued outboxes (Definition 3:
+        queued = len(pending) if (legacy and not escrow) else len(window)
+        if queued == merge_every or i == n_batches - 1:
+            # one batched drain of the whole window (Definition 3:
             # convergence may lag the hot path, but must happen); merge-
             # regime legacy mode keeps the seed's one jitted call per outbox
             if escrow:
-                state, rej = engine.drain_strict(state,
-                                                 _concat_outboxes(pending))
+                state, rej = engine.drain_strict(state, window.flat())
                 rej_acc = rej_acc + (int(rej.sum()) if legacy
                                      else rej.sum().astype(jnp.int32))
+                window.clear()
             elif legacy:
                 for ob in pending:
                     state = engine.anti_entropy(state, ob)
+                pending = []
             else:
-                state = engine.anti_entropy(state, _concat_outboxes(pending))
+                state = engine.anti_entropy(state, window.flat())
+                window.clear()
             stats.anti_entropy_rounds += 1
             rounds += 1
-            pending = []
             if escrow:
                 if adaptive:
                     # the one host read adaptive control costs, per window

@@ -79,6 +79,17 @@ class Engine:
       * "dense" — the PR-3 ``[R, W, I]`` EscrowCounter (every replica holds
         a share of every cell); kept as the comparison baseline for the
         ``escrow_sparse_vs_dense`` benchmark.
+
+    ``admission`` selects the escrow-admission strategy of
+    ``tpcc.admit_fcfs`` (both layouts, bit-identical results):
+
+      * "scan"   — the B-step sequential FCFS ``lax.scan`` baseline;
+      * "kernel" — the two-level pipeline: contention gate (per-cell total
+        demand vs headroom, order-free where it fits) + the Pallas FCFS
+        kernel over the residual transactions with the availability vector
+        resident in VMEM (kernels/escrow_admit.py);
+      * "auto" (default) — per-batch static choice: the gate+kernel
+        pipeline at batch >= tpcc.AUTO_KERNEL_MIN_BATCH, the scan below.
     """
 
     scale: TPCCScale
@@ -87,6 +98,7 @@ class Engine:
     stock_invariant: str = "restock"
     escrow_layout: str = "sparse"
     hot_items: int | None = None
+    admission: str = "auto"
 
     def __post_init__(self):
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
@@ -120,6 +132,9 @@ class Engine:
         if self.escrow_layout not in ("sparse", "dense"):
             raise ValueError(f"unknown escrow_layout {self.escrow_layout!r};"
                              f" choose 'sparse' or 'dense'")
+        if self.admission not in tpcc.ADMISSION_MODES:
+            raise ValueError(f"unknown admission {self.admission!r}; "
+                             f"choose from {tpcc.ADMISSION_MODES}")
         if self.hot_items is None:
             self.hot_items = tpcc.default_hot_items(self.scale)
         if self.escrow_layout == "sparse":
@@ -222,14 +237,16 @@ class Engine:
                             state, esc.keys, esc.shares[0], esc.spent[0],
                             batch, self.scale, w_lo=w_lo,
                             w_hi=w_lo + self.w_per_shard,
-                            replica=idx, num_replicas=self.n_shards)
+                            replica=idx, num_replicas=self.n_shards,
+                            admission=self.admission)
                 else:
                     state, spent, delta, total, ok = \
                         tpcc.apply_neworder_escrow(
                             state, esc.shares[0], esc.spent[0], batch,
                             self.scale, w_lo=w_lo,
                             w_hi=w_lo + self.w_per_shard,
-                            replica=idx, num_replicas=self.n_shards)
+                            replica=idx, num_replicas=self.n_shards,
+                            admission=self.admission)
                 return (state, esc._replace(spent=spent[None]), delta, total,
                         ok)
 

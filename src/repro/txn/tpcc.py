@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.invariants import Invariant, InvariantKind
+from repro.core.lattice import hot_position
 
 Array = jax.Array
 
@@ -480,10 +481,88 @@ def make_escrow_shares(s_quantity, num_replicas: int):
     return escrow_share_for(q, slots, num_replicas)
 
 
+# ---------------------------------------------------------------------------
+# THE escrow-admission core, shared by the dense and sparse layouts: both
+# reduce their state to ONE availability vector (avail0 [A]) and per-line
+# cell slots (slot [B, L]), then pick an execution strategy for the same
+# FCFS semantics. Admission is first-come-first-served in batch order: a
+# transaction commits iff every valid line's quantity — including duplicate-
+# cell demand within the transaction — fits the remaining availability;
+# otherwise the whole transaction aborts with no effects.
+# ---------------------------------------------------------------------------
+
+
+ADMISSION_MODES = ("auto", "scan", "kernel")
+
+# "auto" threshold: below this per-shard batch the B-step scan is cheaper
+# than the gate's pre-pass + kernel launch; above it the gate collapses the
+# sequential depth to the contended handful
+AUTO_KERNEL_MIN_BATCH = 64
+
+
+def resolve_admission(admission: str, batch: int) -> str:
+    """Resolve the ``admission=`` knob to a concrete strategy for a batch
+    size (static at trace time): "auto" picks the gate+kernel pipeline at
+    ``batch >= AUTO_KERNEL_MIN_BATCH`` and the scan below it."""
+    if admission not in ADMISSION_MODES:
+        raise ValueError(f"unknown admission {admission!r}; "
+                         f"choose from {ADMISSION_MODES}")
+    if admission == "auto":
+        return "kernel" if batch >= AUTO_KERNEL_MIN_BATCH else "scan"
+    return admission
+
+
+def admit_fcfs(avail0: Array, slot: Array, qty: Array, line_valid: Array,
+               admission: str = "scan") -> tuple[Array, Array]:
+    """FCFS admission of a batch against an availability vector.
+
+    avail0: [A] int32 headroom per cell; slot/qty/line_valid: [B, L] with
+    ``slot`` identifying cells (equal slot == same cell). Returns
+    (committed [B] bool, avail [A] after all admitted reservations) —
+    bit-identical across strategies:
+
+    * ``"scan"`` — the sequential baseline: a B-step ``lax.scan``; every
+      step gathers/scatters the whole-``avail`` vector and rebuilds an
+      ``[L, L]`` duplicate-demand matrix. Definitional; kept bit-exact.
+    * ``"kernel"`` — the two-level pipeline: the contention gate
+      (kernels/escrow_admit.contention_gate) commits every transaction
+      whose cells' TOTAL batch demand fits headroom — admission is monotone
+      there, so order cannot matter — and only the residual transactions
+      (the oversubscribed handful at TPC-C skew) run FCFS, inside a Pallas
+      kernel with ``avail`` resident in VMEM (a dynamic trip count: the
+      sequential depth is the residual count, not B).
+    * ``"auto"`` — :func:`resolve_admission` picks per batch size.
+    """
+    admission = resolve_admission(admission, slot.shape[0])
+    if admission == "kernel":
+        from repro.kernels.ops import escrow_admit
+        return escrow_admit(avail0, slot, qty, line_valid)
+
+    L = slot.shape[1]
+    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+
+    def _admit(avail, xs):
+        slot_l, q_l, lv = xs                                       # [L] each
+        # demand already placed on the same cell by EARLIER lines of this
+        # same transaction (duplicate items in one order)
+        same = slot_l[None, :] == slot_l[:, None]
+        prior = jnp.where(same & dup_lower & lv[None, :],
+                          q_l[None, :], 0).sum(axis=1)
+        have = avail[slot_l]
+        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
+        avail = avail.at[slot_l].add(jnp.where(lv & ok, -q_l, 0))
+        return avail, ok
+
+    avail, committed = jax.lax.scan(_admit, avail0,
+                                    (slot, qty, line_valid))
+    return committed, avail
+
+
 def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
                           batch: NewOrderBatch, scale: TPCCScale,
                           w_lo: int = 0, w_hi: int | None = None,
-                          replica: Array | int = 0, num_replicas: int = 1
+                          replica: Array | int = 0, num_replicas: int = 1,
+                          admission: str = "scan"
                           ) -> tuple[TPCCState, Array, StockDelta, Array, Array]:
     """Strict-stock New-Order: ``s_quantity >= 0`` with NO restock.
 
@@ -507,35 +586,29 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
     Everything stays replica-local: zero collectives — the only coordination
     in the escrow regime is the amortized share refresh (engine/executor).
 
+    ``admission`` selects the :func:`admit_fcfs` strategy ("scan" is the
+    bit-exact sequential baseline; "kernel"/"auto" route through the
+    contention gate + Pallas FCFS kernel with identical results).
+
     Returns (state, spent', remote outbox, totals, committed mask [B]).
     """
     w_hi = scale.n_warehouses if w_hi is None else w_hi
     ramp_ts = batch.ts * num_replicas + replica                    # [B]
     B, L = batch.i_id.shape
-    D, OC, I = scale.districts, scale.order_capacity, scale.n_items
-    wl = batch.w - w_lo  # shard-local home-warehouse index
+    I = scale.n_items
 
     line_idx = jnp.arange(L)[None, :]
     line_valid = line_idx < batch.n_lines[:, None]                 # [B, L]
 
-    # ---- escrow admission: FCFS scan over the batch ------------------------
-    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+    # ---- escrow admission through the shared core --------------------------
+    # the dense layout's availability vector is this replica's remaining
+    # share of every (warehouse, item) cell, flattened w-major
+    avail0 = (shares - spent).reshape(-1)
+    slot = batch.supply_w * I + batch.i_id                         # [B, L]
+    committed, avail = admit_fcfs(avail0, slot, batch.qty, line_valid,
+                                  admission)
+    spent = shares - avail.reshape(shares.shape)
 
-    def _admit(spent, xs):
-        w_l, i_l, q_l, lv = xs                                     # [L] each
-        # demand already placed on the same (w, i) cell by EARLIER lines of
-        # this same transaction (duplicate items in one order)
-        same = (w_l * I + i_l)[None, :] == (w_l * I + i_l)[:, None]
-        prior = jnp.where(same & dup_lower & lv[None, :],
-                          q_l[None, :], 0).sum(axis=1)
-        have = shares[w_l, i_l] - spent[w_l, i_l]
-        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
-        spent = spent.at[w_l, i_l].add(jnp.where(lv & ok, q_l, 0))
-        return spent, ok
-
-    spent, committed = jax.lax.scan(
-        _admit, spent,
-        (batch.supply_w, batch.i_id, batch.qty, line_valid))
     state, delta, total = _neworder_committed_effects(
         state, batch, scale, committed, line_valid, ramp_ts, w_lo, w_hi)
     return state, spent, delta, total, committed
@@ -679,12 +752,49 @@ def escrow_layout_bytes(scale: TPCCScale, hot_items: int) -> dict:
             "reduction_vs_dense": dense / sparse}
 
 
+def sparse_admission_problem(s_quantity: Array, hot_keys: Array,
+                             hot_headroom: Array, supply_w: Array,
+                             i_id: Array, n_items: int, w_lo: int,
+                             w_hi: int) -> tuple[Array, Array]:
+    """The two-tier layout's admission problem: ONE availability vector and
+    per-line slots unify the three admission domains, so the FCFS core pays
+    a single gather + a single scatter per sequential step (the dense
+    layout pays two gathers + one scatter):
+
+      [0, K)            hot-cell headroom  (shares - spent, this replica)
+      [K, K + Wl*I)     cold LOCAL stock   (the shard's own s_quantity at
+                        call entry; the admission's reservations ARE the
+                        owner's serialization of its cold cells)
+      [K + Wl*I]        sentinel for cold REMOTE lines — effectively
+                        infinite: they are admitted optimistically and
+                        settled strictly at their owner during the drain
+
+    Shared by apply_neworder_escrow_sparse and the ``escrow_admission``
+    benchmark (which measures admission over exactly this construction).
+    """
+    K = hot_keys.shape[0]
+    Wl = s_quantity.shape[0]
+    cell_key = supply_w * n_items + i_id                           # [B, L]
+    pos, is_hot = hot_position(hot_keys, cell_key)                 # [B, L]
+    is_local = (supply_w >= w_lo) & (supply_w < w_hi)              # [B, L]
+    wl_line = jnp.where(is_local, supply_w - w_lo, 0)              # [B, L]
+
+    BIG = jnp.asarray(jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    avail0 = jnp.concatenate([
+        hot_headroom, s_quantity.reshape(-1), BIG[None]])
+    slot = jnp.where(is_hot, pos,
+                     jnp.where(is_local, K + wl_line * n_items + i_id,
+                               K + Wl * n_items)).astype(jnp.int32)
+    return avail0, slot
+
+
 def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
                                  hot_shares: Array, hot_spent: Array,
                                  batch: NewOrderBatch, scale: TPCCScale,
                                  w_lo: int = 0, w_hi: int | None = None,
                                  replica: Array | int = 0,
-                                 num_replicas: int = 1
+                                 num_replicas: int = 1,
+                                 admission: str = "scan"
                                  ) -> tuple[TPCCState, Array, StockDelta,
                                             Array, Array]:
     """Strict-stock New-Order over the TWO-TIER escrow layout.
@@ -706,7 +816,9 @@ def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
         best-effort fulfillment for the (rare: remote x cold) tail — the
         reject count is surfaced as MixStats.cold_rejects.
 
-    Everything is replica-local: zero collectives. Returns
+    Everything is replica-local: zero collectives. ``admission`` selects
+    the :func:`admit_fcfs` strategy ("scan" baseline vs the contention
+    gate + Pallas FCFS kernel, bit-identical). Returns
     (state, hot_spent', remote outbox, totals, committed mask [B]).
     """
     w_hi = scale.n_warehouses if w_hi is None else w_hi
@@ -718,52 +830,15 @@ def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
     line_idx = jnp.arange(L)[None, :]
     line_valid = line_idx < batch.n_lines[:, None]                 # [B, L]
 
-    # hot-table lookup, vectorized over the whole batch
-    cell_key = batch.supply_w * I + batch.i_id                     # [B, L]
-    pos = jnp.clip(jnp.searchsorted(hot_keys, cell_key), 0, K - 1
-                   ).astype(jnp.int32)
-    is_hot = hot_keys[pos] == cell_key                             # [B, L]
-    is_local = (batch.supply_w >= w_lo) & (batch.supply_w < w_hi)  # [B, L]
-    wl_line = jnp.where(is_local, batch.supply_w - w_lo, 0)        # [B, L]
+    avail0, slot = sparse_admission_problem(
+        state.s_quantity, hot_keys, hot_shares - hot_spent,
+        batch.supply_w, batch.i_id, I, w_lo, w_hi)
 
-    # ONE availability vector unifies the three admission domains so the
-    # FCFS scan costs a single gather + a single scatter per step (the dense
-    # layout pays two gathers + one scatter):
-    #   [0, K)            hot-cell headroom  (shares - spent, this replica)
-    #   [K, K + Wl*I)     cold LOCAL stock   (the shard's own s_quantity at
-    #                     call entry; the scan's reservations ARE the
-    #                     owner's serialization of its cold cells)
-    #   [K + Wl*I]        sentinel for cold REMOTE lines — effectively
-    #                     infinite: they are admitted optimistically and
-    #                     settled strictly at their owner during the drain
-    Wl = state.s_quantity.shape[0]
-    BIG = jnp.asarray(jnp.iinfo(jnp.int32).max // 2, jnp.int32)
-    avail0 = jnp.concatenate([
-        hot_shares - hot_spent,
-        state.s_quantity.reshape(-1),
-        BIG[None]])
-    slot = jnp.where(is_hot, pos,
-                     jnp.where(is_local, K + wl_line * I + batch.i_id,
-                               K + Wl * I)).astype(jnp.int32)      # [B, L]
-
-    dup_lower = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
-
-    def _admit(avail, xs):
-        slot_l, q_l, lv = xs                                       # [L] each
-        # demand already placed on the same cell by EARLIER lines of this
-        # same transaction (duplicate items in one order); slots identify
-        # cells (hot < K <= cold local < sentinel; remote-cold collisions on
-        # the sentinel only over-count against BIG, which cannot matter)
-        same = slot_l[None, :] == slot_l[:, None]
-        prior = jnp.where(same & dup_lower & lv[None, :],
-                          q_l[None, :], 0).sum(axis=1)
-        have = avail[slot_l]
-        ok = jnp.all(jnp.where(lv, prior + q_l <= have, True))
-        avail = avail.at[slot_l].add(jnp.where(lv & ok, -q_l, 0))
-        return avail, ok
-
-    avail, committed = jax.lax.scan(
-        _admit, avail0, (slot, batch.qty, line_valid))
+    # slots identify cells (hot < K <= cold local < sentinel; remote-cold
+    # collisions on the sentinel only over-count against BIG, which cannot
+    # matter), so the shared FCFS core sees one uniform admission domain
+    committed, avail = admit_fcfs(avail0, slot, batch.qty, line_valid,
+                                  admission)
     hot_spent = hot_shares - avail[:K]
 
     state, delta, total = _neworder_committed_effects(
@@ -796,9 +871,7 @@ def apply_stock_updates_strict_tiered(state: TPCCState, hot_keys: Array,
     (state, rejected-entry count).
     """
     key = dst_w * n_items + i_idx                     # global cell key
-    pos = jnp.clip(jnp.searchsorted(hot_keys, key), 0,
-                   hot_keys.shape[0] - 1)
-    is_hot = hot_keys[pos] == key
+    _, is_hot = hot_position(hot_keys, key)
     w_idx = jnp.where(mask, dst_w - w_lo, 0)
     i_idx = jnp.where(mask, i_idx, 0)
     cold = mask & ~is_hot

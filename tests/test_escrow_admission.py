@@ -1,0 +1,345 @@
+"""Two-level escrow admission (contention gate + Pallas FCFS kernel).
+
+Core level: for ARBITRARY admission problems — duplicate cells within one
+transaction, invalid lines, zero-headroom cells, sentinel slots, all-
+contended and all-uncontended extremes — the gate+kernel pipeline
+(``admission="kernel"``) must be BIT-identical to the sequential-scan
+baseline (``admission="scan"``) and to the definitional oracle
+(kernels/ref.py escrow_admit_ref): same committed mask, same final
+availability. An oversubscribed-cell control shows the gate correctly
+defers those transactions to FCFS (they are residual, order decides), while
+a naive everything-is-fast control would oversell.
+
+Engine level: ``admission="kernel"`` engines land on bit-identical final
+state / escrow counters / stats as ``admission="scan"`` engines across the
+sparse and dense layouts, fused and dispatch drivers, and hot/cold/remote
+line mixes; ``admission="auto"`` resolves by batch size.
+
+The problem generator is shared between a deterministic seeded sweep
+(always runs) and a hypothesis-driven search (runs where hypothesis is
+installed — CI installs it via the ``test`` extra).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: deterministic sweep only
+    HAVE_HYPOTHESIS = False
+
+from repro.core.lattice import hot_position
+from repro.kernels import ref
+from repro.kernels.escrow_admit import contention_gate, residual_order
+from repro.kernels.ops import escrow_admit
+from repro.txn import tpcc
+from repro.txn.drivers import run_escrow_loop
+from repro.txn.engine import single_host_engine
+from repro.txn.tpcc import (AUTO_KERNEL_MIN_BATCH, TPCCScale, admit_fcfs,
+                            init_state, resolve_admission)
+
+
+# ---------------------------------------------------------------------------
+# Core level: gate+kernel == scan == oracle
+# ---------------------------------------------------------------------------
+
+
+def _problem(seed: int, B: int = 16, L: int = 6, A: int = 48,
+             lo: int = 0, hi: int = 40, dup_heavy: bool = False):
+    """A random admission problem: headroom, slots (optionally duplicate-
+    heavy within rows), quantities, and a ragged validity mask."""
+    rng = np.random.default_rng(seed)
+    avail0 = jnp.asarray(rng.integers(lo, hi + 1, A), jnp.int32)
+    cells = max(2, A // 4) if dup_heavy else A
+    slot = jnp.asarray(rng.integers(0, cells, (B, L)), jnp.int32)
+    qty = jnp.asarray(rng.integers(1, 11, (B, L)), jnp.int32)
+    lv = jnp.asarray(rng.random((B, L)) < 0.85)
+    return avail0, slot, qty, lv
+
+
+def _assert_all_equal(avail0, slot, qty, lv):
+    c_ref, a_ref = ref.escrow_admit_ref(avail0, slot, qty, lv)
+    c_scan, a_scan = admit_fcfs(avail0, slot, qty, lv, "scan")
+    c_ker, a_ker = admit_fcfs(avail0, slot, qty, lv, "kernel")
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_scan))
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_scan))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_ker))
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_ker))
+    return c_ref, a_ref
+
+
+def test_admission_equivalence_seeded_sweep():
+    """Deterministic sweep: 40 random problems across contention levels —
+    scarce headroom (mostly contended), plump headroom (mostly fast), and
+    duplicate-heavy rows (intra-transaction duplicate demand)."""
+    for seed in range(40):
+        kind = seed % 4
+        if kind == 0:      # scarce: almost everything residual
+            p = _problem(seed, hi=15)
+        elif kind == 1:    # plump: almost everything fast
+            p = _problem(seed, lo=300, hi=500)
+        elif kind == 2:    # duplicate-heavy rows on a small cell domain
+            p = _problem(seed, dup_heavy=True, hi=60)
+        else:              # mixed, bigger batch
+            p = _problem(seed, B=40, L=8, A=96, hi=80)
+        _assert_all_equal(*p)
+
+
+def test_admission_zero_headroom_and_sentinel():
+    """Zero-headroom cells abort every transaction touching them (in every
+    mode); an effectively-infinite sentinel cell admits everything and is
+    always uncontended."""
+    avail0 = jnp.asarray([0, 5, jnp.iinfo(jnp.int32).max // 2], jnp.int32)
+    slot = jnp.asarray([[0, 2], [1, 2], [1, 1], [2, 2]], jnp.int32)
+    qty = jnp.asarray([[1, 3], [2, 3], [2, 2], [4, 4]], jnp.int32)
+    lv = jnp.ones((4, 2), jnp.bool_)
+    committed, avail = _assert_all_equal(avail0, slot, qty, lv)
+    got = np.asarray(committed)
+    # txn 0 needs 1 from the zero cell -> abort; txn 1 fits (2 <= 5);
+    # txn 2's duplicate demand 2+2 <= remaining 3? no -> abort; txn 3 rides
+    # the sentinel
+    assert got.tolist() == [False, True, False, True]
+    fast, demand, uncontended = contention_gate(avail0, slot, qty, lv)
+    assert bool(uncontended[2])          # sentinel never contends
+    assert not bool(uncontended[0])      # demanded zero-headroom cell does
+
+
+def test_oversubscribed_cell_defers_to_fcfs():
+    """The control the fast path's soundness rests on: one oversubscribed
+    cell makes every transaction touching it RESIDUAL (gate defers), FCFS
+    admits exactly the prefix that fits — order decides — and a naive
+    treat-everything-as-fast control would oversell the cell."""
+    A, B = 8, 6
+    avail0 = jnp.full((A,), 100, jnp.int32).at[3].set(10)
+    slot = jnp.full((B, 1), 3, jnp.int32)
+    qty = jnp.full((B, 1), 4, jnp.int32)
+    lv = jnp.ones((B, 1), jnp.bool_)
+
+    fast, demand, uncontended = contention_gate(avail0, slot, qty, lv)
+    assert int(demand[3]) == 24 and not bool(uncontended[3])
+    assert not bool(fast.any())              # all defer to FCFS
+    res_idx, n_res = residual_order(fast)
+    assert int(n_res[0]) == B
+
+    committed, avail = _assert_all_equal(avail0, slot, qty, lv)
+    # FCFS admits the first 2 (4+4 <= 10), aborts the rest
+    assert np.asarray(committed).tolist() == [True, True] + [False] * 4
+    assert int(avail[3]) == 2
+    # the naive control: admitting all "gated" work unconditionally would
+    # drive the cell negative — the residual FCFS pass is load-bearing
+    naive = avail0[3] - demand[3]
+    assert int(naive) < 0
+
+
+def test_gate_all_fast_skips_residual_work():
+    """Plump headroom: the gate commits the whole batch, the residual set is
+    empty, and the result still matches FCFS bit-for-bit."""
+    avail0, slot, qty, lv = _problem(7, lo=500, hi=900)
+    fast, _, _ = contention_gate(avail0, slot, qty, lv)
+    assert bool(fast.all())
+    _, n_res = residual_order(fast)
+    assert int(n_res[0]) == 0
+    committed, _ = _assert_all_equal(avail0, slot, qty, lv)
+    assert bool(committed.all())
+
+
+def test_ops_wrapper_matches_ref():
+    """The public kernels.ops.escrow_admit pipeline (gate + Level-2 FCFS +
+    fast-path settle, whatever backend lowering the wrapper picks) against
+    the oracle."""
+    for seed in (0, 1, 2):
+        avail0, slot, qty, lv = _problem(seed, B=24, L=5, A=64, hi=50)
+        c1, a1 = ref.escrow_admit_ref(avail0, slot, qty, lv)
+        c2, a2 = escrow_admit(avail0, slot, qty, lv)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+@pytest.mark.parametrize("seed,kind", [
+    (0, "scarce"), (1, "plump"), (2, "dup"), (3, "mixed")])
+def test_pallas_kernel_interpret_bitexact(seed, kind):
+    """The Pallas kernel ITSELF, interpret mode (the TPU code path executed
+    on CPU — the same bit-exactness contract as ramp_read): gate + kernel +
+    fast-path settle must equal the oracle, including the in-kernel running
+    per-cell reservation's handling of duplicates and rollbacks."""
+    from repro.kernels.escrow_admit import escrow_admit_kernel
+
+    p = {"scarce": dict(hi=12), "plump": dict(lo=300, hi=400),
+         "dup": dict(dup_heavy=True, hi=40),
+         "mixed": dict(B=20, L=7, A=40, hi=30)}[kind]
+    avail0, slot, qty, lv = _problem(seed, **p)
+    fast, _, _ = contention_gate(avail0, slot, qty, lv)
+    res_idx, n_res = residual_order(fast)
+    committed, avail = escrow_admit_kernel(
+        avail0, slot, qty, lv, fast, res_idx, n_res, interpret=True)
+    adm = lv & fast[:, None]
+    avail = avail.at[jnp.where(adm, slot, 0)].add(
+        -jnp.where(adm, qty, 0).astype(jnp.int32))
+    c_ref, a_ref = ref.escrow_admit_ref(avail0, slot, qty, lv)
+    np.testing.assert_array_equal(np.asarray(committed), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(avail), np.asarray(a_ref))
+
+
+def test_residual_fcfs_fallback_matches_kernel():
+    """The CPU lowering of Level 2 (residual_fcfs fori_loop) and the
+    interpret-mode Pallas kernel agree bit-for-bit on the same residual
+    sets — the dispatch in ops.escrow_admit can never change results."""
+    from repro.kernels.escrow_admit import escrow_admit_kernel, residual_fcfs
+
+    for seed in (5, 6):
+        avail0, slot, qty, lv = _problem(seed, B=20, L=6, A=56, hi=25)
+        fast, _, _ = contention_gate(avail0, slot, qty, lv)
+        res_idx, n_res = residual_order(fast)
+        c1, a1 = residual_fcfs(avail0, slot, qty, lv, fast, res_idx, n_res)
+        c2, a2 = escrow_admit_kernel(avail0, slot, qty, lv, fast, res_idx,
+                                     n_res, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 100_000),
+           B=st.integers(1, 24), L=st.integers(1, 8),
+           A=st.integers(2, 64), hi=st.sampled_from([5, 20, 60, 400]),
+           dup=st.booleans())
+    def test_admission_equivalence_hypothesis(seed, B, L, A, hi, dup):
+        """Hypothesis search over admission problems: gate+kernel == scan ==
+        oracle on arbitrary interleavings of duplicate / invalid /
+        zero-headroom / contended demand."""
+        _assert_all_equal(*_problem(seed, B=B, L=L, A=A, hi=hi,
+                                    dup_heavy=dup))
+
+
+# ---------------------------------------------------------------------------
+# The shared hot-table probe (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_hot_position_matches_probe_and_guards_empty():
+    keys = jnp.asarray([3, 7, 11, 40], jnp.int32)
+    q = jnp.asarray([0, 3, 8, 11, 40, 99], jnp.int32)
+    pos, is_hot = hot_position(keys, q)
+    assert np.asarray(is_hot).tolist() == [False, True, False, True, True,
+                                           False]
+    assert np.asarray(pos)[np.asarray(is_hot)].tolist() == [0, 2, 3]
+    # K == 0: a valid (everything-cold) table, not an index error
+    pos0, hot0 = hot_position(jnp.zeros((0,), jnp.int32), q)
+    assert not bool(hot0.any())
+    assert pos0.shape == q.shape
+
+
+def test_strict_tiered_drain_with_empty_hot_table():
+    """The K == 0 guard end-to-end: a drain window against an empty hot set
+    treats every entry as cold (owner all-or-nothing admission)."""
+    scale = TPCCScale(n_warehouses=2, districts=2, customers=4, n_items=8,
+                      order_capacity=32, max_lines=4)
+    state = init_state(scale)
+    state = state._replace(s_quantity=jnp.full_like(state.s_quantity, 5))
+    empty = jnp.zeros((0,), jnp.int32)
+    dst = jnp.asarray([0, 0, 1], jnp.int32)
+    i_id = jnp.asarray([2, 2, 3], jnp.int32)
+    qty = jnp.asarray([3, 3, 2], jnp.int32)
+    mask = jnp.ones((3,), jnp.bool_)
+    state2, rejects = tpcc.apply_stock_updates_strict_tiered(
+        state, empty, dst, i_id, qty, mask, jnp.ones((3,), jnp.bool_),
+        scale.n_items)
+    # cell (0, 2) total demand 6 > 5 -> whole cell rejected; (1, 3) admits
+    assert int(rejects) == 2
+    q = np.asarray(jax.device_get(state2.s_quantity))
+    assert q[0, 2] == 5 and q[1, 3] == 3
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+
+SCALE = TPCCScale(n_warehouses=2, districts=2, customers=8, n_items=32,
+                  order_capacity=256, max_lines=15)
+
+
+def _tree_equal(a, b):
+    eq = jax.tree.map(lambda x, y: bool((x == y).all()), a, b)
+    return [f for f, ok in zip(a._fields, eq) if not ok]
+
+
+@pytest.mark.parametrize("layout", ["sparse", "dense"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_engine_kernel_admission_bitexact_with_scan(layout, fused):
+    """The engine-level anchor: admission="kernel" and admission="scan"
+    land on bit-identical final state, escrow counters, and stats on the
+    identical adversarial stream (hot/cold/remote mixes, skewed demand,
+    aborts present), for both layouts and both drivers."""
+    kw = dict(batch_per_shard=8, n_batches=6, remote_frac=0.3,
+              merge_every=2, refresh_every=2, seed=5, mix=False,
+              fused=fused, item_skew=1.1)
+    finals = {}
+    for adm in ("scan", "kernel"):
+        eng = single_host_engine(SCALE, stock_invariant="strict",
+                                 escrow_layout=layout, hot_items=4,
+                                 admission=adm)
+        s = eng.shard_state(init_state(SCALE))
+        finals[adm] = run_escrow_loop(eng, s, **kw)
+    s1, e1, m1 = finals["scan"]
+    s2, e2, m2 = finals["kernel"]
+    assert _tree_equal(s1, s2) == []
+    assert _tree_equal(e1, e2) == []
+    assert (m1.neworders, m1.aborts, m1.cold_rejects) == \
+        (m2.neworders, m2.aborts, m2.cold_rejects)
+    assert m1.aborts > 0     # adversarial: the FCFS residue actually fired
+
+
+def test_kernel_admission_megastep_zero_collectives():
+    """The acceptance proof at tier-1 scale: the fused escrow megastep with
+    admission="kernel" (gate + residual FCFS in the scan carry) still
+    compiles with ZERO collective ops — the two-level pipeline adds no
+    coordination (the dry-run re-proves this at spec scale)."""
+    from repro.txn.executor import FusedExecutor
+
+    eng = single_host_engine(SCALE, stock_invariant="strict", hot_items=4,
+                             admission="kernel")
+    ex = FusedExecutor(eng, ring_rows=2)
+    desc = ex.prove_megastep_coordination_free(chunk_len=2,
+                                               batch_per_shard=4,
+                                               read_per_shard=1)
+    assert "NONE" in desc
+
+
+def test_resolve_admission_auto_threshold():
+    assert resolve_admission("auto", AUTO_KERNEL_MIN_BATCH) == "kernel"
+    assert resolve_admission("auto", AUTO_KERNEL_MIN_BATCH - 1) == "scan"
+    assert resolve_admission("scan", 4096) == "scan"
+    assert resolve_admission("kernel", 1) == "kernel"
+    with pytest.raises(ValueError, match="unknown admission"):
+        resolve_admission("warp", 8)
+    with pytest.raises(ValueError, match="unknown admission"):
+        single_host_engine(SCALE, stock_invariant="strict", admission="warp")
+
+
+def test_engine_auto_admission_large_batch_bitexact():
+    """admission="auto" at batch >= AUTO_KERNEL_MIN_BATCH takes the
+    gate+kernel path and stays bit-exact with the scan baseline on the
+    same stream — the fused<->dispatch<->legacy equivalence contract
+    extended to the auto knob."""
+    kw = dict(batch_per_shard=AUTO_KERNEL_MIN_BATCH, n_batches=2,
+              remote_frac=0.2, merge_every=2, refresh_every=1, seed=9,
+              mix=False, item_skew=0.8)
+    finals = {}
+    for name, adm, fused in (("auto_fused", "auto", True),
+                             ("auto_dispatch", "auto", False),
+                             ("scan_fused", "scan", True)):
+        eng = single_host_engine(SCALE, stock_invariant="strict",
+                                 hot_items=4, admission=adm)
+        s = eng.shard_state(init_state(SCALE))
+        finals[name] = run_escrow_loop(eng, s, fused=fused, **kw)
+    s_ref, esc_ref, m_ref = finals["scan_fused"]
+    for other in ("auto_fused", "auto_dispatch"):
+        s_o, esc_o, m_o = finals[other]
+        assert _tree_equal(s_ref, s_o) == [], other
+        assert _tree_equal(esc_ref, esc_o) == [], other
+        assert (m_ref.neworders, m_ref.aborts) == \
+            (m_o.neworders, m_o.aborts), other
