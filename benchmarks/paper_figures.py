@@ -714,6 +714,86 @@ def escrow_admission() -> tuple[list, dict]:
                     f"on CPU)")}
 
 
+def obs_overhead() -> tuple[list, dict]:
+    """The observability plane must not perturb the system it observes.
+
+    Two enforcement layers, strongest first:
+
+      * STRUCTURAL (deterministic): in the merge regime the metrics-on fused
+        megastep is the SAME compiled program as metrics-off — asserted here
+        by comparing compiled HLO text byte-for-byte. All recording runs in
+        separate per-chunk programs dispatched AFTER the timed loop (lattice
+        joins commute, so deferred folding is bit-identical), and those
+        programs are re-proved collective-free in both regimes.
+      * EMPIRICAL (noise-bounded): interleaved best-of-N closed-loop
+        throughput, metrics-on vs metrics-off, on the full five-transaction
+        mix. Shared-host wall clocks wobble more than the 2% budget
+        (an A/A control of two identical metrics-off arms spreads ~±5%), so
+        the ratio is asserted against a 0.90 sanity floor here while the
+        committed ``BENCH_obs_overhead.json`` + regression guard in CI hold
+        the ratio to the 2% budget against the committed baseline.
+
+    Summary field ``metrics_on_vs_off`` (capped at 1.0 — metrics cannot make
+    the engine faster; readings above parity are runner noise) is committed
+    as ``BENCH_obs_overhead.json`` and guarded by regression_guard.py.
+    """
+    from repro.obs import ObsSession
+    from repro.txn.drivers import run_loop
+    from repro.txn.executor import get_fused_executor
+    from repro.txn.tpcc import init_state
+
+    eng = {k: _engine(4) for k in ("off", "on")}
+
+    # structural: metrics-on megastep HLO is byte-identical to metrics-off
+    ex = get_fused_executor(eng["off"], ring_rows=8)
+    hlo_off = ex.lowered_megastep(8, 16, metrics=False).compile().as_text()
+    hlo_on = ex.lowered_megastep(8, 16, metrics=True).compile().as_text()
+    hlo_identical = hlo_on == hlo_off
+    assert hlo_identical, \
+        "metrics-on megastep compiled to a different program than metrics-off"
+    proof = ex.prove_megastep_coordination_free(metrics=True)
+
+    kw = dict(batch_per_shard=16, n_batches=64, merge_every=8,
+              remote_frac=0.01, payments=True, reads=True, deliveries=True,
+              seed=1)
+    best = {"off": 0.0, "on": 0.0}
+    snap = None
+    for _ in range(6):
+        for k in ("off", "on"):
+            obs = ObsSession(metrics=True, ledger=snap is None) \
+                if k == "on" else None
+            _, _, st = run_loop(eng[k], init_state(eng[k].scale, 0),
+                                obs=obs, **kw)
+            best[k] = max(best[k], st.throughput)
+            if obs is not None and snap is None:
+                snap = obs.snapshot()  # ledger build compiles once, round 0
+    ratio = best["on"] / best["off"]
+    no = snap["latency"]["neworder"]
+    assert snap["ledger"]["hot_collectives"] == 0, snap["ledger"]
+    assert ratio >= 0.90, \
+        f"metrics-on throughput {ratio:.3f}x metrics-off (sanity floor 0.90)"
+    rows = [{
+        "metrics_on_vs_off": min(ratio, 1.0),
+        "measured_ratio": ratio,
+        "hlo_identical": hlo_identical,
+        "off_txn_s": best["off"],
+        "on_txn_s": best["on"],
+        "megastep_proof": proof,
+        "hot_collectives": snap["ledger"]["hot_collectives"],
+        "ledger_bytes_per_txn": snap["ledger"]["bytes_per_txn"],
+        "neworder_p50_steps": no["p50_steps"],
+        "neworder_p99_steps": no["p99_steps"],
+        "neworder_count": no["count"],
+    }]
+    return rows, {
+        "name": "obs_overhead", "us_per_call": 1e6 / max(best["on"], 1e-9),
+        "derived": (f"metrics-on {best['on']:,.0f} vs off {best['off']:,.0f} "
+                    f"txn/s ({ratio:.3f}x); megastep HLO identical: "
+                    f"{hlo_identical}; hot collectives "
+                    f"{snap['ledger']['hot_collectives']}; "
+                    f"{snap['ledger']['bytes_per_txn']:.1f} bytes/txn")}
+
+
 def theorem1_dynamics() -> tuple[list, dict]:
     """§4.2: empirical Theorem-1 check over all example systems."""
     from repro.core.systems import ALL_SYSTEM_FACTORIES, EXPECTED_CONFLUENT
@@ -751,4 +831,4 @@ def straggler_merge() -> tuple[list, dict]:
 ALL = [table2, fig3_commitment, tpcc_invariants, fig4_neworder,
        fig5_distributed, fig6_scaling, ramp_read, fused_vs_dispatch,
        escrow_vs_2pc, escrow_sparse_vs_dense, escrow_admission,
-       theorem1_dynamics, straggler_merge]
+       obs_overhead, theorem1_dynamics, straggler_merge]

@@ -14,7 +14,12 @@ benchmark read. Guarded rows:
     with the dense escrow baseline on the hot-skewed stream;
   * ``escrow_admission`` (BENCH_escrow_admit.json, field
     ``kernel_vs_scan``) — the two-level gate+kernel admission's best-cell
-    speedup over the sequential-scan baseline at batch >= 256.
+    speedup over the sequential-scan baseline at batch >= 256;
+  * ``obs_overhead`` (BENCH_obs_overhead.json, field ``metrics_on_vs_off``,
+    tolerance 0.98) — the observability plane's throughput cost: metrics-on
+    vs metrics-off closed-loop ratio, capped at 1.0 in the row (the
+    deterministic enforcement is the in-row HLO byte-identity assert; the
+    guard polices the measured ratio against the 2%% budget).
 
 The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
 the fresh measurement when the fresh value is higher, and leaves it alone

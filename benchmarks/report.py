@@ -13,7 +13,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.run import DRYRUN_JSON, roofline_table  # noqa: E402
+from benchmarks.run import (DRYRUN_JSON, OBS_SNAPSHOT_JSON,  # noqa: E402
+                            roofline_table)
 
 
 def dryrun_section(cells: list[dict]) -> str:
@@ -73,14 +74,67 @@ def roofline_section(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def obs_section(snap: dict) -> str:
+    """§Observability from an ObsSession snapshot (repro/obs): per-txn-type
+    latency-proxy quantiles, the phase wall breakdown, and the coordination
+    ledger's per-phase bytes."""
+    out = ["### §Observability — metrics lattice + phase tracer + "
+           "coordination ledger",
+           ""]
+    lat = snap.get("latency")
+    if lat:
+        unit = "s" if any("p50_s" in r for r in lat.values()) else "steps"
+        out += [f"Per-transaction-type latency proxy ({unit}; conservative "
+                f"upper-bin-edge quantiles from the on-device histogram "
+                f"lattice):", "",
+                "| txn type | count | p50 | p99 |", "|---|---|---|---|"]
+        for name, r in lat.items():
+            p50 = r.get("p50_s", r["p50_steps"])
+            p99 = r.get("p99_s", r["p99_steps"])
+            out.append(f"| {name} | {r['count']} | {p50:.3g} | {p99:.3g} |")
+        out.append("")
+    spans = snap.get("spans", {}).get("phases", {})
+    if spans:
+        out += ["Phase breakdown (host wall per tracer span):", "",
+                "| phase | calls | total ms | share |", "|---|---|---|---|"]
+        for name, p in spans.items():
+            out.append(f"| {name} | {p['count']} | "
+                       f"{p['total_s'] * 1e3:.1f} | {p['share']:.0%} |")
+        out.append("")
+    led = snap.get("ledger")
+    if led:
+        out += [f"Coordination ledger ({led['context']}; hot collectives "
+                f"{led['hot_collectives']}, budget 0):", "",
+                "| phase | hot | collectives | bytes/call | calls/chunk |",
+                "|---|---|---|---|---|"]
+        for e in led["phases"]:
+            ops = ", ".join(f"{k}×{v}" for k, v in
+                            sorted(e["collectives"].items())) or "none"
+            out.append(f"| {e['phase']} | {'✓' if e['hot'] else ''} | {ops} |"
+                       f" {e['bytes_per_call']:,} | {e['calls_per_chunk']} |")
+        bpt = led.get("bytes_per_txn")
+        if bpt is not None:
+            out.append(f"\n{led['bytes_per_chunk']:,.0f} bytes/chunk, "
+                       f"{bpt:,.1f} bytes/txn on the wire.")
+    return "\n".join(out)
+
+
 def main() -> None:
-    with open(DRYRUN_JSON) as f:
-        cells = json.load(f)
+    # each section renders from its own artifact; missing ones are skipped
+    # (e.g. an obs snapshot from tpcc_serve --json with no dry-run yet)
+    cells = []
+    if os.path.exists(DRYRUN_JSON):
+        with open(DRYRUN_JSON) as f:
+            cells = json.load(f)
+    else:
+        print(f"(§Dry-run/§Roofline skipped: {DRYRUN_JSON} not found — run "
+              f"PYTHONPATH=src:. python -m repro.launch.dryrun first)")
     tpcc_path = os.path.join(os.path.dirname(DRYRUN_JSON), "dryrun_tpcc.json")
     tpcc = json.load(open(tpcc_path)) if os.path.exists(tpcc_path) else []
 
-    print(dryrun_section(cells))
-    print()
+    if cells:
+        print(dryrun_section(cells))
+        print()
     if tpcc:
         print("TPC-C engine (the paper's workload, spec cardinalities, "
               "warehouse-sharded):")
@@ -91,7 +145,13 @@ def main() -> None:
             desc = c["collectives"]["describe"]
             print(f"| {c['mesh']} | {c['compile_seconds']:.1f} | {desc} |")
         print()
-    print(roofline_section(roofline_table()))
+    if cells:
+        print(roofline_section(roofline_table()))
+    if os.path.exists(OBS_SNAPSHOT_JSON):
+        with open(OBS_SNAPSHOT_JSON) as f:
+            snap = json.load(f)
+        print()
+        print(obs_section(snap))
 
 
 if __name__ == "__main__":

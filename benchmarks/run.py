@@ -22,6 +22,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
                            "dryrun_baseline.json")
+OBS_SNAPSHOT_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                                 "obs_snapshot.json")
 
 
 def roofline_table(path: str = DRYRUN_JSON, mesh: str | None = None,
@@ -103,6 +105,23 @@ def main() -> None:
     elif not args.no_roofline:
         print(f"\n(roofline table skipped: {DRYRUN_JSON} not found — run "
               f"PYTHONPATH=src:. python -m repro.launch.dryrun first)")
+
+    if not args.no_roofline and os.path.exists(OBS_SNAPSHOT_JSON):
+        from benchmarks.roofline import txn_engine_row
+        with open(OBS_SNAPSHOT_JSON) as f:
+            snap = json.load(f)
+        if snap.get("ledger"):
+            row = txn_engine_row(
+                snap["ledger"],
+                throughput_txn_s=snap.get("stats", {}).get("throughput"))
+            all_rows["txn_engine_roofline"] = [row]
+            print("\n== txn engine (from the run's coordination ledger) ==")
+            print(f"  {row['context']}: {row['measured_bytes_per_txn']} "
+                  f"bytes/txn measured vs {row['model_floor_bytes_per_txn']} "
+                  f"floor ({row['overhead_vs_floor']}x drain batching "
+                  f"overhead); wire-bound ceiling "
+                  f"{row['wire_bound_txn_s']:,.0f} txn/s/link; hot "
+                  f"collectives {row['hot_collectives']}")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

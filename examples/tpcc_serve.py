@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.txn.audit import assert_audit
 from repro.txn.engine import (plan_engine, run_closed_loop, run_escrow_loop,
-                              single_host_engine)
+                              run_mixed_loop, single_host_engine)
 from repro.txn.executor import get_fused_executor
 from repro.txn.latency import DelayModel, simulate
 from repro.txn.tpcc import (TPCCScale, check_consistency, init_state,
@@ -33,6 +33,10 @@ def main() -> None:
     ap.add_argument("--batch-per-shard", type=int, default=64)
     ap.add_argument("--warehouses", type=int, default=8)
     ap.add_argument("--remote-frac", type=float, default=0.01)
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the full observability snapshot (metrics "
+                         "lattice + phase spans + coordination ledger) to "
+                         "PATH after the instrumented full-mix run")
     args = ap.parse_args()
 
     scale = TPCCScale(n_warehouses=args.warehouses, districts=10,
@@ -78,6 +82,22 @@ def main() -> None:
         fused=False)
     print(f"dispatch: {dstats.throughput:,.0f} txn/s -> fused executor is "
           f"{stats.throughput / max(dstats.throughput, 1e-9):.1f}x")
+
+    print("\n-- observability plane (metrics lattice + tracer + ledger) --")
+    from repro.obs import ObsSession
+    obs = ObsSession(metrics=True, trace=True, ledger=True)
+    so = engine.shard_state(init_state(scale))
+    so, ostats = run_mixed_loop(
+        engine, so, batch_per_shard=args.batch_per_shard,
+        n_batches=args.batches, remote_frac=args.remote_frac, merge_every=8,
+        obs=obs)
+    print(f"instrumented full mix: {ostats.throughput:,.0f} txn/s "
+          f"(metrics-on megastep is the identical compiled program)")
+    print(obs.dashboard())
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(obs.to_json())
+        print(f"wrote observability snapshot -> {args.json}")
 
     print("\n-- coordinated (2PC-style) baseline --")
     two = TwoPCEngine(scale, engine.mesh, engine.axis_names)

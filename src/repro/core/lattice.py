@@ -189,6 +189,122 @@ register_lattice("pncounter", PNCounter.join, PNCounter.make)
 
 
 # ---------------------------------------------------------------------------
+# Observability lattices — the metrics plane eats its own dogfood (Keeping
+# CALM: monotone counters and merge-able histograms are coordination-free, so
+# telemetry can ride the hot path and merge in the existing anti-entropy
+# machinery without adding a single collective).
+# ---------------------------------------------------------------------------
+
+
+class CounterLattice(NamedTuple):
+    """The metrics-plane G-counter: integer per-replica slots ``[R, *shape]``.
+
+    Same algebra as :class:`GCounter` (slotwise-max join over per-replica
+    monotone lanes) but tuned for on-device telemetry: int32 by default, a
+    vectorized :meth:`bump` that scatter-adds whole index batches (the item-
+    access histogram records every order line of a batch in one ``at[].add``),
+    and a value shape that may itself be an array of counters (e.g.
+    ``[R, n_items]``). Each replica only ever adds to its OWN slot, so every
+    slot is monotone and the max-join recovers the freshest contribution from
+    every replica regardless of merge order or duplication.
+    """
+
+    slots: Array  # [num_replicas, *value_shape] int
+
+    @staticmethod
+    def make(num_replicas: int, value_shape: tuple = (),
+             dtype=jnp.int32) -> "CounterLattice":
+        return CounterLattice(jnp.zeros((num_replicas, *value_shape), dtype))
+
+    def bump(self, replica, idx=None, amount: Array | int = 1
+             ) -> "CounterLattice":
+        """Add ``amount`` to this replica's slot — at ``idx`` (any integer
+        index array; duplicate indices accumulate) or to the whole slot."""
+        amount = jnp.asarray(amount, self.slots.dtype)
+        if idx is None:
+            return CounterLattice(self.slots.at[replica].add(amount))
+        return CounterLattice(self.slots.at[replica, idx].add(amount))
+
+    def value(self) -> Array:
+        return self.slots.sum(axis=0)
+
+    @staticmethod
+    def join(a: "CounterLattice", b: "CounterLattice") -> "CounterLattice":
+        return CounterLattice(jnp.maximum(a.slots, b.slots))
+
+
+def log_bin_edges(n_bins: int, lo: float = 1.0, base: float = 2.0,
+                  dtype=jnp.float32) -> Array:
+    """The ``n_bins - 1`` interior edges of a fixed log-spaced binning:
+    bin 0 is ``[0, lo*base)``, bin k is ``[lo*base**k, lo*base**(k+1))``,
+    the last bin is open above. Static — a histogram's edges are an epoch
+    parameter, never data."""
+    return (lo * base ** jnp.arange(1, n_bins)).astype(dtype)
+
+
+class HistogramLattice(NamedTuple):
+    """Merge-able histogram: per-replica monotone bin counts over FIXED
+    log-spaced edges.
+
+    * ``edges`` — ``[n_bins - 1]`` interior bin edges (static epoch
+      parameter, like :class:`HotSetEscrow` keys: join requires equal edges
+      and keeps the left operand's);
+    * ``counts`` — ``[R, *extra, n_bins]`` int, replica r's observations in
+      lane r. Join = slotwise max, exactly the G-counter argument — so
+      ``join(hist(A), hist(B)) == hist(A ∪ B)`` whenever A and B were
+      observed on disjoint replica lanes (the histogram-of-union law,
+      property-tested in tests/test_obs.py).
+
+    Fixed edges are what make the histogram a lattice at all: observations
+    commute into bins without rebinning, so merge order and duplication
+    cannot change the result (Definition 3).
+    """
+
+    edges: Array   # [n_bins - 1] interior edges, ascending
+    counts: Array  # [num_replicas, *extra, n_bins] int
+
+    @staticmethod
+    def make(num_replicas: int, n_bins: int = 16, lo: float = 1.0,
+             base: float = 2.0, extra_shape: tuple = (),
+             dtype=jnp.int32) -> "HistogramLattice":
+        return HistogramLattice(
+            log_bin_edges(n_bins, lo, base),
+            jnp.zeros((num_replicas, *extra_shape, n_bins), dtype))
+
+    @property
+    def n_bins(self) -> int:
+        return self.counts.shape[-1]
+
+    def bin_of(self, values: Array) -> Array:
+        """Bin index of each value (vectorized, O(log n_bins) searchsorted)."""
+        return jnp.searchsorted(self.edges, jnp.asarray(values),
+                                side="right").astype(jnp.int32)
+
+    def observe(self, replica, values: Array, weights: Array | None = None
+                ) -> "HistogramLattice":
+        """Record a batch of values into this replica's lane ([R, n_bins]
+        layout; metrics trees with extra axes scatter via :meth:`bin_of`).
+        ``weights`` (int, e.g. a validity mask) defaults to 1 per value."""
+        bins = self.bin_of(values)
+        w = jnp.ones(bins.shape, self.counts.dtype) if weights is None \
+            else jnp.asarray(weights, self.counts.dtype)
+        return self._replace(counts=self.counts.at[replica, bins].add(w))
+
+    def value(self) -> Array:
+        """Merged bin counts across replicas ([*extra, n_bins])."""
+        return self.counts.sum(axis=0)
+
+    @staticmethod
+    def join(a: "HistogramLattice", b: "HistogramLattice"
+             ) -> "HistogramLattice":
+        return HistogramLattice(a.edges, jnp.maximum(a.counts, b.counts))
+
+
+register_lattice("counter", CounterLattice.join, CounterLattice.make)
+register_lattice("histogram", HistogramLattice.join, HistogramLattice.make)
+
+
+# ---------------------------------------------------------------------------
 # LWW register — destructive merge the paper cautions about (§5.2 Lost Update)
 # ---------------------------------------------------------------------------
 
@@ -511,7 +627,8 @@ def tree_join_flat(names: tuple, a: PyTree, b: PyTree) -> PyTree:
     a_leaves, treedef = jax.tree_util.tree_flatten(
         a, is_leaf=lambda x: isinstance(x, (GCounter, PNCounter, LWWRegister,
                                             TwoPhaseSet, EscrowCounter,
-                                            HotSetEscrow, VersionedSlots)))
+                                            HotSetEscrow, VersionedSlots,
+                                            CounterLattice, HistogramLattice)))
     b_leaves = treedef.flatten_up_to(b)
     if len(names) != len(a_leaves):
         raise ValueError(f"{len(names)} names for {len(a_leaves)} state groups")

@@ -247,7 +247,8 @@ def tpcc_escrow_audit_cell() -> dict:
 
 
 def analyze(lowered, mesh, label: str, trip_counts=(),
-            compile_seconds_budget: float = 1800) -> dict:
+            compile_seconds_budget: float = 1800,
+            return_text: bool = False):
     t0 = time.perf_counter()
     compiled = lowered.compile()
     compile_s = time.perf_counter() - t0
@@ -290,6 +291,8 @@ def analyze(lowered, mesh, label: str, trip_counts=(),
         out["collectives"]["cross_pod"] = len(xp)
         _, xbytes = loop_scaled_collective_bytes(text, trip_counts, pod_size)
         out["collectives"]["cross_pod_scaled_bytes"] = xbytes
+    if return_text:
+        return out, text
     return out
 
 
@@ -397,6 +400,32 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
                 raise AssertionError(
                     f"admission avail vector ({4 * A / 2**20:.1f} MB) "
                     f"exceeds the ~16 MB VMEM budget")
+            # OBSERVABILITY PLANE at spec scale: the metrics-on escrow
+            # megastep (the only regime where metrics change the program —
+            # one stacked commit-mask output; the merge-regime program is
+            # byte-identical, asserted in benchmarks obs_overhead) and the
+            # deferred per-chunk record program must both compile
+            # collective-free; their compiled HLO seeds a coordination
+            # ledger whose hot budget is asserted at zero (the reuse path
+            # CoordinationLedger.add documents for already-compiled text)
+            from repro.obs.ledger import CoordinationLedger
+            from repro.txn.executor import FusedExecutor as _FE
+            ex_obs = _FE(eng_escrow, ring_rows=4)
+            om, om_text = analyze(
+                ex_obs.lowered_megastep(chunk_len=4, batch_per_shard=16,
+                                        read_per_shard=4, metrics=True),
+                mesh, "tpcc-escrow-megastep-metrics", (), return_text=True)
+            orc, orc_text = analyze(ex_obs.lowered_record(4, 16), mesh,
+                                    "tpcc-metrics-record", (),
+                                    return_text=True)
+            cell["obs_megastep_metrics"] = om
+            cell["obs_record"] = orc
+            led = CoordinationLedger(
+                context=f"spec-scale escrow, metrics-on, mesh {mesh_label}")
+            led.add("megastep (hot scan)", om_text, hot=True)
+            led.add("metrics record", orc_text, hot=True)
+            led.assert_budget()   # raises if the obs plane ever coordinates
+            cell["obs_ledger"] = led.snapshot()
             # concrete tier-1-scale escrow run + consistency audit
             cell["escrow_audit"] = tpcc_escrow_audit_cell()
             if not cell["escrow_audit"]["audit_ok"]:

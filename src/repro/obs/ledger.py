@@ -1,0 +1,184 @@
+"""Coordination ledger (obs pillar 3): the zero-collective proof as a
+continuously-reported budget.
+
+The one-shot HLO asserts (``Engine.prove_coordination_free``,
+``FusedExecutor.prove_megastep_coordination_free``) say *whether* a phase
+coordinates; the ledger says *how much*, per compiled phase, in the same
+structural currency — collective-op counts and bytes-on-wire parsed from the
+compiled HLO by ``utils/hlo.py``. Hot phases (the fused megastep, the RAMP
+read path) carry a budget of exactly zero and :meth:`CoordinationLedger.
+assert_budget` fails the run if any collective ever creeps in; drains and
+the escrow share refresh report their measured traffic, weighted by cadence
+(a refresh every ``refresh_every`` drains amortizes to ``1/refresh_every``
+calls per chunk), which yields the engine's measured **bytes/transaction**
+— the number the roofline's txn-engine row reports against the model floor.
+
+Entries are added from HLO text, so callers that already hold compiled
+programs (``launch/dryrun.py``) reuse them; :func:`build_ledger` lowers the
+plan-selected phases of an engine's fused executor from scratch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.utils.hlo import collective_stats
+
+HOT_BUDGET = 0  # Definition 5: a hot phase may contain this many collectives
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    phase: str
+    hot: bool                  # True => the zero-collective budget applies
+    collectives: dict          # opcode -> count, per call
+    bytes_per_call: int        # conservative bytes-on-wire per call
+    calls_per_chunk: float     # cadence weight in the closed loop
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.collectives.values())
+
+    @property
+    def bytes_per_chunk(self) -> float:
+        return self.bytes_per_call * self.calls_per_chunk
+
+
+class CoordinationLedger:
+    """Per-phase collective counts and bytes-on-wire for one engine config."""
+
+    def __init__(self, context: str = "", txns_per_chunk: int | None = None):
+        self.context = context
+        self.txns_per_chunk = txns_per_chunk
+        self.entries: list[LedgerEntry] = []
+
+    def add(self, phase: str, hlo_text: str, *, hot: bool = False,
+            calls_per_chunk: float = 1.0) -> LedgerEntry:
+        stats = collective_stats(hlo_text)
+        entry = LedgerEntry(phase=phase, hot=hot,
+                            collectives=dict(stats.counts),
+                            bytes_per_call=stats.total_bytes(),
+                            calls_per_chunk=calls_per_chunk)
+        self.entries.append(entry)
+        return entry
+
+    # -- the budget ----------------------------------------------------------
+
+    def hot_collectives(self) -> int:
+        return sum(e.total_ops for e in self.entries if e.hot)
+
+    def assert_budget(self) -> None:
+        """Every hot phase must sit at the zero-collective budget."""
+        for e in self.entries:
+            if e.hot and e.total_ops > HOT_BUDGET:
+                raise AssertionError(
+                    f"coordination budget blown in hot phase {e.phase!r}"
+                    f"{' of ' + self.context if self.context else ''}: "
+                    f"{e.collectives} ({e.bytes_per_call / 1e6:.2f} MB/call)")
+
+    # -- accounting ----------------------------------------------------------
+
+    def bytes_per_chunk(self) -> float:
+        return sum(e.bytes_per_chunk for e in self.entries)
+
+    def bytes_per_txn(self) -> float | None:
+        if not self.txns_per_chunk:
+            return None
+        return self.bytes_per_chunk() / self.txns_per_chunk
+
+    # -- export --------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return {
+            "context": self.context,
+            "txns_per_chunk": self.txns_per_chunk,
+            "hot_collectives": self.hot_collectives(),
+            "bytes_per_chunk": self.bytes_per_chunk(),
+            "bytes_per_txn": self.bytes_per_txn(),
+            "phases": [dataclasses.asdict(e) for e in self.entries],
+        }
+
+    def table(self) -> str:
+        lines = [f"coordination ledger"
+                 f"{' — ' + self.context if self.context else ''}:",
+                 f"  {'phase':<24}{'hot':>4}{'collectives':>26}"
+                 f"{'bytes/call':>12}{'calls/chunk':>12}"]
+        for e in self.entries:
+            ops = ", ".join(f"{op}×{n}" for op, n in
+                            sorted(e.collectives.items())) or "none"
+            lines.append(f"  {e.phase:<24}{'✓' if e.hot else '':>4}"
+                         f"{ops:>26}{e.bytes_per_call:>12,}"
+                         f"{e.calls_per_chunk:>12.3f}")
+        bpt = self.bytes_per_txn()
+        lines.append(f"  hot collectives: {self.hot_collectives()} "
+                     f"(budget {HOT_BUDGET}); "
+                     f"{self.bytes_per_chunk():,.0f} bytes/chunk"
+                     + (f", {bpt:,.1f} bytes/txn" if bpt is not None else ""))
+        return "\n".join(lines)
+
+
+def build_ledger(engine, *, chunk_len: int = 8, batch_per_shard: int = 8,
+                 read_per_shard: int = 2, refresh_every: int = 1,
+                 payments: bool = True, reads: bool = True,
+                 metrics: bool = False) -> CoordinationLedger:
+    """Lower and account every phase of the engine's plan-selected fused
+    closed loop: the (metrics-on or -off) megastep and RAMP read programs as
+    hot phases, the chunk drain — and, in the escrow regime, the fused
+    drain+refresh at its ``1/refresh_every`` cadence — as the coordinated
+    tail. Compiles fresh programs; reuse ``CoordinationLedger.add`` with
+    already-compiled HLO where available (as ``launch/dryrun.py`` does)."""
+    from repro.core.planner import CoordClass
+    from repro.txn.executor import get_fused_executor
+
+    ex = get_fused_executor(engine, ring_rows=chunk_len)
+    escrow = engine.stock_regime is CoordClass.ESCROW
+    regime = "escrow" if escrow else "merge"
+    B = batch_per_shard * engine.n_shards
+    R = read_per_shard * engine.n_shards
+    # committed-mix size per chunk (delivery's data-dependent count omitted
+    # — it only tightens bytes/txn)
+    txns = chunk_len * (B * (1 + int(payments)) + R * 2 * int(reads))
+    led = CoordinationLedger(
+        context=f"{regime} regime, {engine.n_shards} shards, "
+                f"chunk_len={chunk_len}"
+                + (", metrics-on" if metrics else ""),
+        txns_per_chunk=txns)
+
+    mega = ex.lowered_megastep(chunk_len, batch_per_shard, read_per_shard,
+                               payments=payments, reads=reads,
+                               metrics=metrics).compile().as_text()
+    led.add("megastep (hot scan)", mega, hot=True)
+    if metrics:
+        # the obs plane's own programs enter their own ledger: the per-chunk
+        # record dispatch and the once-per-run counter fold are hot-budgeted
+        led.add("metrics record", ex.lowered_record(
+            chunk_len, batch_per_shard).compile().as_text(), hot=True)
+        led.add("metrics counter fold",
+                ex.lowered_fold_counters().compile().as_text(), hot=True,
+                calls_per_chunk=0.0)
+    if reads:
+        # the RAMP read programs run inside the fused scan; the standalone
+        # lowerings enter the ledger as hot proof entries at zero cadence
+        led.add("order-status read", engine.lowered_order_status(
+            read_per_shard).compile().as_text(), hot=True,
+            calls_per_chunk=0.0)
+        led.add("stock-level read", engine.lowered_stock_level(
+            read_per_shard).compile().as_text(), hot=True,
+            calls_per_chunk=0.0)
+    if escrow:
+        strict = ex.count_drain_strict_collectives(batch_per_shard)
+        led.entries.append(LedgerEntry(
+            "strict drain", False, dict(strict.counts),
+            strict.total_bytes(),
+            calls_per_chunk=1.0 - 1.0 / refresh_every))
+        refresh = ex.count_drain_refresh_collectives(batch_per_shard)
+        led.entries.append(LedgerEntry(
+            "drain + share refresh", False, dict(refresh.counts),
+            refresh.total_bytes(), calls_per_chunk=1.0 / refresh_every))
+    else:
+        drain = ex.count_drain_collectives(batch_per_shard)
+        led.entries.append(LedgerEntry(
+            "anti-entropy drain", False, dict(drain.counts),
+            drain.total_bytes(), calls_per_chunk=1.0))
+    led.assert_budget()
+    return led

@@ -1,0 +1,284 @@
+"""On-device metrics lattice for the fused megastep (obs pillar 1).
+
+The telemetry plane eats its own dogfood: every metric is a lattice from
+``core.lattice`` — :class:`CounterLattice` per-replica counters and
+:class:`HistogramLattice` fixed log-spaced-bin histograms — so recording is
+a local monotone write and merging is the CRDT join. Because lattice joins
+commute and associate, the executor records NOTHING in the timed loop: the
+per-chunk :func:`record_chunk` folds run after the wall clock stops
+(bit-identical to inline recording), followed by one :func:`fold_counters`.
+Zero host transfers during the run, zero collectives (the metrics-on
+megastep is HLO-proved coordination-free — in the merge regime it is the
+byte-identical compiled program — by
+``FusedExecutor.prove_megastep_coordination_free(metrics=True)``), one
+``device_get`` at run end.
+
+Metrics are WRITE-ONLY side state: nothing in the transaction path ever reads
+them, so metrics-on and metrics-off runs produce bit-identical TPCC state
+(tested in tests/test_obs.py).
+
+What is recorded, once per executed chunk (the scan body itself stays
+metrics-free — see the recorder section below):
+
+* **latency-proxy histograms, per transaction type** — client-visible commit
+  latency cannot be clocked inside a scan, so we record the *visibility lag*
+  in scan-step units: a transaction whose effects are all home-local is
+  visible at the end of its own step (proxy = 1); a New-Order with >= 1
+  remote line only becomes globally visible at the next chunk drain
+  (proxy = 1 + steps remaining in the chunk). The snapshot layer converts
+  steps to seconds with the measured per-step wall time, which makes the
+  drain cadence show up in New-Order's tail exactly as coordination shows up
+  in the paper's Fig. 3 latency distributions.
+* **per-replica abort / cold-reject counters** — escrow insufficient-share
+  atomic aborts (from the scan's commit mask) and owner-side cold-tier
+  rejections (added once per drain, off the hot path, via
+  :func:`add_cold_rejects`).
+* **item-access histogram** — per-replica access counts over the full item
+  keyspace, counting every *attempted* valid order line (aborted demand is
+  contention signal too). This is the live Zipf profile ROADMAP item 2 needs
+  for hot-set re-keying: a commutative counter, no coordination needed.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import CounterLattice, HistogramLattice
+
+Array = jax.Array
+
+# transaction-type axis of the latency histogram (order is part of the
+# snapshot schema — see README "Observability")
+TXN_TYPES = ("neworder", "payment", "order_status", "stock_level", "delivery")
+N_TXN_TYPES = len(TXN_TYPES)
+_NEWORDER, _PAYMENT, _ORDER_STATUS, _STOCK_LEVEL, _DELIVERY = range(5)
+
+# fixed log2-spaced latency-proxy bins: bin 0 holds proxy < 2 steps (the
+# all-local fast path), the open top bin anything >= 2**14 — wide enough for
+# any drain cadence while keeping the carry at [R, 5, 16] int32
+OBS_BINS = 16
+
+
+class ObsMetrics(NamedTuple):
+    """The on-device metrics pytree (one lane per shard, like MixCounters)."""
+
+    latency: HistogramLattice     # counts [R, N_TXN_TYPES, OBS_BINS]
+    aborts: CounterLattice        # [R] escrow insufficient-share aborts
+    cold_rejects: CounterLattice  # [R] owner-rejected cold-tier entries
+    item_access: CounterLattice   # [R, n_items] attempted order-line demand
+
+
+def make_obs_metrics(num_replicas: int, n_items: int) -> ObsMetrics:
+    return ObsMetrics(
+        latency=HistogramLattice.make(num_replicas, OBS_BINS,
+                                      extra_shape=(N_TXN_TYPES,)),
+        aborts=CounterLattice.make(num_replicas),
+        cold_rejects=CounterLattice.make(num_replicas),
+        item_access=CounterLattice.make(num_replicas, (n_items,)))
+
+
+def obs_metrics_join(a: ObsMetrics, b: ObsMetrics) -> ObsMetrics:
+    """Pytree-level join (snapshot merging across runs/replicas)."""
+    return ObsMetrics(HistogramLattice.join(a.latency, b.latency),
+                      CounterLattice.join(a.aborts, b.aborts),
+                      CounterLattice.join(a.cold_rejects, b.cold_rejects),
+                      CounterLattice.join(a.item_access, b.item_access))
+
+
+def init_obs_metrics(engine) -> ObsMetrics:
+    """Device-resident metrics, sharded one lane per shard (replicated
+    edges), committed to the run sharding up front like the executor's
+    counters — distinct buffers per leaf so donation never aliases."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    lane = NamedSharding(engine.mesh, P(engine.axis_names))
+    rep = NamedSharding(engine.mesh, P())
+    m = make_obs_metrics(engine.n_shards, engine.scale.n_items)
+    put = jax.device_put
+    return ObsMetrics(
+        latency=HistogramLattice(put(m.latency.edges, rep),
+                                 put(m.latency.counts, lane)),
+        aborts=CounterLattice(put(m.aborts.slots, lane)),
+        cold_rejects=CounterLattice(put(m.cold_rejects.slots, lane)),
+        item_access=CounterLattice(put(m.item_access.slots, lane)))
+
+
+def obs_metrics_specs(engine) -> ObsMetrics:
+    """ShapeDtypeStructs for lowering the metrics-on megastep."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        make_obs_metrics(engine.n_shards, engine.scale.n_items))
+
+
+def obs_partition_specs(axis_names) -> ObsMetrics:
+    """shard_map in/out specs for the metrics carry: every per-replica lane
+    shards on dim 0; the histogram edges are replicated (static epoch
+    parameter, same on every shard)."""
+    from jax.sharding import PartitionSpec as P
+    lane = P(axis_names)
+    return ObsMetrics(latency=HistogramLattice(edges=P(), counts=lane),
+                      aborts=CounterLattice(lane),
+                      cold_rejects=CounterLattice(lane),
+                      item_access=CounterLattice(lane))
+
+
+# ---------------------------------------------------------------------------
+# Recorders. The hot megastep scan records NOTHING: in the merge regime the
+# metrics-on megastep IS the metrics-off program, and in the escrow regime it
+# additionally emits only the scan's stacked commit mask (``ok`` ys). Every
+# metric is a function of the chunk's *inputs* (item demand, remote-line
+# visibility lag), of that commit mask, or of totals the scan already
+# maintains in MixCounters (per-type committed counts, escrow aborts). So
+# the lattice is fed by two small shard_mapped programs the executor
+# dispatches OFF the hot path: :func:`record_chunk` once per chunk (async,
+# ~us of device work against ~ms of chunk work) and :func:`fold_counters`
+# once per run. Both run on replica lane 0 of the shard-local [1, ...] view;
+# every write is a monotone local add, expressed as a dense one-hot
+# reduction + STATIC-index ``.at[0].add(vec)`` (a fused
+# dynamic-update-slice) rather than a scatter, which XLA lowers to a scalar
+# loop on CPU. The item-access one-hot materializes ``lines x keyspace``
+# compares, so past _ONE_HOT_MAX_ELEMS it falls back to the scatter (the
+# right lowering on real accelerators, where gather/scatter units exist).
+# ---------------------------------------------------------------------------
+
+_ONE_HOT_MAX_ELEMS = 1 << 20
+
+
+def _bin_counts(hist: HistogramLattice, values: Array,
+                weights: Array) -> Array:
+    """Dense per-bin weight totals for a batch of observations: [n_bins]."""
+    bins = hist.bin_of(values.reshape(-1))
+    onehot = bins[:, None] == jnp.arange(hist.n_bins)[None, :]
+    return (onehot * weights.reshape(-1)[:, None]).sum(axis=0)
+
+
+def record_chunk(m: ObsMetrics, no_batch, ok: Array | None) -> ObsMetrics:
+    """Fold one executed chunk's input-determined metrics into the lattice.
+
+    ``no_batch`` is the chunk's stacked New-Order input ([T, B, ...]); ``ok``
+    the scan's per-step commit mask [T, B] (None in the merge regime, where
+    every New-Order commits). Records the New-Order latency-proxy histogram
+    (committed-weighted) and the attempted item demand; counter-derived
+    totals land separately via :func:`fold_counters`.
+    """
+    T, B, L = no_batch.i_id.shape
+    dtype = m.latency.counts.dtype
+    line_valid = jnp.arange(L)[None, None, :] < no_batch.n_lines[..., None]
+    is_remote = (line_valid
+                 & (no_batch.supply_w != no_batch.w[..., None])).any(axis=-1)
+    # visibility lag: own step for local txns, + steps to the chunk drain
+    # for remote ones (the outbox ring drains at chunk end, after step T-1)
+    proxy = jnp.where(is_remote,
+                      1 + T - jnp.arange(T, dtype=jnp.int32)[:, None], 1)
+    committed = jnp.ones((T, B), dtype) if ok is None else ok.astype(dtype)
+    latency = m.latency._replace(
+        counts=m.latency.counts.at[0, _NEWORDER].add(
+            _bin_counts(m.latency, proxy, committed)))
+
+    # attempted item demand (aborted demand is contention signal too — it is
+    # exactly what hot-set re-keying wants to see)
+    n_items = m.item_access.slots.shape[-1]
+    ids = no_batch.i_id.reshape(-1)
+    weight = line_valid.reshape(-1).astype(jnp.int32)
+    if ids.shape[0] * n_items <= _ONE_HOT_MAX_ELEMS:
+        demand = ((ids[:, None] == jnp.arange(n_items)[None, :])
+                  * weight[:, None]).sum(axis=0)
+        item_slots = m.item_access.slots.at[0].add(demand)
+    else:
+        item_slots = m.item_access.slots.at[0, ids].add(weight)
+    return m._replace(latency=latency,
+                      item_access=m.item_access._replace(slots=item_slots))
+
+
+def fold_counters(m: ObsMetrics, payments: Array, order_statuses: Array,
+                  stock_levels: Array, deliveries: Array,
+                  aborts: Array) -> ObsMetrics:
+    """Fold the run's final MixCounters lanes into the lattice (once per
+    run: counters start at zero, so the finals ARE the run totals).
+
+    Payment / Order-Status / Stock-Level / Delivery are always home-local —
+    visibility proxy = 1 step, bin 0 of each type's histogram; escrow
+    insufficient-share aborts land in the per-replica abort counter. Each
+    argument is the shard-local [1] counter lane.
+    """
+    dtype = m.latency.counts.dtype
+    upd = jnp.zeros((N_TXN_TYPES, OBS_BINS), dtype)
+    upd = upd.at[_PAYMENT, 0].set(payments[0].astype(dtype))
+    upd = upd.at[_ORDER_STATUS, 0].set(order_statuses[0].astype(dtype))
+    upd = upd.at[_STOCK_LEVEL, 0].set(stock_levels[0].astype(dtype))
+    upd = upd.at[_DELIVERY, 0].set(deliveries[0].astype(dtype))
+    return m._replace(
+        latency=m.latency._replace(counts=m.latency.counts.at[0].add(upd)),
+        aborts=CounterLattice(m.aborts.slots
+                              + aborts.astype(m.aborts.slots.dtype)))
+
+
+# one donated elementwise add per drain (off the hot scan): fold the strict
+# drain's per-shard cold-reject counts into the metrics lattice
+_add_cold = jax.jit(
+    lambda m, rej: m._replace(cold_rejects=CounterLattice(
+        m.cold_rejects.slots + rej.astype(m.cold_rejects.slots.dtype))),
+    donate_argnums=0)
+
+
+def add_cold_rejects(m: ObsMetrics, rej: Array) -> ObsMetrics:
+    return _add_cold(m, rej)
+
+
+# ---------------------------------------------------------------------------
+# Host-side snapshot math (numpy on the one device_get'ed pytree)
+# ---------------------------------------------------------------------------
+
+
+def histogram_quantile(edges, counts, q: float) -> float:
+    """Conservative quantile from binned counts: the UPPER edge of the bin
+    holding the q-th observation (the top bin reports its lower edge — open
+    above). Returns 0.0 for an empty histogram."""
+    import numpy as np
+    counts = np.asarray(counts)
+    edges = np.asarray(edges, np.float64)
+    total = counts.sum()
+    if total == 0:
+        return 0.0
+    cum = np.cumsum(counts)
+    b = int(np.searchsorted(cum, q * total, side="left"))
+    uppers = np.concatenate([edges, edges[-1:]])  # top bin: lower edge
+    return float(uppers[min(b, len(uppers) - 1)])
+
+
+def latency_summary(metrics_host, step_wall_s: float | None = None) -> dict:
+    """Per-transaction-type latency-proxy p50/p99 from the merged histogram.
+
+    ``step_wall_s`` (the run's measured wall seconds per scan step) converts
+    proxy steps to seconds; without it the summary stays in step units.
+    """
+    import numpy as np
+    lat = metrics_host.latency
+    merged = np.asarray(lat.counts).sum(axis=0)  # [T, B]
+    out = {}
+    for t, name in enumerate(TXN_TYPES):
+        row = {"count": int(merged[t].sum()),
+               "p50_steps": histogram_quantile(lat.edges, merged[t], 0.50),
+               "p99_steps": histogram_quantile(lat.edges, merged[t], 0.99)}
+        if step_wall_s is not None:
+            row["p50_s"] = row["p50_steps"] * step_wall_s
+            row["p99_s"] = row["p99_steps"] * step_wall_s
+        out[name] = row
+    return out
+
+
+def item_access_summary(metrics_host, top_k: int = 10) -> dict:
+    """The live Zipf profile: merged per-item demand, top-K items, and the
+    hot fraction — the hot-set re-keying input (ROADMAP item 2)."""
+    import numpy as np
+    demand = np.asarray(metrics_host.item_access.slots).sum(axis=0)
+    total = int(demand.sum())
+    order = np.argsort(demand)[::-1][:top_k]
+    return {
+        "total_line_demand": total,
+        "top_items": [{"i_id": int(i), "accesses": int(demand[i])}
+                      for i in order if demand[i] > 0],
+        "top_k_fraction": float(demand[order].sum() / total) if total else 0.0,
+    }

@@ -1,0 +1,111 @@
+"""Phase tracer for the closed-loop drivers (obs pillar 2).
+
+A deliberately small span API: the chunk loop in ``txn/drivers.run_loop`` /
+``txn/executor.FusedExecutor.run*`` wraps each phase — ``megastep``,
+``outbox-drain``, ``share-refresh``, ``audit`` — in
+:meth:`PhaseTracer.span`, which emits a ``jax.profiler.TraceAnnotation``
+(visible in a TensorBoard/perfetto trace when the JAX profiler is active)
+and accumulates host wall clocks per phase.
+
+Because JAX dispatch is asynchronous, a span around an un-synced device call
+measures *dispatch* time, not device time — honest for spotting host-side
+stalls, misleading for device attribution. ``sync=True`` makes the caller
+block inside each span (via :meth:`maybe_sync`), giving true per-phase wall
+time at the cost of one device sync per phase — a measurement mode, never
+the default, and never active in the overhead benchmark.
+
+Snapshots are plain dicts (JSON-ready); :meth:`dashboard` renders the text
+view ``tpcc_serve`` prints.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+
+import jax
+
+
+@dataclasses.dataclass
+class PhaseStat:
+    count: int = 0
+    total_s: float = 0.0
+    min_s: float = float("inf")
+    max_s: float = 0.0
+
+    def record(self, dt: float) -> None:
+        self.count += 1
+        self.total_s += dt
+        self.min_s = min(self.min_s, dt)
+        self.max_s = max(self.max_s, dt)
+
+
+class PhaseTracer:
+    """Accumulating per-phase wall clocks + JAX trace annotations."""
+
+    def __init__(self, enabled: bool = True, sync: bool = False):
+        self.enabled = enabled
+        self.sync = sync
+        self.phases: dict[str, PhaseStat] = {}
+
+    @contextlib.contextmanager
+    def span(self, phase: str):
+        if not self.enabled:
+            yield self
+            return
+        with jax.profiler.TraceAnnotation(phase):
+            t0 = time.perf_counter()
+            try:
+                yield self
+            finally:
+                self.phases.setdefault(phase, PhaseStat()).record(
+                    time.perf_counter() - t0)
+
+    def maybe_sync(self, value):
+        """Block on ``value`` iff the tracer is in sync mode — callers put
+        this at the end of a span to attribute device time to the phase."""
+        if self.enabled and self.sync:
+            jax.block_until_ready(value)
+        return value
+
+    def record(self, phase: str, seconds: float) -> None:
+        """Record an externally-timed interval (e.g. the executor's own
+        blocked wall clock)."""
+        if self.enabled:
+            self.phases.setdefault(phase, PhaseStat()).record(seconds)
+
+    # -- export --------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        total = sum(p.total_s for p in self.phases.values()) or 1.0
+        return {
+            "sync": self.sync,
+            "phases": {
+                name: {
+                    "count": p.count,
+                    "total_s": p.total_s,
+                    "mean_s": p.total_s / p.count if p.count else 0.0,
+                    "min_s": 0.0 if p.min_s == float("inf") else p.min_s,
+                    "max_s": p.max_s,
+                    "share": p.total_s / total,
+                }
+                for name, p in self.phases.items()
+            },
+        }
+
+    def dashboard(self) -> str:
+        snap = self.snapshot()
+        mode = "device-synced" if self.sync else "dispatch-side"
+        lines = [f"phase breakdown ({mode} wall clocks):",
+                 f"  {'phase':<16}{'calls':>7}{'total':>11}{'mean':>11}"
+                 f"{'share':>8}"]
+        for name, p in snap["phases"].items():
+            lines.append(
+                f"  {name:<16}{p['count']:>7}{p['total_s'] * 1e3:>9.1f}ms"
+                f"{p['mean_s'] * 1e6:>9.0f}us{p['share']:>7.1%}")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps(self.snapshot(), indent=2)

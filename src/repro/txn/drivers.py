@@ -36,6 +36,7 @@ thin signature-compatible wrappers; engine.py lazily re-exports them.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
@@ -278,7 +279,7 @@ def run_loop(engine, state: TPCCState, esc=None, *,
              read_frac: float = 0.25, item_skew: float = 0.0, seed: int = 0,
              payments: bool = False, reads: bool = False,
              deliveries: bool = False, fused: bool = True,
-             legacy: bool = False, audit: bool = False,
+             legacy: bool = False, audit: bool = False, obs=None,
              ) -> tuple[TPCCState, object, MixStats]:
     """Drive the engine's plan-selected regime over a pre-generated stream.
 
@@ -288,6 +289,17 @@ def run_loop(engine, state: TPCCState, esc=None, *,
     covers device execution only (compilation happens on throwaway copies,
     so all ``n_batches`` batches are timed).
 
+    ``obs`` (an ``repro.obs.ObsSession``) attaches the observability plane:
+    the on-device metrics lattice is folded from deferred per-chunk recorder
+    programs after the timed loop — lattice joins commute, so the result is
+    bit-identical to inline recording and the loop pays zero extra
+    dispatches (fused mode only — the per-batch dispatch baseline predates
+    the chunked executor), tracer spans wrap the megastep /
+    outbox-drain / share-refresh / audit phases, and ``obs.snapshot()``
+    afterwards holds stats + latency quantiles + spans (+ ledger when the
+    session asks for one). Metrics are write-only: a metrics-on run's final
+    state is bit-identical to metrics-off (tests/test_obs.py).
+
     Returns ``(state, escrow-or-None, MixStats)``; ``stats.neworders``
     counts COMMITTED New-Orders (escrow aborts land in ``stats.aborts``,
     owner-side cold-tier rejections in ``stats.cold_rejects``).
@@ -295,6 +307,10 @@ def run_loop(engine, state: TPCCState, esc=None, *,
     escrow = engine.stock_regime is CoordClass.ESCROW
     if legacy:
         fused = False
+    if obs is not None and obs.wants_metrics and not fused:
+        raise ValueError("on-device metrics require the fused executor "
+                         "(fused=True); dispatch/legacy modes support "
+                         "tracer spans only")
     if escrow and esc is None:
         esc = engine.init_escrow(state)
     q0 = state.s_quantity.copy() if audit else None
@@ -322,7 +338,7 @@ def run_loop(engine, state: TPCCState, esc=None, *,
             engine, state, esc, no_b, pay_b, os_b, sl_b,
             merge_every=merge_every, refresh_every=refresh_every,
             refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
-            escrow=escrow)
+            escrow=escrow, obs=obs)
     else:
         state, esc, stats = _dispatch_loop(
             engine, state, esc, no_b, pay_b, os_b, sl_b,
@@ -333,17 +349,29 @@ def run_loop(engine, state: TPCCState, esc=None, *,
 
     if audit:
         from .audit import assert_audit
-        if escrow:
-            assert_audit(state, escrow=esc, initial_stock=q0,
-                         strict_stock=True)
-        else:
-            assert_audit(state)
+        with obs.span("audit") if obs is not None else \
+                contextlib.nullcontext():
+            if escrow:
+                assert_audit(state, escrow=esc, initial_stock=q0,
+                             strict_stock=True)
+            else:
+                assert_audit(state)
+    if obs is not None:
+        # one host transfer of the metrics lattice + the snapshot's
+        # step→seconds calibration; the optional ledger compiles its phase
+        # programs here, outside every timed region
+        obs.finish(engine, stats, total_steps=n_batches,
+                   ledger_kw=dict(chunk_len=min(merge_every, n_batches),
+                                  batch_per_shard=batch_per_shard,
+                                  refresh_every=refresh_every,
+                                  payments=payments or reads, reads=reads,
+                                  metrics=obs.wants_metrics))
     return state, esc, stats
 
 
 def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                 merge_every, refresh_every, refresh_abort_rate, deliveries,
-                escrow):
+                escrow, obs=None):
     from .executor import get_fused_executor, stack_chunks
 
     chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
@@ -352,11 +380,11 @@ def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
     if escrow:
         state, esc, counters, wall, refreshes, cold = ex.run_escrow(
             state, esc, chunks, refresh_every=refresh_every,
-            refresh_abort_rate=refresh_abort_rate)
+            refresh_abort_rate=refresh_abort_rate, obs=obs)
         return state, esc, counters_to_stats(
             counters, anti_entropy_rounds=len(chunks), wall_seconds=wall,
             refreshes=refreshes, cold_rejects=cold)
-    state, counters, wall = ex.run(state, chunks)
+    state, counters, wall = ex.run(state, chunks, obs=obs)
     return state, None, counters_to_stats(
         counters, anti_entropy_rounds=len(chunks), wall_seconds=wall)
 
@@ -563,7 +591,7 @@ def run_mixed_loop(engine, state: TPCCState, *,
                    fused: bool = True, legacy: bool = False,
                    refresh_every: int = 1,
                    refresh_abort_rate: float | None = None,
-                   item_skew: float = 0.0,
+                   item_skew: float = 0.0, obs=None,
                    ) -> tuple[TPCCState, MixStats]:
     """The full five-transaction mix (New-Order, Payment, RAMP Order-Status
     / Stock-Level, Delivery) under the engine's plan-selected regime."""
@@ -572,7 +600,7 @@ def run_mixed_loop(engine, state: TPCCState, *,
         remote_frac=remote_frac, merge_every=merge_every,
         refresh_every=refresh_every, refresh_abort_rate=refresh_abort_rate,
         read_frac=read_frac, item_skew=item_skew, seed=seed, payments=True,
-        reads=True, deliveries=True, fused=fused, legacy=legacy)
+        reads=True, deliveries=True, fused=fused, legacy=legacy, obs=obs)
     return state, stats
 
 
@@ -583,7 +611,7 @@ def run_escrow_loop(engine, state: TPCCState, esc=None, *,
                     refresh_abort_rate: float | None = None,
                     read_frac: float = 0.25, seed: int = 0, mix: bool = True,
                     fused: bool = True, legacy: bool = False,
-                    item_skew: float = 0.0,
+                    item_skew: float = 0.0, obs=None,
                     ) -> tuple[TPCCState, object, MixStats]:
     """Drive the escrow regime: strict-stock New-Order (plus the rest of the
     mix when ``mix=True``), one batched strict drain per ``merge_every``
@@ -602,7 +630,7 @@ def run_escrow_loop(engine, state: TPCCState, esc=None, *,
         merge_every=merge_every, refresh_every=refresh_every,
         refresh_abort_rate=refresh_abort_rate, read_frac=read_frac,
         item_skew=item_skew, seed=seed, payments=mix, reads=mix,
-        deliveries=mix, fused=fused, legacy=legacy)
+        deliveries=mix, fused=fused, legacy=legacy, obs=obs)
     return state, esc, stats
 
 

@@ -484,6 +484,15 @@ class Engine:
         text = self._anti_entropy.lower(state_sds, out_sds).compile().as_text()
         return collective_stats(text)
 
+    def coordination_ledger(self, **kw):
+        """The one-shot proofs as a continuously-reported budget: per-phase
+        collective counts and bytes-on-wire for this engine's plan-selected
+        fused closed loop (repro.obs.ledger.build_ledger kwargs: chunk_len,
+        batch_per_shard, refresh_every, metrics, ...). Hot phases are
+        budget-checked at zero collectives before the ledger is returned."""
+        from repro.obs.ledger import build_ledger
+        return build_ledger(self, **kw)
+
 
 def _multi_axis_all_gather(x, axis_names):
     for a in reversed(axis_names):

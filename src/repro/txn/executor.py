@@ -51,8 +51,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import contextlib
+
 from repro.core.lattice import EscrowCounter
 from repro.core.planner import CoordClass
+from repro.obs import metrics as obsm
 from repro.utils.compat import shard_map
 from repro.utils.hlo import assert_no_collectives, collective_stats
 
@@ -169,7 +172,9 @@ class FusedExecutor:
         esc_spec = eng.escrow_spec
 
         def step_tail(state, cnt, pay_b, os_b, sl_b, w_lo):
-            """Payment + RAMP reads + Delivery — identical in both regimes."""
+            """Payment + RAMP reads + Delivery — identical in both regimes.
+            Deliberately metrics-free: the obs plane records once per chunk,
+            after the scan, from the chunk inputs and the counter deltas."""
             if pay_b is not None:
                 state = tpcc.apply_payment(state, pay_b, w_lo=w_lo)
                 cnt = cnt._replace(payments=cnt.payments + pay_b.w.shape[0])
@@ -202,16 +207,15 @@ class FusedExecutor:
                     deliveries=cnt.deliveries + n_del.astype(jnp.int32))
             return state, cnt
 
-        @functools.partial(
-            shard_map, mesh=eng.mesh,
-            in_specs=(state_spec, shard1_spec, count_spec, shard1_spec),
-            out_specs=(state_spec, shard1_spec, count_spec),
-            check_vma=False)
-        def _megastep(state: TPCCState, ring: OutboxRing,
-                      counters: MixCounters, chunk: MixChunk):
+        def _mega_body(state, ring, counters, chunk):
+            """Merge-regime chunk scan. Identical with metrics on or off —
+            every metric the obs plane wants is recoverable from the chunk
+            inputs and the counter totals, recorded off this program by the
+            executor's ``_record`` / ``_fold_counters`` dispatches."""
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
             rows = ring.valid.shape[0]
+            T = chunk.neworder.w.shape[0]
 
             def step(carry, xs):
                 state, ring, cnt = carry
@@ -228,25 +232,24 @@ class FusedExecutor:
                 state, cnt = step_tail(state, cnt, pay_b, os_b, sl_b, w_lo)
                 return (state, ring, cnt), None
 
-            T = chunk.neworder.w.shape[0]
             xs = (chunk.neworder, chunk.payment, chunk.order_status,
                   chunk.stock_level, jnp.arange(T))
             (state, ring, counters), _ = jax.lax.scan(
                 step, (state, ring, counters), xs)
             return state, ring, counters
 
-        @functools.partial(
-            shard_map, mesh=eng.mesh,
-            in_specs=(state_spec, shard1_spec, count_spec, esc_spec,
-                      shard1_spec),
-            out_specs=(state_spec, shard1_spec, count_spec, esc_spec),
-            check_vma=False)
-        def _megastep_escrow(state: TPCCState, ring: OutboxRing,
-                             counters: MixCounters, esc,
-                             chunk: MixChunk):
+        def _mega_escrow_body(state, ring, counters, esc, chunk, want_ok):
+            """Escrow-regime chunk scan (strict New-Order; shared by the
+            metrics-on/off wrappers). ``want_ok`` (static) is the ONLY
+            metrics-on difference: the scan stacks each step's commit mask
+            ``ok`` as ys — one per-step output write — because the
+            committed-weighted latency histogram needs per-txn admission,
+            which counter totals can't reconstruct. All recording happens
+            off this program."""
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
             rows = ring.valid.shape[0]
+            T = chunk.neworder.w.shape[0]
 
             def step(carry, xs):
                 state, ring, cnt, esc = carry
@@ -274,14 +277,76 @@ class FusedExecutor:
                 cnt = cnt._replace(neworders=cnt.neworders + n_ok,
                                    aborts=cnt.aborts + (B - n_ok))
                 state, cnt = step_tail(state, cnt, pay_b, os_b, sl_b, w_lo)
-                return (state, ring, cnt, esc), None
+                return (state, ring, cnt, esc), (ok if want_ok else None)
 
-            T = chunk.neworder.w.shape[0]
             xs = (chunk.neworder, chunk.payment, chunk.order_status,
                   chunk.stock_level, jnp.arange(T))
-            (state, ring, counters, esc), _ = jax.lax.scan(
+            (state, ring, counters, esc), ok_ys = jax.lax.scan(
                 step, (state, ring, counters, esc), xs)
-            return state, ring, counters, esc
+            return state, ring, counters, esc, ok_ys
+
+        obs_spec = obsm.obs_partition_specs(ax)
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, count_spec, shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec),
+            check_vma=False)
+        def _megastep(state: TPCCState, ring: OutboxRing,
+                      counters: MixCounters, chunk: MixChunk):
+            return _mega_body(state, ring, counters, chunk)
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, count_spec, esc_spec,
+                      shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec, esc_spec),
+            check_vma=False)
+        def _megastep_escrow(state: TPCCState, ring: OutboxRing,
+                             counters: MixCounters, esc,
+                             chunk: MixChunk):
+            return _mega_escrow_body(state, ring, counters, esc, chunk,
+                                     want_ok=False)[:4]
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, count_spec, esc_spec,
+                      shard1_spec),
+            out_specs=(state_spec, shard1_spec, count_spec, esc_spec,
+                       shard1_spec),
+            check_vma=False)
+        def _megastep_escrow_obs(state: TPCCState, ring: OutboxRing,
+                                 counters: MixCounters, esc,
+                                 chunk: MixChunk):
+            # metrics-on escrow megastep: + the stacked [T, B] commit mask
+            return _mega_escrow_body(state, ring, counters, esc, chunk,
+                                     want_ok=True)
+
+        # the obs plane's record programs — dispatched off the hot megastep,
+        # once per chunk (record) and once per run (fold); both shard_mapped
+        # over the same lanes as the megastep, both provably collective-free
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(obs_spec, shard1_spec),
+            out_specs=obs_spec, check_vma=False)
+        def _record_merge(obs, neworder: NewOrderBatch):
+            return obsm.record_chunk(obs, neworder, None)
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(obs_spec, shard1_spec, shard1_spec),
+            out_specs=obs_spec, check_vma=False)
+        def _record_escrow(obs, neworder: NewOrderBatch, ok):
+            return obsm.record_chunk(obs, neworder, ok)
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(obs_spec, count_spec),
+            out_specs=obs_spec, check_vma=False)
+        def _fold(obs, counters: MixCounters):
+            return obsm.fold_counters(
+                obs, counters.payments, counters.order_statuses,
+                counters.stock_levels, counters.deliveries, counters.aborts)
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
@@ -351,6 +416,11 @@ class FusedExecutor:
         self._megastep = jax.jit(_megastep, donate_argnums=(0, 1, 2))
         self._megastep_esc = jax.jit(_megastep_escrow,
                                      donate_argnums=(0, 1, 2, 3))
+        self._megastep_esc_obs = jax.jit(_megastep_escrow_obs,
+                                         donate_argnums=(0, 1, 2, 3))
+        self._record = jax.jit(_record_merge, donate_argnums=0)
+        self._record_esc = jax.jit(_record_escrow, donate_argnums=0)
+        self._fold_counters = jax.jit(_fold, donate_argnums=0)
         self._drain = jax.jit(_drain, donate_argnums=(0, 1))
         self._drain_strict = jax.jit(_drain_strict, donate_argnums=(0, 1))
         self._drain_refresh = jax.jit(_drain_refresh,
@@ -415,10 +485,21 @@ class FusedExecutor:
         return self._drain_refresh(state, ring, esc)
 
     def run(self, state: TPCCState, chunks: Sequence[MixChunk],
-            *, warmup: bool = True) -> tuple[TPCCState, MixCounters, float]:
+            *, warmup: bool = True, obs=None
+            ) -> tuple[TPCCState, MixCounters, float]:
         """Drive all chunks: scan megastep + one drain per chunk, a single
         final host sync. Returns (state, counters, wall_seconds); wall time
         excludes compilation (triggered on throwaway copies) and batch prep.
+
+        ``obs`` (an ``repro.obs.ObsSession``) keeps the on-device metrics
+        lattice fed beside the run (when the session wants metrics) and
+        wraps each phase in a tracer span. The hot megastep is the SAME
+        compiled program with metrics on or off, and the timed loop makes
+        zero extra dispatches: because lattice joins are commutative and
+        associative, the per-chunk ``_record`` folds run after the wall
+        clock stops (bit-identical to inline recording), followed by one
+        ``_fold_counters``, landing in ``obs.device_metrics`` — zero host
+        transfers, zero collectives.
         """
         if self._escrow:
             raise RuntimeError("escrow-regime executor: use run_escrow")
@@ -426,26 +507,52 @@ class FusedExecutor:
         state = self.engine.shard_state(state)  # commit: stable jit cache key
         ring = self.init_ring(batch_per_shard)
         counters = self.init_counters()
+        metrics = obs.init_metrics(self.engine) if obs is not None and \
+            obs.wants_metrics else None
+        span = obs.span if obs is not None else \
+            (lambda name: contextlib.nullcontext())
         if warmup:
             copy = lambda t: jax.tree.map(lambda x: x.copy(), t)
             for T in sorted({c.chunk_len for c in chunks}):
                 chunk = next(c for c in chunks if c.chunk_len == T)
-                w = self.megastep(copy(state), copy(ring), copy(counters),
-                                  chunk)
+                w = self.megastep(copy(state), copy(ring),
+                                  copy(counters), chunk)
                 jax.block_until_ready(self.drain(w[0], w[1]))
+                if metrics is not None:
+                    jax.block_until_ready(
+                        self._record(copy(metrics), chunk.neworder))
+            if metrics is not None:
+                jax.block_until_ready(
+                    self._fold_counters(copy(metrics), counters))
 
         t0 = time.perf_counter()
         for chunk in chunks:
-            state, ring, counters = self.megastep(state, ring, counters,
-                                                  chunk)
-            state, ring = self.drain(state, ring)
+            with span("megastep"):
+                state, ring, counters = self.megastep(state, ring,
+                                                      counters, chunk)
+                if obs is not None:
+                    obs.maybe_sync(counters)
+            with span("outbox-drain"):
+                state, ring = self.drain(state, ring)
+                if obs is not None:
+                    obs.maybe_sync(ring)
         jax.block_until_ready((state, counters))
-        return state, counters, time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        if metrics is not None:
+            # deferred lattice folds: every record is a commutative join of
+            # per-chunk inputs, so folding after the timed loop is
+            # bit-identical to folding inline — and the hot loop pays zero
+            # extra dispatches (dispatch wall time is the one real cost of
+            # an extra per-chunk program on this backend)
+            for chunk in chunks:
+                metrics = self._record(metrics, chunk.neworder)
+            obs.device_metrics = self._fold_counters(metrics, counters)
+        return state, counters, wall
 
     def run_escrow(self, state: TPCCState, esc, chunks: Sequence[MixChunk],
                    *, refresh_every: int = 1,
                    refresh_abort_rate: float | None = None,
-                   warmup: bool = True
+                   warmup: bool = True, obs=None
                    ) -> tuple[TPCCState, object, MixCounters,
                               float, int, int]:
         """Escrow-regime drive: scan megastep + one strict drain per chunk;
@@ -462,14 +569,31 @@ class FusedExecutor:
         state = self.engine.shard_state(state)
         ring = self.init_ring(batch_per_shard)
         counters = self.init_counters()
+        metrics = obs.init_metrics(self.engine) if obs is not None and \
+            obs.wants_metrics else None
+        span = obs.span if obs is not None else \
+            (lambda name: contextlib.nullcontext())
         if warmup:
             copy = lambda t: jax.tree.map(lambda x: x.copy(), t)
             for T in sorted({c.chunk_len for c in chunks}):
                 chunk = next(c for c in chunks if c.chunk_len == T)
-                w = self.megastep_escrow(copy(state), copy(ring),
-                                         copy(counters), copy(esc), chunk)
+                if metrics is not None:
+                    w = self._megastep_esc_obs(
+                        copy(state), copy(ring), copy(counters), copy(esc),
+                        chunk)
+                    jax.block_until_ready(
+                        self._record_esc(copy(metrics), chunk.neworder,
+                                         w[4]))
+                    w = w[:4]
+                else:
+                    w = self.megastep_escrow(copy(state), copy(ring),
+                                             copy(counters), copy(esc),
+                                             chunk)
                 w2 = self.drain_refresh(w[0], w[1], w[3])
                 jax.block_until_ready(self.drain_strict(w2[0], w2[1]))
+            if metrics is not None:
+                jax.block_until_ready(
+                    self._fold_counters(copy(metrics), counters))
 
         adaptive = refresh_abort_rate is not None
         aborts_at_refresh = np.zeros(self.engine.n_shards, np.int64)
@@ -477,10 +601,24 @@ class FusedExecutor:
         txns_so_far = 0
         refreshes = 0
         rejs = []
+        oks = []
         t0 = time.perf_counter()
         for ci, chunk in enumerate(chunks):
-            state, ring, counters, esc = self.megastep_escrow(
-                state, ring, counters, esc, chunk)
+            with span("megastep"):
+                if metrics is not None:
+                    # the commit masks are already megastep outputs —
+                    # keeping the handles costs the loop nothing, and the
+                    # lattice folds they feed commute, so recording is
+                    # deferred past the timed region
+                    state, ring, counters, esc, ok = \
+                        self._megastep_esc_obs(state, ring, counters, esc,
+                                               chunk)
+                    oks.append(ok)
+                else:
+                    state, ring, counters, esc = self.megastep_escrow(
+                        state, ring, counters, esc, chunk)
+                if obs is not None:
+                    obs.maybe_sync(counters)
             if adaptive:
                 from .drivers import _adaptive_refresh_due
                 # per-replica abort rate since the last refresh — one small
@@ -496,15 +634,30 @@ class FusedExecutor:
             else:
                 due = (ci + 1) % refresh_every == 0
             if due:
-                state, ring, esc, rej = self.drain_refresh(state, ring, esc)
+                with span("share-refresh"):
+                    state, ring, esc, rej = self.drain_refresh(state, ring,
+                                                               esc)
+                    if obs is not None:
+                        obs.maybe_sync(esc)
                 refreshes += 1
             else:
-                state, ring, rej = self.drain_strict(state, ring)
+                with span("outbox-drain"):
+                    state, ring, rej = self.drain_strict(state, ring)
+                    if obs is not None:
+                        obs.maybe_sync(ring)
             rejs.append(rej)
         jax.block_until_ready((state, esc, counters))
+        wall = time.perf_counter() - t0
+        if metrics is not None:
+            # deferred lattice folds (joins commute — bit-identical to
+            # inline recording, zero dispatches inside the timed loop)
+            for chunk, ok in zip(chunks, oks):
+                metrics = self._record_esc(metrics, chunk.neworder, ok)
+            for rej in rejs:
+                metrics = obsm.add_cold_rejects(metrics, rej)
+            obs.device_metrics = self._fold_counters(metrics, counters)
         cold = int(np.asarray(jax.device_get(rejs)).sum()) if rejs else 0
-        return (state, esc, counters, time.perf_counter() - t0, refreshes,
-                cold)
+        return state, esc, counters, wall, refreshes, cold
 
     # -- structural proofs ---------------------------------------------------
 
@@ -543,34 +696,78 @@ class FusedExecutor:
 
     def lowered_megastep(self, chunk_len: int = 8, batch_per_shard: int = 8,
                          read_per_shard: int = 2, payments: bool = True,
-                         reads: bool = True):
+                         reads: bool = True, metrics: bool = False):
         """Lower the PLAN-SELECTED megastep (escrow variant includes the
-        EscrowCounter carry)."""
+        EscrowCounter carry). ``metrics=True`` lowers the program the
+        metrics-on loop actually runs: in the merge regime that is the SAME
+        megastep (the obs plane records off the hot program entirely); in
+        the escrow regime it additionally emits the stacked commit mask."""
         state_sds, ring_sds, cnt_sds, chunk = self._arg_specs(
             chunk_len, batch_per_shard, read_per_shard, payments, reads)
         if self._escrow:
-            return self._megastep_esc.lower(
-                state_sds, ring_sds, cnt_sds,
-                self.engine.escrow_input_specs(), chunk)
+            fn = self._megastep_esc_obs if metrics else self._megastep_esc
+            return fn.lower(state_sds, ring_sds, cnt_sds,
+                            self.engine.escrow_input_specs(), chunk)
         return self._megastep.lower(state_sds, ring_sds, cnt_sds, chunk)
+
+    def lowered_record(self, chunk_len: int = 8, batch_per_shard: int = 8):
+        """Lower the obs plane's per-chunk record program (folded once per
+        executed chunk, after the timed loop)."""
+        B = batch_per_shard * self.engine.n_shards
+        stack = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((chunk_len,) + s.shape, s.dtype), t)
+        no_sds = stack(tpcc.neworder_input_specs(self.engine.scale, B))
+        obs_sds = obsm.obs_metrics_specs(self.engine)
+        if self._escrow:
+            ok_sds = jax.ShapeDtypeStruct((chunk_len, B), jnp.bool_)
+            return self._record_esc.lower(obs_sds, no_sds, ok_sds)
+        return self._record.lower(obs_sds, no_sds)
+
+    def lowered_fold_counters(self):
+        """Lower the obs plane's once-per-run counter fold."""
+        return self._fold_counters.lower(
+            obsm.obs_metrics_specs(self.engine), self._counter_specs())
 
     def prove_megastep_coordination_free(self, chunk_len: int = 8,
                                          batch_per_shard: int = 8,
-                                         read_per_shard: int = 2) -> str:
+                                         read_per_shard: int = 2,
+                                         metrics: bool = False) -> str:
         """Definition 5 on the fused hot path: merge_every full-mix
         iterations compile to ZERO collective ops. In the escrow regime this
         covers the strict New-Order admission (``try_spend`` against the
         device-resident shares) — everything between refreshes is
-        collective-free."""
+        collective-free. ``metrics=True`` proves the same for everything a
+        metrics-on run executes per chunk: the (identical or commit-mask-
+        emitting) megastep AND the obs plane's record + counter-fold
+        programs — the observability plane adds no coordination."""
         ctx = "fused TPC-C escrow megastep" if self._escrow \
             else "fused TPC-C megastep"
+        if metrics:
+            ctx += " (metrics-on)"
         text = self.lowered_megastep(chunk_len, batch_per_shard,
-                                     read_per_shard).compile().as_text()
+                                     read_per_shard,
+                                     metrics=metrics).compile().as_text()
         assert_no_collectives(text, context=ctx)
+        if metrics:
+            assert_no_collectives(
+                self.lowered_record(chunk_len,
+                                    batch_per_shard).compile().as_text(),
+                context=ctx + " record program")
+            assert_no_collectives(
+                self.lowered_fold_counters().compile().as_text(),
+                context=ctx + " counter-fold program")
         return collective_stats(text).describe()
 
     def count_drain_collectives(self, batch_per_shard: int = 8):
         text = self._drain.lower(
+            tpcc.state_shape_dtypes(self.engine.scale),
+            self._ring_specs(batch_per_shard)).compile().as_text()
+        return collective_stats(text)
+
+    def count_drain_strict_collectives(self, batch_per_shard: int = 8):
+        """The escrow regime's non-refresh ring drain (coordination ledger
+        input: its traffic is the cold tier's owner routing)."""
+        text = self._drain_strict.lower(
             tpcc.state_shape_dtypes(self.engine.scale),
             self._ring_specs(batch_per_shard)).compile().as_text()
         return collective_stats(text)
