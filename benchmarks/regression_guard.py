@@ -19,7 +19,13 @@ benchmark read. Guarded rows:
     tolerance 0.98) — the observability plane's throughput cost: metrics-on
     vs metrics-off closed-loop ratio, capped at 1.0 in the row (the
     deterministic enforcement is the in-row HLO byte-identity assert; the
-    guard polices the measured ratio against the 2%% budget).
+    guard polices the measured ratio against the 2%% budget);
+  * ``escrow_failures`` (BENCH_escrow_failures.json, field
+    ``kill_recover_vs_steady``, tolerance 0.95) — committed-work retention
+    through a kill -> reclaim -> recover cycle vs the identical steady run;
+    DETERMINISTIC transaction counts (not walls), so the tight tolerance
+    costs no flakiness — a drop means share reclamation or the retry ring
+    stopped recovering work.
 
 The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
 the fresh measurement when the fresh value is higher, and leaves it alone

@@ -119,22 +119,53 @@ def is_complete(man: Manifest, state_tree: PyTree) -> bool:
     return needed.issubset(set(man.shards))
 
 
+def _write_atomic(path: str, payload: str) -> None:
+    """All-or-nothing file write: temp file in the same directory, fsync,
+    then ``os.replace`` — a crash at any point leaves either the previous
+    contents or the new ones, never a truncated file."""
+    tmp = f"{path}.tmp-{uuid.uuid4().hex[:8]}"
+    with open(tmp, "w") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _max_committed_id(directory: str) -> int:
+    """Highest dense ID among committed manifests on disk (-1 if none) —
+    the recovery source of truth when SEQUENCE itself was lost or corrupted
+    by a pre-atomic-write crash."""
+    ids = [int(f[5:11]) for f in os.listdir(directory)
+           if f.startswith("ckpt-") and f.endswith(".manifest.json")
+           and f[5:11].isdigit() and f[11:12] == "."]
+    return max(ids, default=-1)
+
+
 def assign_sequential(directory: str, man: Manifest) -> Manifest:
     """Commit-time dense ID assignment (TPC-C district-counter strategy):
     one assigner reads the current max sequence and increments it atomically
-    (single-writer; everyone else only ever uses temp IDs)."""
+    (single-writer; everyone else only ever uses temp IDs).
+
+    Both the SEQUENCE counter and the committed manifest are written via
+    temp-file + ``os.replace`` so a crash mid-commit can never leave a
+    truncated SEQUENCE or a corrupt ``ckpt-NNNNNN.manifest.json`` for
+    ``latest_manifest`` to trip over."""
     seq_path = os.path.join(directory, "SEQUENCE")
     current = -1
     if os.path.exists(seq_path):
         with open(seq_path) as f:
-            current = int(f.read().strip() or -1)
+            try:
+                current = int(f.read().strip() or -1)
+            except ValueError:
+                # legacy (pre-atomic) truncated SEQUENCE: recover the
+                # counter from the committed manifests themselves
+                current = _max_committed_id(directory)
     new_id = current + 1
-    with open(seq_path, "w") as f:
-        f.write(str(new_id))
+    _write_atomic(seq_path, str(new_id))
     man = dataclasses.replace(man, seq_id=new_id)
-    with open(os.path.join(directory, f"ckpt-{new_id:06d}.manifest.json"),
-              "w") as f:
-        f.write(man.to_json())
+    _write_atomic(
+        os.path.join(directory, f"ckpt-{new_id:06d}.manifest.json"),
+        man.to_json())
     return man
 
 
@@ -166,8 +197,39 @@ def restore(directory: str, man: Manifest, abstract: PyTree,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _load_manifest(path: str) -> Optional[Manifest]:
+    """Parse a manifest file, returning None on any corruption (truncated
+    JSON, wrong fields) instead of raising — recovery must degrade to an
+    older checkpoint, not crash on a half-written file."""
+    try:
+        with open(path) as f:
+            return Manifest.from_json(f.read())
+    except (json.JSONDecodeError, TypeError, ValueError, OSError):
+        return None
+
+
+def _temp_time(man: Manifest, path: str) -> float:
+    """Ordering key for temp manifests: the newest writer_meta timestamp
+    (save() stamps one per writer), falling back to file mtime — temp ids
+    are random uuid hex, so filename order is meaningless."""
+    times = [m.get("time") for m in man.writer_meta.values()
+             if isinstance(m, dict)
+             and isinstance(m.get("time"), (int, float))]
+    if times:
+        return float(max(times))
+    try:
+        return os.path.getmtime(path)
+    except OSError:
+        return 0.0
+
+
 def latest_manifest(directory: str) -> Optional[Manifest]:
-    """Newest committed (sequentially-named) manifest, else newest temp."""
+    """Newest committed (sequentially-named) manifest, else newest temp.
+
+    Unparseable committed manifests (a crash before the atomic-write fix,
+    or external truncation) are skipped — the documented invariant is that
+    recovery falls back to the previous committed checkpoint, never raises
+    on a corrupt one."""
     # exactly "ckpt-NNNNNN.manifest.json": temp ids are random hex and can
     # begin with six digits too, so also require the dot right after the
     # sequence number (else a temp manifest with seq_id=None can win the
@@ -175,16 +237,23 @@ def latest_manifest(directory: str) -> Optional[Manifest]:
     committed = sorted(f for f in os.listdir(directory)
                        if f.startswith("ckpt-") and f.endswith(".manifest.json")
                        and f[5:11].isdigit() and f[11:12] == ".")
-    if committed:
-        with open(os.path.join(directory, committed[-1])) as f:
-            return Manifest.from_json(f.read())
-    temps = sorted(f for f in os.listdir(directory)
-                   if f.endswith(".manifest.json"))
-    if not temps:
-        return None
-    mans = []
+    for fname in reversed(committed):
+        man = _load_manifest(os.path.join(directory, fname))
+        if man is not None:
+            return man
+    temps = [f for f in os.listdir(directory)
+             if f.endswith(".manifest.json") and f not in set(committed)]
+    # newest temp generation by writer timestamp, NOT filename: temp ids
+    # are random hex, so lexicographic order picks an arbitrary generation
+    parsed = []
     for t in temps:
-        with open(os.path.join(directory, t)) as f:
-            mans.append(Manifest.from_json(f.read()))
-    same = [m for m in mans if m.temp_id == mans[-1].temp_id]
+        path = os.path.join(directory, t)
+        man = _load_manifest(path)
+        if man is not None:
+            parsed.append((_temp_time(man, path), man))
+    if not parsed:
+        return None
+    parsed.sort(key=lambda p: p[0])
+    newest_id = parsed[-1][1].temp_id
+    same = [m for _, m in parsed if m.temp_id == newest_id]
     return merge_manifests(same)

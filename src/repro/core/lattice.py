@@ -419,12 +419,26 @@ class EscrowCounter(NamedTuple):
     def remaining(self) -> Array:
         return (self.shares - self.spent).sum()
 
-    def refresh(self) -> "EscrowCounter":
-        """The amortized coordination point: rebalance unspent headroom."""
+    def refresh(self, alive=None) -> "EscrowCounter":
+        """The amortized coordination point: rebalance unspent headroom.
+
+        ``alive`` (optional ``[R]`` mask) is liveness-aware reclamation: a
+        dead replica's unspent headroom folds back into the survivors'
+        fresh shares and its own slot goes to ZERO — safe under the
+        conservative min-join (a zero share can only shrink a merge, never
+        manufacture admission capacity), and total headroom is conserved
+        either way."""
         headroom = (self.shares - self.spent).sum()
         n = self.shares.shape[0]
-        return EscrowCounter(jnp.full((n,), headroom / n, self.shares.dtype),
-                             jnp.zeros_like(self.spent))
+        if alive is None:
+            return EscrowCounter(
+                jnp.full((n,), headroom / n, self.shares.dtype),
+                jnp.zeros_like(self.spent))
+        alive_f = jnp.asarray(alive, self.shares.dtype)
+        n_live = jnp.maximum(alive_f.sum(), 1)
+        return EscrowCounter(
+            (alive_f * headroom / n_live).astype(self.shares.dtype),
+            jnp.zeros_like(self.spent))
 
     @staticmethod
     def join(a: "EscrowCounter", b: "EscrowCounter") -> "EscrowCounter":
@@ -482,14 +496,30 @@ class HotSetEscrow(NamedTuple):
     spent: Array   # [R, K]
 
     @staticmethod
-    def make(num_replicas: int, keys, budgets, dtype=jnp.int32) -> "HotSetEscrow":
+    def make(num_replicas: int, keys, budgets, dtype=jnp.int32,
+             alive=None) -> "HotSetEscrow":
         """Partition ``budgets`` ([K], the current stock of each hot cell)
-        into per-replica shares: ``shares.sum(0) == budgets`` exactly."""
+        into per-replica shares: ``shares.sum(0) == budgets`` exactly.
+
+        ``alive`` (optional ``[R]`` mask) restricts the partition to live
+        replicas — dead slots get ZERO shares (liveness-aware reclaim: the
+        dead replica's headroom, already folded into ``budgets`` by the
+        drain, lands with the survivors) and the remainder goes to the
+        lowest LIVE ranks. With all replicas live this is bit-identical to
+        the unmasked partition, and ``shares.sum(0) == budgets`` holds in
+        both regimes."""
         keys = jnp.asarray(keys, jnp.int32)
         q = jnp.asarray(budgets, dtype)
-        r = jnp.arange(num_replicas, dtype=dtype)[:, None]
-        shares = q[None, :] // num_replicas + (r < q[None, :] % num_replicas
-                                               ).astype(dtype)
+        if alive is None:
+            r = jnp.arange(num_replicas, dtype=dtype)[:, None]
+            shares = q[None, :] // num_replicas + (
+                r < q[None, :] % num_replicas).astype(dtype)
+        else:
+            alive_i = jnp.asarray(alive, dtype)
+            n_live = jnp.maximum(alive_i.sum(), 1)
+            rank = (jnp.cumsum(alive_i) - 1)[:, None]          # live rank
+            shares = (q[None, :] // n_live + (
+                rank < q[None, :] % n_live).astype(dtype)) * alive_i[:, None]
         return HotSetEscrow(keys, shares, jnp.zeros_like(shares))
 
     @property
@@ -517,11 +547,12 @@ class HotSetEscrow(NamedTuple):
         """Per-cell unspent headroom across replicas ([K])."""
         return (self.shares - self.spent).sum(axis=0)
 
-    def refresh(self, budgets) -> "HotSetEscrow":
+    def refresh(self, budgets, alive=None) -> "HotSetEscrow":
         """The amortized coordination point: re-partition the hot cells'
-        post-drain stock (``budgets``) into fresh shares, spent resets."""
+        post-drain stock (``budgets``) into fresh shares, spent resets.
+        ``alive`` reclaims dead replicas' headroom for the survivors."""
         return HotSetEscrow.make(self.shares.shape[0], self.keys, budgets,
-                                 self.shares.dtype)
+                                 self.shares.dtype, alive=alive)
 
     def rekey(self, num_replicas: int, keys, budgets) -> "HotSetEscrow":
         """Promotion/demotion epoch change: rebuild the table over a new hot

@@ -45,6 +45,14 @@ class PodSimulator:
         self.states = [self.setup.init_fn(jax.random.PRNGKey(7))
                        for _ in range(self.n_pods)]
         self.alive = [True] * self.n_pods
+        # host-side G-counter view of the fleet's metrics: slot i is pod
+        # i's contribution as of its last merge (slotwise max-join — each
+        # pod only ever grows its own slot)
+        self.metric_joined = {
+            "loss": np.zeros(self.n_pods),
+            "tokens": np.zeros(self.n_pods),
+            "grad_norm": np.zeros(self.n_pods),
+        }
 
     def step(self, batches: list) -> None:
         for i in range(self.n_pods):
@@ -55,10 +63,24 @@ class PodSimulator:
         self.alive[pod] = False
 
     def recover(self, pod: int, from_state=None) -> None:
-        """Restart from a checkpointed/survivor state (elastic restore)."""
+        """Restart from a checkpointed/survivor state (elastic restore).
+
+        The recovered pod must NOT inherit the source state's metric slots
+        (that would double-count the survivor's contribution at the next
+        join); it resumes its OWN counter from the last joined value, so
+        nothing merged before the kill is lost and nothing is counted
+        twice."""
         self.alive[pod] = True
         src = from_state if from_state is not None else self._survivor_state()
-        self.states[pod] = jax.tree.map(jnp.copy, src)
+        state = jax.tree.map(jnp.copy, src)
+        state = state._replace(
+            loss_slots=jnp.full_like(
+                state.loss_slots, self.metric_joined["loss"][pod]),
+            token_slots=jnp.full_like(
+                state.token_slots, self.metric_joined["tokens"][pod]),
+            grad_norm_slots=jnp.full_like(
+                state.grad_norm_slots, self.metric_joined["grad_norm"][pod]))
+        self.states[pod] = state
 
     def _survivor_state(self):
         for i, a in enumerate(self.alive):
@@ -66,9 +88,35 @@ class PodSimulator:
                 return self.states[i]
         raise RuntimeError("no survivors")
 
+    def _join_metrics(self) -> None:
+        """Slotwise max-join of every live pod's metric contribution into
+        the fleet G-counter view (idempotent: slots only grow)."""
+        for i, a in enumerate(self.alive):
+            if not a:
+                continue
+            s = self.states[i]
+            self.metric_joined["loss"][i] = max(
+                self.metric_joined["loss"][i], float(s.loss_slots.sum()))
+            self.metric_joined["tokens"][i] = max(
+                self.metric_joined["tokens"][i], float(s.token_slots.sum()))
+            self.metric_joined["grad_norm"][i] = max(
+                self.metric_joined["grad_norm"][i],
+                float(s.grad_norm_slots.max()))
+
+    def fleet_metrics(self) -> dict:
+        """G-counter read over the fleet: join live pods' current slots in,
+        then sum contributions (dead pods keep their last-merged slot)."""
+        self._join_metrics()
+        return {
+            "loss_sum": float(self.metric_joined["loss"].sum()),
+            "tokens": float(self.metric_joined["tokens"].sum()),
+            "grad_norm_max": float(self.metric_joined["grad_norm"].max()),
+        }
+
     def merge(self) -> None:
         """Anti-entropy among live pods: parameter mean, step max-join,
         metric G-counter joins (slotwise max of per-pod contributions)."""
+        self._join_metrics()
         live = [self.states[i] for i, a in enumerate(self.alive) if a]
         if len(live) < 2:
             return
@@ -112,6 +160,227 @@ class PodSimulator:
                 base, other.params)
             worst = max(worst, max(jax.tree_util.tree_leaves(d)))
         return worst
+
+
+@dataclasses.dataclass
+class EscrowPodSimulator:
+    """Simulates R escrow-regime TPC-C replicas on one host, with kills.
+
+    Each replica owns a contiguous warehouse range (a TPCCState slice) plus
+    one row of the hot-set escrow shares and one owner-local cold-retry
+    ring.  Remote order-lines route host-side through per-owner pending
+    queues (the outbox in flight).  Killing a replica freezes its slice,
+    queue, and ring — exactly a crashed shard whose durable image stops
+    moving; survivors keep admitting:
+
+    * entries destined to the dead owner stay QUEUED (the retry story:
+      nothing silently drops);
+    * at refresh boundaries the dead replica's escrow row reclaims to the
+      survivors (``HotSetEscrow.make(..., alive=...)``) so its unspent
+      headroom is not stranded for the whole outage;
+    * refresh budgets conservatively subtract hot demand still queued at
+      dead owners — those lines were share-admitted upstream and WILL apply
+      unconditionally on recovery, so their stock is already spoken for
+      (skipping this is the oversell the reclaim property tests target).
+
+    ``checkpoint``/``recover`` round-trip the full run image through
+    ``txn.recovery`` (manifest lattice + atomic commit); a recovered
+    replica resumes from the checkpointed slice — bit-identical to its
+    frozen image, since only the owner writes its slice — then its queue
+    drains through its ring and the twelve audit criteria hold on the
+    reassembled state (tests/test_failures.py).
+    """
+
+    scale: object               # tpcc.TPCCScale
+    n_replicas: int
+    retry_cap: int = 32
+    retry_max: int = 3
+    hot_items: int | None = None
+    seed: int = 0
+    stock_scale: int = 1        # plump inventory (decouple from exhaustion)
+
+    def __post_init__(self):
+        from repro.core.lattice import HotSetEscrow
+        from repro.txn import tpcc
+        self._tpcc = tpcc
+        self._HotSetEscrow = HotSetEscrow
+        R, W = self.n_replicas, self.scale.n_warehouses
+        assert W % R == 0, "warehouses must split evenly across replicas"
+        self.wp = W // R
+        self.rng = np.random.default_rng(self.seed)
+        full = tpcc.init_state(self.scale, seed=self.seed)
+        if self.stock_scale != 1:
+            full = full._replace(s_quantity=full.s_quantity
+                                 * self.stock_scale)
+        self.initial_stock = np.asarray(full.s_quantity).copy()
+        self.slices = [jax.tree.map(
+            lambda x, r=r: jnp.asarray(x[r * self.wp:(r + 1) * self.wp]),
+            full) for r in range(R)]
+        hot = (self.hot_items if self.hot_items is not None
+               else tpcc.default_hot_items(self.scale))
+        self.hot_keys_np = tpcc.select_hot_cells(self.scale, hot)
+        self.hot_keys = jnp.asarray(self.hot_keys_np)
+        self._hot_set = set(int(k) for k in self.hot_keys_np)
+        self.esc = HotSetEscrow.make(R, self.hot_keys_np,
+                                     self._hot_budgets())
+        self.rings = [tpcc.empty_retry(self.retry_cap) for _ in range(R)]
+        self.pending = [[] for _ in range(R)]   # owner -> [(dst_w,i,qty)]
+        self.alive = [True] * R
+        self.ts0 = [0] * R
+        # exact cold-tier ledger: sent == applied + final + queued + in-ring
+        self.cold_sent = 0
+        self.cold_applied = 0
+        self.final_rejects = 0
+        self.committed = 0          # New-Orders admitted fleet-wide
+
+    # -- internal helpers ----------------------------------------------------
+
+    def _stock_flat(self) -> np.ndarray:
+        return np.concatenate([np.asarray(s.s_quantity)
+                               for s in self.slices]).reshape(-1)
+
+    def _hot_budgets(self) -> np.ndarray:
+        """Refresh budgets: current hot stock minus hot demand still queued
+        at (dead) owners — queued hot lines are share-admitted upstream and
+        apply unconditionally later, so that stock is already committed."""
+        budgets = self._stock_flat()[self.hot_keys_np].copy()
+        key_pos = {int(k): i for i, k in enumerate(self.hot_keys_np)}
+        for q in getattr(self, "pending", []):
+            for (w, i, qty) in q:
+                pos = key_pos.get(w * self.scale.n_items + i)
+                if pos is not None:
+                    budgets[pos] -= qty
+        return np.maximum(budgets, 0)
+
+    def _is_cold(self, w: int, i: int) -> bool:
+        return (w * self.scale.n_items + i) not in self._hot_set
+
+    # -- replica lifecycle ---------------------------------------------------
+
+    def kill(self, replica: int) -> None:
+        self.alive[replica] = False
+
+    def checkpoint(self, directory: str, step: int):
+        """Full run image (reassembled state + escrow + stacked rings)
+        through the crash-safe manifest-lattice commit."""
+        from repro.txn import recovery
+        full = self.full_state()
+        rings = jax.tree.map(lambda *xs: jnp.stack(xs), *self.rings)
+        return recovery.save_run(directory, full, step, esc=self.esc,
+                                 retry=rings)
+
+    def recover(self, replica: int, directory: str) -> None:
+        """Restart a killed replica from the newest committed manifest:
+        take ITS warehouse slice and ring row (only the owner ever writes
+        them, so the checkpointed image is its exact frozen state)."""
+        from repro.txn import recovery
+        rr = recovery.restore_run(directory)
+        assert rr is not None, "no recoverable checkpoint"
+        lo = replica * self.wp
+        self.slices[replica] = jax.tree.map(
+            lambda x: jnp.asarray(x[lo:lo + self.wp]), rr.state)
+        if rr.retry is not None:
+            self.rings[replica] = jax.tree.map(
+                lambda x: jnp.asarray(x[replica]), rr.retry)
+        self.alive[replica] = True
+
+    # -- the run -------------------------------------------------------------
+
+    def step(self, batch_size: int, remote_frac: float = 0.3,
+             item_skew: float = 1.2) -> None:
+        """One New-Order batch on every LIVE replica; remote lines route to
+        the owners' pending queues (messages in flight)."""
+        tpcc = self._tpcc
+        for r in range(self.n_replicas):
+            if not self.alive[r]:
+                continue
+            batch = tpcc.generate_neworder(
+                self.rng, self.scale, batch_size, remote_frac=remote_frac,
+                w_lo=r * self.wp, w_hi=(r + 1) * self.wp,
+                ts0=self.ts0[r], item_skew=item_skew)
+            self.ts0[r] += batch_size
+            st, spent_row, delta, _, committed = tpcc.apply_neworder_escrow_sparse(
+                self.slices[r], self.hot_keys,
+                self.esc.shares[r], self.esc.spent[r], batch, self.scale,
+                w_lo=r * self.wp, w_hi=(r + 1) * self.wp,
+                replica=r, num_replicas=self.n_replicas)
+            self.slices[r] = st
+            self.esc = self.esc._replace(
+                spent=self.esc.spent.at[r].set(spent_row))
+            self.committed += int(np.asarray(jax.device_get(committed)).sum())
+            d = jax.device_get(delta)
+            for w, i, q, v in zip(np.asarray(d.dst_w), np.asarray(d.i_id),
+                                  np.asarray(d.qty), np.asarray(d.valid)):
+                if v:
+                    owner = int(w) // self.wp
+                    self.pending[owner].append((int(w), int(i), int(q)))
+                    if self._is_cold(int(w), int(i)):
+                        self.cold_sent += 1
+
+    def drain(self) -> None:
+        """Every LIVE owner applies its queued entries through its retry
+        ring (dead owners' queues and rings stay frozen)."""
+        tpcc = self._tpcc
+        for r in range(self.n_replicas):
+            if not self.alive[r]:
+                continue
+            q = self.pending[r]
+            width = 8
+            while width < max(len(q), 1):
+                width *= 2                  # pad: bounded recompile count
+            dst = np.zeros(width, np.int32)
+            iid = np.zeros(width, np.int32)
+            qty = np.zeros(width, np.int32)
+            mask = np.zeros(width, bool)
+            for j, (w, i, s) in enumerate(q):
+                dst[j], iid[j], qty[j], mask[j] = w, i, s, True
+            new_cold = sum(1 for (w, i, _) in q if self._is_cold(w, i))
+            ring_before = int(np.asarray(self.rings[r].valid).sum())
+            st, ring, final = tpcc.apply_stock_updates_strict_tiered_retry(
+                self.slices[r], self.hot_keys, jnp.asarray(dst),
+                jnp.asarray(iid), jnp.asarray(qty), jnp.asarray(mask),
+                jnp.ones(width, jnp.bool_), self.rings[r],
+                self.scale.n_items, w_lo=r * self.wp,
+                retry_max=self.retry_max)
+            self.slices[r], self.rings[r] = st, ring
+            self.pending[r] = []
+            final = int(final)
+            ring_after = int(np.asarray(ring.valid).sum())
+            self.final_rejects += final
+            self.cold_applied += (ring_before + new_cold
+                                  - ring_after - final)
+
+    def refresh(self) -> None:
+        """Liveness-aware share refresh: dead rows reclaim to survivors,
+        budgets already net of in-flight hot demand (see class docstring)."""
+        self.esc = self._HotSetEscrow.make(
+            self.n_replicas, self.hot_keys_np, self._hot_budgets(),
+            alive=np.asarray(self.alive, np.int32))
+
+    # -- verification --------------------------------------------------------
+
+    def full_state(self):
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs), *self.slices)
+
+    def cold_ledger(self) -> dict:
+        """Exact cold-tier accounting — nothing silently drops: every
+        optimistically admitted remote-cold line is applied, finally
+        rejected, queued at a (dead) owner, or riding a retry ring."""
+        queued = sum(sum(1 for (w, i, _) in q if self._is_cold(w, i))
+                     for q in self.pending)
+        in_ring = sum(int(np.asarray(ring.valid).sum())
+                      for ring in self.rings)
+        return {"sent": self.cold_sent, "applied": self.cold_applied,
+                "final_rejects": self.final_rejects, "queued": queued,
+                "in_ring": in_ring,
+                "exact": (self.cold_sent == self.cold_applied
+                          + self.final_rejects + queued + in_ring)}
+
+    def audit(self):
+        from repro.txn.audit import assert_audit
+        return assert_audit(self.full_state(), escrow=self.esc,
+                            initial_stock=self.initial_stock,
+                            strict_stock=True)
 
 
 def straggler_step_times(n_pods: int, merge_every: int, steps: int,

@@ -280,6 +280,9 @@ def run_loop(engine, state: TPCCState, esc=None, *,
              payments: bool = False, reads: bool = False,
              deliveries: bool = False, fused: bool = True,
              legacy: bool = False, audit: bool = False, obs=None,
+             retry_cap: int = 0, retry_max: int = 0, retry=None,
+             alive=None, final_flush: bool = True,
+             return_retry: bool = False,
              ) -> tuple[TPCCState, object, MixStats]:
     """Drive the engine's plan-selected regime over a pre-generated stream.
 
@@ -303,6 +306,15 @@ def run_loop(engine, state: TPCCState, esc=None, *,
     Returns ``(state, escrow-or-None, MixStats)``; ``stats.neworders``
     counts COMMITTED New-Orders (escrow aborts land in ``stats.aborts``,
     owner-side cold-tier rejections in ``stats.cold_rejects``).
+
+    Failure-tolerance knobs (escrow regime): ``retry_cap`` > 0 bounds an
+    on-device cold-retry ring — owner-rejected remote-cold entries
+    re-present for up to ``retry_max`` drain windows before counting as
+    FINAL ``cold_rejects`` (``retry`` resumes a checkpointed ring;
+    ``final_flush=False`` leaves run-end pending entries in the returned
+    ring instead of flushing them to the reject count). ``alive``
+    ([n_shards] mask) threads share reclamation into every refresh.
+    ``return_retry=True`` appends the retry ring to the return tuple.
     """
     escrow = engine.stock_regime is CoordClass.ESCROW
     if legacy:
@@ -333,19 +345,26 @@ def run_loop(engine, state: TPCCState, esc=None, *,
                  for _ in range(n_batches)] if payments else None
         os_b = sl_b = None
 
+    if retry_cap > 0 and not escrow:
+        raise ValueError("retry_cap > 0 requires the escrow regime "
+                         "(the retry ring holds strict cold-tier entries)")
     if fused:
-        state, esc, stats = _fused_loop(
+        state, esc, stats, retry = _fused_loop(
             engine, state, esc, no_b, pay_b, os_b, sl_b,
             merge_every=merge_every, refresh_every=refresh_every,
             refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
-            escrow=escrow, obs=obs)
+            escrow=escrow, obs=obs, retry_cap=retry_cap,
+            retry_max=retry_max, retry=retry, alive=alive,
+            final_flush=final_flush)
     else:
-        state, esc, stats = _dispatch_loop(
+        state, esc, stats, retry = _dispatch_loop(
             engine, state, esc, no_b, pay_b, os_b, sl_b,
             batch_per_shard=batch_per_shard, merge_every=merge_every,
             refresh_every=refresh_every,
             refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
-            escrow=escrow, legacy=legacy)
+            escrow=escrow, legacy=legacy, retry_cap=retry_cap,
+            retry_max=retry_max, retry=retry, alive=alive,
+            final_flush=final_flush)
 
     if audit:
         from .audit import assert_audit
@@ -366,35 +385,44 @@ def run_loop(engine, state: TPCCState, esc=None, *,
                                   refresh_every=refresh_every,
                                   payments=payments or reads, reads=reads,
                                   metrics=obs.wants_metrics))
+    if return_retry:
+        return state, esc, stats, retry
     return state, esc, stats
 
 
 def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                 merge_every, refresh_every, refresh_abort_rate, deliveries,
-                escrow, obs=None):
+                escrow, obs=None, retry_cap=0, retry_max=0, retry=None,
+                alive=None, final_flush=True):
     from .executor import get_fused_executor, stack_chunks
 
     chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
     ex = get_fused_executor(engine, ring_rows=merge_every,
-                            deliveries=deliveries)
+                            deliveries=deliveries, retry_cap=retry_cap)
     if escrow:
-        state, esc, counters, wall, refreshes, cold = ex.run_escrow(
+        state, esc, counters, wall, refreshes, cold, retry = ex.run_escrow(
             state, esc, chunks, refresh_every=refresh_every,
-            refresh_abort_rate=refresh_abort_rate, obs=obs)
+            refresh_abort_rate=refresh_abort_rate, obs=obs, retry=retry,
+            retry_max=retry_max, alive=alive, final_flush=final_flush)
         return state, esc, counters_to_stats(
             counters, anti_entropy_rounds=len(chunks), wall_seconds=wall,
-            refreshes=refreshes, cold_rejects=cold)
+            refreshes=refreshes, cold_rejects=cold), retry
     state, counters, wall = ex.run(state, chunks, obs=obs)
     return state, None, counters_to_stats(
-        counters, anti_entropy_rounds=len(chunks), wall_seconds=wall)
+        counters, anti_entropy_rounds=len(chunks), wall_seconds=wall), None
 
 
 def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                    batch_per_shard, merge_every, refresh_every,
-                   refresh_abort_rate, deliveries, escrow, legacy):
+                   refresh_abort_rate, deliveries, escrow, legacy,
+                   retry_cap=0, retry_max=0, retry=None, alive=None,
+                   final_flush=True):
     """The per-batch dispatch baseline (one jitted call per transaction type
     per batch) — the comparison target the fused executor is measured
     against, and the reference semantics for bit-exactness tests."""
+    use_retry = escrow and retry_cap > 0
+    if use_retry and retry is None:
+        retry = engine.init_retry(retry_cap)
     n_batches = len(no_b)
     B = batch_per_shard * engine.n_shards
     reads = os_b is not None
@@ -427,14 +455,17 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
     else:
         wwin = _OutboxWindow(outbox, rows)
         wwin.put(outbox)
-        if escrow:
+        if use_retry:
+            warm, _, _ = engine.drain_strict_retry(
+                warm, wwin.flat(), engine.init_retry(retry_cap), retry_max)
+        elif escrow:
             warm, _ = engine.drain_strict(warm, wwin.flat())
         else:
             warm = engine.anti_entropy(warm, wwin.flat())
         wwin.clear()
         del wwin
     if escrow:
-        wesc = engine.refresh_escrow(warm, wesc)
+        wesc = engine.refresh_escrow(warm, wesc, alive)
     jax.block_until_ready((warm, wesc, res))
     del warm, wesc, outbox, res
 
@@ -502,7 +533,13 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
             # one batched drain of the whole window (Definition 3:
             # convergence may lag the hot path, but must happen); merge-
             # regime legacy mode keeps the seed's one jitted call per outbox
-            if escrow:
+            if use_retry:
+                state, retry, rej = engine.drain_strict_retry(
+                    state, window.flat(), retry, retry_max)
+                rej_acc = rej_acc + (int(rej.sum()) if legacy
+                                     else rej.sum().astype(jnp.int32))
+                window.clear()
+            elif escrow:
                 state, rej = engine.drain_strict(state, window.flat())
                 rej_acc = rej_acc + (int(rej.sum()) if legacy
                                      else rej.sum().astype(jnp.int32))
@@ -533,7 +570,7 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                     due = rounds % refresh_every == 0
                 if due:
                     # the amortized coordination point, aligned with the drain
-                    esc = engine.refresh_escrow(state, esc)
+                    esc = engine.refresh_escrow(state, esc, alive)
                     stats.refreshes += 1
     jax.block_until_ready((state, esc, commit_acc, found_acc, fract_acc,
                            rep_acc, del_acc, rej_acc))
@@ -543,11 +580,16 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
         stats.neworders = int(commit_acc)
         stats.aborts = B * n_batches - stats.neworders
         stats.cold_rejects = int(rej_acc)
+        if use_retry and final_flush:
+            # pending ring entries at run end never got their last window —
+            # flush them to the final-reject count (exact accounting)
+            stats.cold_rejects += int(np.asarray(
+                jax.device_get(retry.valid)).sum())
     stats.reads_found = int(found_acc)
     stats.fractures_observed = int(fract_acc)
     stats.lines_repaired = int(rep_acc)
     stats.deliveries = int(del_acc)
-    return state, esc, stats
+    return state, esc, stats, retry
 
 
 # ---------------------------------------------------------------------------

@@ -252,23 +252,25 @@ class Engine:
 
             @functools.partial(
                 shard_map, mesh=self.mesh,
-                in_specs=(self.state_spec, self.escrow_spec),
+                in_specs=(self.state_spec, self.escrow_spec, P()),
                 out_specs=self.escrow_spec,
                 check_vma=False)
-            def _refresh(state: TPCCState, esc):
+            def _refresh(state: TPCCState, esc, alive):
                 # THE amortized coordination point of the escrow regime:
                 # re-partition the owners' post-drain stock into fresh
                 # per-replica shares (spent resets to zero). Sparse gathers
                 # ONLY the K hot cells (one psum over [K]) instead of the
-                # dense layout's full [W, I] stock all-gather.
+                # dense layout's full [W, I] stock all-gather. ``alive``
+                # ([n_shards], replicated) reclaims dead replicas' headroom
+                # for the survivors at this boundary.
                 idx = self._shard_index()
                 if sparse:
                     return gather_and_refresh_hot_shares(
                         state, esc.keys, ax, idx, self.n_shards,
                         self.scale.n_items, idx * self.w_per_shard,
-                        self.w_per_shard)
+                        self.w_per_shard, alive=alive)
                 return gather_and_refresh_shares(state, ax, idx,
-                                                 self.n_shards)
+                                                 self.n_shards, alive=alive)
 
             @functools.partial(
                 shard_map, mesh=self.mesh,
@@ -294,6 +296,36 @@ class Engine:
                                             donate_argnums=(0, 1))
             self._refresh_escrow = jax.jit(_refresh, donate_argnums=1)
             self._drain_strict = jax.jit(_drain_strict, donate_argnums=0)
+
+            self.retry_spec = tpcc.RetryState(*([P(self.axis_names)] * 5))
+
+            @functools.partial(
+                shard_map, mesh=self.mesh,
+                in_specs=(self.state_spec, self.batch_spec,
+                          self.retry_spec, P()),
+                out_specs=(self.state_spec, self.retry_spec,
+                           self.batch_spec),
+                check_vma=False)
+            def _drain_strict_retry(state: TPCCState, outbox: StockDelta,
+                                    retry, retry_max):
+                # strict drain with the bounded owner-side retry ring: ring
+                # entries are re-presented first, fresh cold rejects requeue
+                # (up to retry_max windows) instead of silently dropping.
+                # Sparse-only (dense has no cold tier).
+                w_lo = self._shard_index() * self.w_per_shard
+                return gather_and_apply_outbox_strict_retry(
+                    state, outbox, retry, self.hot_keys, ax, w_lo,
+                    self.w_per_shard, self.scale.n_items, retry_max)
+
+            if sparse:
+                self._drain_strict_retry = jax.jit(_drain_strict_retry,
+                                                   donate_argnums=(0, 2))
+            # all-shards-live default for refresh_escrow(alive=None): with
+            # every slot live the masked partition is value-identical to
+            # the unmasked one, so the non-failure path is unchanged
+            self._alive_all = jax.device_put(
+                jnp.ones((self.n_shards,), jnp.int32),
+                NamedSharding(self.mesh, P()))
 
     # -- helpers --------------------------------------------------------------
 
@@ -352,11 +384,19 @@ class Engine:
         self._require_escrow()
         return self._neworder_escrow(state, esc, batch)
 
-    def refresh_escrow(self, state: TPCCState, esc):
+    def refresh_escrow(self, state: TPCCState, esc, alive=None):
         """The amortized coordination point: re-partition post-drain stock
-        into fresh shares (contains collectives; off the hot path)."""
+        into fresh shares (contains collectives; off the hot path).
+
+        ``alive`` ([n_shards] mask, default all-live) is liveness-aware
+        share reclamation: dead replicas' slots refresh to ZERO and their
+        headroom — already folded into post-drain stock — partitions among
+        the survivors. Zeroed slots survive the conservative min-join, so
+        reclamation never manufactures admission capacity."""
         self._require_escrow()
-        return self._refresh_escrow(state, esc)
+        if alive is None:
+            alive = self._alive_all
+        return self._refresh_escrow(state, esc, jnp.asarray(alive, jnp.int32))
 
     def drain_strict(self, state: TPCCState,
                      outbox: StockDelta) -> tuple[TPCCState, Array]:
@@ -366,6 +406,36 @@ class Engine:
         Returns (state, per-shard cold-reject counts [n_shards])."""
         self._require_escrow()
         return self._drain_strict(state, outbox)
+
+    def init_retry(self, retry_cap: int) -> tpcc.RetryState:
+        """Per-owner bounded retry ring ([n_shards, retry_cap] lanes,
+        sharded on the owner dim) for drain_strict_retry."""
+        self._require_escrow()
+        sh = NamedSharding(self.mesh, P(self.axis_names))
+        return jax.tree.map(
+            lambda x: jax.device_put(x[None].repeat(self.n_shards, 0), sh),
+            tpcc.empty_retry(retry_cap))
+
+    def retry_input_specs(self, retry_cap: int) -> tpcc.RetryState:
+        i32 = jax.ShapeDtypeStruct((self.n_shards, retry_cap), jnp.int32)
+        return tpcc.RetryState(
+            i32, i32, i32, i32,
+            jax.ShapeDtypeStruct((self.n_shards, retry_cap), jnp.bool_))
+
+    def drain_strict_retry(self, state: TPCCState, outbox: StockDelta,
+                           retry: tpcc.RetryState, retry_max=0
+                           ) -> tuple[TPCCState, tpcc.RetryState, Array]:
+        """Strict drain with the bounded cold-retry ring: owner-rejected
+        remote-cold entries are re-presented for up to ``retry_max`` drain
+        windows (a traced scalar — no recompile per value) before counting
+        as FINAL rejects. Returns (state, retry', per-shard final-reject
+        counts [n_shards]). Sparse layout only (dense has no cold tier)."""
+        self._require_escrow()
+        if self.escrow_layout != "sparse":
+            raise RuntimeError("drain_strict_retry requires the sparse "
+                               "(two-tier) escrow layout")
+        return self._drain_strict_retry(state, outbox, retry,
+                                        jnp.asarray(retry_max, jnp.int32))
 
     def escrow_bytes_per_device(self) -> dict:
         """Per-device escrow residency of this engine's layout vs the dense
@@ -445,7 +515,9 @@ class Engine:
         self._require_escrow()
         text = self._refresh_escrow.lower(
             tpcc.state_shape_dtypes(self.scale),
-            self.escrow_input_specs()).compile().as_text()
+            self.escrow_input_specs(),
+            jax.ShapeDtypeStruct((self.n_shards,), jnp.int32)
+        ).compile().as_text()
         return collective_stats(text)
 
     def lowered_order_status(self, batch_per_shard: int):
@@ -526,15 +598,16 @@ def gather_and_apply_outbox(state: TPCCState, outbox, axis_names,
 
 
 def gather_and_refresh_shares(state: TPCCState, axis_names, replica,
-                              n_shards: int) -> "EscrowCounter":
+                              n_shards: int, alive=None) -> "EscrowCounter":
     """The escrow share-refresh body, shared by Engine.refresh_escrow and
     the fused executor's drain+refresh (one definition keeps the regime's
     only coordination point bit-identical across drivers): all-gather the
     owners' current stock and re-partition it into this replica's fresh
-    share slot (spent resets to zero)."""
+    share slot (spent resets to zero). ``alive`` ([R] mask) reclaims dead
+    replicas' headroom for the survivors (tpcc.escrow_share_for)."""
     q = _multi_axis_all_gather(state.s_quantity, axis_names)
     q = q.reshape((-1, q.shape[-1]))                              # [W, I]
-    share = tpcc.escrow_share_for(q, replica, n_shards)
+    share = tpcc.escrow_share_for(q, replica, n_shards, alive=alive)
     return EscrowCounter(share[None], jnp.zeros_like(share)[None])
 
 
@@ -562,20 +635,48 @@ def gather_and_apply_outbox_strict(state: TPCCState, outbox, hot_keys,
     return state, rejects.reshape(1)
 
 
+def gather_and_apply_outbox_strict_retry(state: TPCCState, outbox, retry,
+                                         hot_keys, axis_names, w_lo,
+                                         w_per_shard, n_items: int,
+                                         retry_max) -> tuple[
+                                             TPCCState, "tpcc.RetryState",
+                                             Array]:
+    """The retry-aware sparse strict-drain body, shared by
+    Engine.drain_strict_retry and the fused executor's retry ring drain:
+    all-gather every shard's outbox and strictly apply the entries this
+    shard owns, re-presenting this owner's bounded retry ring first
+    (tpcc.apply_stock_updates_strict_tiered_retry). ``retry`` arrives as
+    the per-shard [1, C] view; returns (state, retry', final-rejects [1])."""
+    gathered = jax.tree.map(
+        lambda x: _multi_axis_all_gather(x, axis_names), outbox)
+    dst = gathered.dst_w.reshape(-1)
+    i_id = gathered.i_id.reshape(-1)
+    qty = gathered.qty.reshape(-1)
+    valid = gathered.valid.reshape(-1)
+    own = valid & (dst >= w_lo) & (dst < w_lo + w_per_shard)
+    ring = jax.tree.map(lambda x: x[0], retry)
+    state, ring, final = tpcc.apply_stock_updates_strict_tiered_retry(
+        state, hot_keys, dst, i_id, qty, own, jnp.ones_like(own), ring,
+        n_items, w_lo=w_lo, retry_max=retry_max)
+    return state, jax.tree.map(lambda x: x[None], ring), final.reshape(1)
+
+
 def gather_and_refresh_hot_shares(state: TPCCState, hot_keys, axis_names,
                                   replica, n_shards: int, n_items: int,
-                                  w_lo, w_per_shard) -> "HotSetEscrow":
+                                  w_lo, w_per_shard,
+                                  alive=None) -> "HotSetEscrow":
     """The sparse share-refresh body: sum the owners' current stock of the K
     hot cells across shards (one psum over [K] — vs the dense layout's full
     [W, I] all-gather) and re-partition it into this replica's fresh share
-    slot (spent resets to zero)."""
+    slot (spent resets to zero). ``alive`` ([R] mask) zeroes dead replicas'
+    slots and folds their headroom into the survivors' shares."""
     kw = hot_keys // n_items
     ki = hot_keys % n_items
     own = (kw >= w_lo) & (kw < w_lo + w_per_shard)
     q = jnp.where(own, state.s_quantity[jnp.where(own, kw - w_lo, 0), ki], 0)
     for a in reversed(axis_names):
         q = jax.lax.psum(q, a)
-    share = tpcc.escrow_share_for(q, replica, n_shards)
+    share = tpcc.escrow_share_for(q, replica, n_shards, alive=alive)
     return HotSetEscrow(hot_keys, share[None], jnp.zeros_like(share)[None])
 
 

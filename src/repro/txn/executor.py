@@ -62,6 +62,7 @@ from repro.utils.hlo import assert_no_collectives, collective_stats
 from . import ramp, tpcc
 from .engine import (Engine, gather_and_apply_outbox,
                      gather_and_apply_outbox_strict,
+                     gather_and_apply_outbox_strict_retry,
                      gather_and_refresh_hot_shares,
                      gather_and_refresh_shares)
 from .tpcc import (NewOrderBatch, OrderStatusBatch, PaymentBatch,
@@ -148,12 +149,17 @@ class FusedExecutor:
 
     ``ring_rows`` bounds the steps a chunk may take between drains (defaults
     to 8, the usual ``merge_every``); ``deliveries`` statically includes the
-    per-step Delivery transaction.
+    per-step Delivery transaction. ``retry_cap`` > 0 (sparse escrow only)
+    adds the bounded cold-retry ring to the drain programs: owner-rejected
+    remote-cold entries re-present for up to ``retry_max`` drain windows
+    (a runtime knob of :meth:`run_escrow`) before counting as final rejects;
+    at 0 the non-retry programs are built unchanged (bit-exact default).
     """
 
     engine: Engine
     ring_rows: int = 8
     deliveries: bool = True
+    retry_cap: int = 0
 
     def __post_init__(self):
         eng = self.engine
@@ -389,14 +395,16 @@ class FusedExecutor:
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
-            in_specs=(state_spec, shard1_spec, esc_spec),
+            in_specs=(state_spec, shard1_spec, esc_spec,
+                      jax.sharding.PartitionSpec()),
             out_specs=(state_spec, shard1_spec, esc_spec, count_spec),
             check_vma=False)
-        def _drain_refresh(state: TPCCState, ring: OutboxRing, esc):
+        def _drain_refresh(state: TPCCState, ring: OutboxRing, esc, alive):
             # the escrow regime's amortized coordination point, fused into
             # the chunk drain: apply every queued (strict) stock update, then
             # re-partition the owners' post-drain stock into fresh shares —
-            # one collective program per refresh
+            # one collective program per refresh. ``alive`` ([n_shards],
+            # replicated) reclaims dead replicas' headroom at this boundary.
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
             hot_keys = esc.keys if self._sparse else None
@@ -404,11 +412,56 @@ class FusedExecutor:
             if self._sparse:
                 esc = gather_and_refresh_hot_shares(
                     state, esc.keys, ax, idx, eng.n_shards, scale.n_items,
-                    w_lo, eng.w_per_shard)
+                    w_lo, eng.w_per_shard, alive=alive)
             else:
-                esc = gather_and_refresh_shares(state, ax, idx, eng.n_shards)
+                esc = gather_and_refresh_shares(state, ax, idx, eng.n_shards,
+                                                alive=alive)
             return state, ring._replace(
                 valid=jnp.zeros_like(ring.valid)), esc, rej
+
+        retry_spec = tpcc.RetryState(
+            *([jax.sharding.PartitionSpec(ax)] * 5))
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, retry_spec,
+                      jax.sharding.PartitionSpec()),
+            out_specs=(state_spec, shard1_spec, retry_spec, count_spec),
+            check_vma=False)
+        def _drain_strict_retry(state: TPCCState, ring: OutboxRing, retry,
+                                retry_max):
+            # strict ring drain + bounded retry: the owner's rejected cold
+            # entries re-present first, fresh rejects requeue up to
+            # retry_max windows (sparse-only; built when retry_cap > 0)
+            w_lo = eng._shard_index() * eng.w_per_shard
+            state, retry, rej = gather_and_apply_outbox_strict_retry(
+                state, ring, retry, eng.hot_keys, ax, w_lo, eng.w_per_shard,
+                scale.n_items, retry_max)
+            return state, ring._replace(
+                valid=jnp.zeros_like(ring.valid)), retry, rej
+
+        @functools.partial(
+            shard_map, mesh=eng.mesh,
+            in_specs=(state_spec, shard1_spec, retry_spec, esc_spec,
+                      jax.sharding.PartitionSpec(),
+                      jax.sharding.PartitionSpec()),
+            out_specs=(state_spec, shard1_spec, retry_spec, esc_spec,
+                       count_spec),
+            check_vma=False)
+        def _drain_refresh_retry(state: TPCCState, ring: OutboxRing, retry,
+                                 esc, alive, retry_max):
+            # fused retry drain + reclaiming share refresh — still one
+            # collective program per refresh boundary
+            idx = eng._shard_index()
+            w_lo = idx * eng.w_per_shard
+            state, retry, rej = gather_and_apply_outbox_strict_retry(
+                state, ring, retry, eng.hot_keys, ax, w_lo, eng.w_per_shard,
+                scale.n_items, retry_max)
+            esc = gather_and_refresh_hot_shares(
+                state, esc.keys, ax, idx, eng.n_shards, scale.n_items,
+                w_lo, eng.w_per_shard, alive=alive)
+            return state, ring._replace(
+                valid=jnp.zeros_like(ring.valid)), retry, esc, rej
 
         # donation: the executor owns ONE live copy of state/ring/counters
         # for the whole run — every call consumes its buffers and hands the
@@ -425,6 +478,15 @@ class FusedExecutor:
         self._drain_strict = jax.jit(_drain_strict, donate_argnums=(0, 1))
         self._drain_refresh = jax.jit(_drain_refresh,
                                       donate_argnums=(0, 1, 2))
+        if self.retry_cap > 0:
+            if not self._sparse:
+                raise ValueError("retry_cap > 0 requires the sparse "
+                                 "(two-tier) escrow layout — the retry ring "
+                                 "holds cold-tier entries")
+            self._drain_strict_retry = jax.jit(_drain_strict_retry,
+                                               donate_argnums=(0, 1, 2))
+            self._drain_refresh_retry = jax.jit(_drain_refresh_retry,
+                                                donate_argnums=(0, 1, 2, 3))
 
     # -- device buffers ------------------------------------------------------
 
@@ -479,10 +541,41 @@ class FusedExecutor:
         at the owner). Returns (state, ring, per-shard cold rejects)."""
         return self._drain_strict(state, ring)
 
-    def drain_refresh(self, state: TPCCState, ring: OutboxRing, esc):
+    def drain_refresh(self, state: TPCCState, ring: OutboxRing, esc,
+                      alive=None):
         """Strict drain + escrow share refresh fused into one collective
-        program. Returns (state, ring, esc, per-shard cold rejects)."""
-        return self._drain_refresh(state, ring, esc)
+        program. Returns (state, ring, esc, per-shard cold rejects).
+        ``alive`` ([n_shards] mask, default all-live) reclaims dead
+        replicas' share headroom for the survivors."""
+        if alive is None:
+            alive = self.engine._alive_all
+        return self._drain_refresh(state, ring, esc,
+                                   jnp.asarray(alive, jnp.int32))
+
+    def init_retry(self):
+        """Per-owner retry ring buffers ([n_shards, retry_cap])."""
+        if self.retry_cap <= 0:
+            raise RuntimeError("executor built with retry_cap=0")
+        return self.engine.init_retry(self.retry_cap)
+
+    def drain_strict_retry(self, state: TPCCState, ring: OutboxRing,
+                           retry, retry_max=0):
+        """Retry-aware strict ring drain. Returns (state, ring, retry',
+        per-shard FINAL-reject counts) — entries still in the ring are
+        pending, not rejected."""
+        return self._drain_strict_retry(state, ring, retry,
+                                        jnp.asarray(retry_max, jnp.int32))
+
+    def drain_refresh_retry(self, state: TPCCState, ring: OutboxRing,
+                            retry, esc, alive=None, retry_max=0):
+        """Retry-aware drain + reclaiming share refresh (one collective
+        program). Returns (state, ring, retry', esc, per-shard final
+        rejects)."""
+        if alive is None:
+            alive = self.engine._alive_all
+        return self._drain_refresh_retry(state, ring, retry, esc,
+                                         jnp.asarray(alive, jnp.int32),
+                                         jnp.asarray(retry_max, jnp.int32))
 
     def run(self, state: TPCCState, chunks: Sequence[MixChunk],
             *, warmup: bool = True, obs=None
@@ -552,19 +645,32 @@ class FusedExecutor:
     def run_escrow(self, state: TPCCState, esc, chunks: Sequence[MixChunk],
                    *, refresh_every: int = 1,
                    refresh_abort_rate: float | None = None,
-                   warmup: bool = True, obs=None
+                   warmup: bool = True, obs=None,
+                   retry=None, retry_max: int = 0, alive=None,
+                   final_flush: bool = True
                    ) -> tuple[TPCCState, object, MixCounters,
-                              float, int, int]:
+                              float, int, int, object]:
         """Escrow-regime drive: scan megastep + one strict drain per chunk;
         the escrow shares refresh every ``refresh_every``-th drain (fused
         into the same collective program), or adaptively when any replica's
         abort rate since the last refresh crosses ``refresh_abort_rate`` —
         adaptive control reads the on-device abort counters once per chunk
-        (the one host sync the fixed cadence does not pay). Returns
-        (state, esc, counters, wall_seconds, refreshes, cold_rejects)."""
+        (the one host sync the fixed cadence does not pay).
+
+        With ``retry_cap`` > 0 the drains run their retry-aware variants:
+        ``retry`` (default fresh ring) carries owner-rejected cold entries
+        across windows for up to ``retry_max`` presentations, and
+        ``cold_rejects`` counts FINAL rejects only; ``final_flush`` adds the
+        run-end pending ring entries to that count (set False when the ring
+        is checkpointed and the run will resume). ``alive`` ([n_shards]
+        mask) threads share reclamation into each refresh. Returns (state,
+        esc, counters, wall_seconds, refreshes, cold_rejects, retry)."""
         if not self._escrow:
             raise RuntimeError("executor is not in the escrow regime "
                                "(engine plan says merge) — use run()")
+        use_retry = self.retry_cap > 0
+        if use_retry and retry is None:
+            retry = self.init_retry()
         batch_per_shard = chunks[0].neworder.w.shape[1] // self.engine.n_shards
         state = self.engine.shard_state(state)
         ring = self.init_ring(batch_per_shard)
@@ -589,8 +695,14 @@ class FusedExecutor:
                     w = self.megastep_escrow(copy(state), copy(ring),
                                              copy(counters), copy(esc),
                                              chunk)
-                w2 = self.drain_refresh(w[0], w[1], w[3])
-                jax.block_until_ready(self.drain_strict(w2[0], w2[1]))
+                if use_retry:
+                    w2 = self.drain_refresh_retry(w[0], w[1], copy(retry),
+                                                  w[3], alive, retry_max)
+                    jax.block_until_ready(self.drain_strict_retry(
+                        w2[0], w2[1], w2[2], retry_max))
+                else:
+                    w2 = self.drain_refresh(w[0], w[1], w[3], alive)
+                    jax.block_until_ready(self.drain_strict(w2[0], w2[1]))
             if metrics is not None:
                 jax.block_until_ready(
                     self._fold_counters(copy(metrics), counters))
@@ -635,14 +747,23 @@ class FusedExecutor:
                 due = (ci + 1) % refresh_every == 0
             if due:
                 with span("share-refresh"):
-                    state, ring, esc, rej = self.drain_refresh(state, ring,
-                                                               esc)
+                    if use_retry:
+                        state, ring, retry, esc, rej = \
+                            self.drain_refresh_retry(state, ring, retry,
+                                                     esc, alive, retry_max)
+                    else:
+                        state, ring, esc, rej = self.drain_refresh(
+                            state, ring, esc, alive)
                     if obs is not None:
                         obs.maybe_sync(esc)
                 refreshes += 1
             else:
                 with span("outbox-drain"):
-                    state, ring, rej = self.drain_strict(state, ring)
+                    if use_retry:
+                        state, ring, retry, rej = self.drain_strict_retry(
+                            state, ring, retry, retry_max)
+                    else:
+                        state, ring, rej = self.drain_strict(state, ring)
                     if obs is not None:
                         obs.maybe_sync(ring)
             rejs.append(rej)
@@ -657,7 +778,12 @@ class FusedExecutor:
                 metrics = obsm.add_cold_rejects(metrics, rej)
             obs.device_metrics = self._fold_counters(metrics, counters)
         cold = int(np.asarray(jax.device_get(rejs)).sum()) if rejs else 0
-        return state, esc, counters, wall, refreshes, cold
+        if use_retry and final_flush:
+            # entries still pending in the ring when the run ends never got
+            # their retry_max-th window — surface them as final rejects so
+            # optimistic admits == applied + cold_rejects holds exactly
+            cold += int(np.asarray(jax.device_get(retry.valid)).sum())
+        return state, esc, counters, wall, refreshes, cold, retry
 
     # -- structural proofs ---------------------------------------------------
 
@@ -777,21 +903,35 @@ class FusedExecutor:
         text = self._drain_refresh.lower(
             tpcc.state_shape_dtypes(self.engine.scale),
             self._ring_specs(batch_per_shard),
-            self.engine.escrow_input_specs()).compile().as_text()
+            self.engine.escrow_input_specs(),
+            jax.ShapeDtypeStruct((self.engine.n_shards,), jnp.int32)
+        ).compile().as_text()
+        return collective_stats(text)
+
+    def count_drain_strict_retry_collectives(self, batch_per_shard: int = 8):
+        """The retry-aware ring drain: same collective budget as the
+        non-retry drain (the retry ring is owner-local, never gathered)."""
+        text = self._drain_strict_retry.lower(
+            tpcc.state_shape_dtypes(self.engine.scale),
+            self._ring_specs(batch_per_shard),
+            self.engine.retry_input_specs(self.retry_cap),
+            jax.ShapeDtypeStruct((), jnp.int32)).compile().as_text()
         return collective_stats(text)
 
 
 def get_fused_executor(engine: Engine, ring_rows: int = 8,
-                       deliveries: bool = True) -> FusedExecutor:
+                       deliveries: bool = True,
+                       retry_cap: int = 0) -> FusedExecutor:
     """Memoized per-engine executor: repeated runs (benchmark sweeps, the
     closed-loop drivers) reuse one jit cache instead of recompiling."""
     cache = getattr(engine, "_fused_executors", None)
     if cache is None:
         cache = engine._fused_executors = {}
-    key = (ring_rows, deliveries)
+    key = (ring_rows, deliveries, retry_cap)
     if key not in cache:
         cache[key] = FusedExecutor(engine, ring_rows=ring_rows,
-                                   deliveries=deliveries)
+                                   deliveries=deliveries,
+                                   retry_cap=retry_cap)
     return cache[key]
 
 

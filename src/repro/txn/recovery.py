@@ -1,0 +1,201 @@
+"""Crash-safe run recovery: engine state + escrow + retry ring as ONE tree.
+
+The failure-tolerance loop (paper §6.2 strategy on storage + ISSUE 8):
+
+* :func:`save_run` bundles the full escrow-regime run image —
+  ``TPCCState`` + the escrow shares/spent + the cold-retry ring — into a
+  single checkpoint tree and pushes it through the manifest-lattice layer
+  (``repro.ckpt.checkpoint``): coordination-free shard writes, temp-id
+  manifests, then the atomic ``assign_sequential`` commit.  A crash at ANY
+  point of the save leaves ``latest_manifest`` returning the previous
+  committed checkpoint (tmp + ``os.replace`` discipline; exercised by
+  tests/test_ckpt.py and tests/test_failures.py).
+* :func:`restore_run` rebuilds that tree from the newest recoverable
+  manifest, device_putting every leaf under the engine's shardings so a
+  killed shard restarts and rejoins a run mid-stream through
+  ``txn.drivers.run_loop(engine, r.state, r.esc, retry=r.retry, ...)``.
+
+What makes the bundle sufficient for exact accounting: the retry ring IS
+run state — pending owner-rejected cold entries are neither applied nor
+finally rejected yet, so checkpointing state without the ring would either
+lose those entries (under-count) or double-apply them on replay.  Saving
+with ``drivers.run_loop(..., final_flush=False, return_retry=True)`` at a
+drain boundary keeps the optimistic-admit == applied + final-reject ledger
+exact across kill/recover cycles (tests/test_failures.py asserts it).
+
+Escrow shares need no replay on recovery: they are re-derivable from
+post-drain stock (``engine.refresh_escrow`` with a liveness mask), but the
+checkpoint stores them anyway so a restore is bit-identical to the killed
+image rather than merely safe.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.lattice import EscrowCounter, HotSetEscrow
+from repro.txn import tpcc
+
+__all__ = ["RestoredRun", "save_run", "restore_run"]
+
+
+class RestoredRun(NamedTuple):
+    """restore_run's result: the run image + where it came from."""
+
+    state: tpcc.TPCCState
+    esc: Any                 # HotSetEscrow | EscrowCounter | None
+    retry: Any               # tpcc.RetryState | None
+    step: int                # manifest step (drain-window index at save)
+    manifest: ckpt.Manifest
+
+
+def save_run(directory: str, state: tpcc.TPCCState, step: int, *,
+             esc=None, retry=None, writer: str = "w0",
+             commit: bool = True) -> ckpt.Manifest:
+    """Checkpoint the run image through the manifest lattice.
+
+    Writes the shard file + temp manifest (coordination-free), then — when
+    ``commit`` — runs the atomic sequential-ID commit.  ``commit=False``
+    models a writer that dies before the commit step: the temp manifest is
+    on disk and joinable, but ``latest_manifest`` still prefers the last
+    committed generation (crash-safety tests use this hook).
+    """
+    tree: dict[str, Any] = {"state": state}
+    if esc is not None:
+        tree["esc"] = esc
+    if retry is not None:
+        tree["retry"] = retry
+    man = ckpt.save(directory, tree, step, writer=writer)
+    if commit:
+        man = ckpt.assign_sequential(directory, man)
+    return man
+
+
+def _peek_shape(directory: str, man: ckpt.Manifest, name: str) -> tuple:
+    """Shape of one saved leaf without materializing the whole file —
+    the retry ring's capacity is a save-time choice, not an engine
+    attribute, so restore recovers it from the checkpoint itself."""
+    with np.load(os.path.join(directory, man.shards[name])) as z:
+        return tuple(z[name.replace("/", "__")].shape)
+
+
+def restore_run(directory: str, engine=None, *,
+                manifest: Optional[ckpt.Manifest] = None
+                ) -> Optional[RestoredRun]:
+    """Rebuild a :func:`save_run` image from the newest recoverable manifest.
+
+    With ``engine`` given, every leaf is device_put under the engine's
+    shardings (state on the warehouse dim, escrow rows / retry lanes on the
+    replica dim) — the elastic-restore property of the checkpoint layer
+    means the saving and restoring meshes need not match.  ``engine=None``
+    restores host-side arrays (the pod-simulator path).  Returns ``None``
+    when the directory holds no recoverable manifest at all; raises when
+    the newest manifest is incomplete (the FK-style completeness invariant
+    — a partial writer set is detectable, not silently restorable).
+    """
+    man = manifest if manifest is not None else ckpt.latest_manifest(directory)
+    if man is None:
+        return None
+    names = set(man.shards)
+
+    if engine is not None:
+        abstract: dict[str, Any] = {"state": tpcc.state_shape_dtypes(engine.scale)}
+        st = NamedSharding(engine.mesh, engine.state_spec)
+        shardings: Optional[dict] = {
+            "state": jax.tree.map(lambda _: st, abstract["state"])}
+    else:
+        # host-side restore (pod simulator): no engine to ask for the
+        # scale, so recover it from the saved array shapes themselves
+        if not any(n.startswith("state/") for n in names):
+            raise ValueError("manifest has no state leaves")
+        abstract = {"state": tpcc.state_shape_dtypes(
+            _scale_from_saved(directory, man))}
+        shardings = None
+
+    if any(n.startswith("esc/") for n in names):
+        if engine is not None:
+            abstract["esc"] = engine.escrow_input_specs()
+            if engine.escrow_layout == "sparse":
+                rep = NamedSharding(engine.mesh, P())
+                row = NamedSharding(engine.mesh, P(engine.axis_names))
+                shardings["esc"] = HotSetEscrow(rep, row, row)
+            else:
+                sh = NamedSharding(engine.mesh, engine.escrow_spec)
+                shardings["esc"] = EscrowCounter(sh, sh)
+        else:
+            abstract["esc"] = _escrow_abstract(directory, man, names)
+
+    retry_names = sorted(n for n in names if n.startswith("retry/"))
+    if retry_names:
+        shape = _peek_shape(directory, man, retry_names[0])
+        i32 = jax.ShapeDtypeStruct(shape, jnp.int32)
+        abstract["retry"] = tpcc.RetryState(
+            i32, i32, i32, i32, jax.ShapeDtypeStruct(shape, jnp.bool_))
+        if engine is not None:
+            # engine rings are [n_shards, C] on the owner dim; anything
+            # else (host-side per-replica rings) restores replicated
+            lanes = (NamedSharding(engine.mesh, P(engine.axis_names))
+                     if len(shape) == 2 and shape[0] == engine.n_shards
+                     else NamedSharding(engine.mesh, P()))
+            shardings["retry"] = tpcc.RetryState(*([lanes] * 5))
+
+    if not ckpt.is_complete(man, abstract):
+        missing = ({n for n, _ in _leaf_names(abstract)} - names)
+        raise ValueError(f"manifest {man.temp_id or man.seq_id} is "
+                         f"incomplete: missing {sorted(missing)[:4]}...")
+    out = ckpt.restore(directory, man, abstract, shardings)
+    return RestoredRun(out["state"], out.get("esc"), out.get("retry"),
+                       int(man.step), man)
+
+
+def _leaf_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield ("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path) or "leaf"), leaf
+
+
+def _scale_from_saved(directory: str, man: ckpt.Manifest) -> tpcc.TPCCScale:
+    """Recover the TPCCScale from saved array shapes (host-side restore has
+    no engine to ask): s_quantity -> [W, I], ol_qty -> [W, D, OC, L],
+    customers from c_balance."""
+    by_name = {}
+    for name in man.shards:
+        if name.startswith("state/"):
+            by_name[name] = _peek_shape(directory, man, name)
+    def shape_of(field):
+        # NamedTuple path keys stringify as ".field" under the checkpoint
+        # layer's naming scheme
+        for key in (f"state/.{field}", f"state/{field}"):
+            if key in by_name:
+                return by_name[key]
+        raise KeyError(field)
+    W, I = shape_of("s_quantity")
+    _, D, C = shape_of("c_balance")
+    _, _, OC, L = shape_of("ol_qty")
+    return tpcc.TPCCScale(n_warehouses=W, districts=D, customers=C,
+                          n_items=I, order_capacity=OC, max_lines=L)
+
+
+def _escrow_abstract(directory: str, man: ckpt.Manifest, names) -> Any:
+    """Abstract escrow tree from saved shapes (host-side restore)."""
+    esc_names = sorted(n for n in names if n.startswith("esc/"))
+    if len(esc_names) == 3:          # HotSetEscrow(keys, shares, spent)
+        shapes = {n: _peek_shape(directory, man, n) for n in esc_names}
+        one_d = [n for n in esc_names if len(shapes[n]) == 1]
+        two_d = [n for n in esc_names if len(shapes[n]) == 2]
+        if len(one_d) == 1 and len(two_d) == 2:
+            return HotSetEscrow(
+                jax.ShapeDtypeStruct(shapes[one_d[0]], jnp.int32),
+                jax.ShapeDtypeStruct(shapes[two_d[0]], jnp.int32),
+                jax.ShapeDtypeStruct(shapes[two_d[1]], jnp.int32))
+    shapes = [_peek_shape(directory, man, n) for n in esc_names]
+    return EscrowCounter(jax.ShapeDtypeStruct(shapes[0], jnp.int32),
+                         jax.ShapeDtypeStruct(shapes[1], jnp.int32))

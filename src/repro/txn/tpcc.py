@@ -454,7 +454,7 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
 # ---------------------------------------------------------------------------
 
 
-def escrow_share_for(s_quantity, replica, num_replicas: int):
+def escrow_share_for(s_quantity, replica, num_replicas: int, alive=None):
     """Replica ``replica``'s share of every stock cell — THE partition
     formula (one definition: init, refresh, and the fused drain+refresh all
     call it, so the audit's conservation law can never desynchronize).
@@ -462,10 +462,25 @@ def escrow_share_for(s_quantity, replica, num_replicas: int):
     ``q // R`` each, with the remainder going to the lowest replica slots;
     ``replica`` may be a traced scalar (shard index) or a broadcastable
     array of slot ids.
+
+    ``alive`` (optional ``[R]`` bool/int mask) is the liveness-aware
+    reclaim: only the replicas marked live partition the headroom — a dead
+    replica's slot gets ZERO (its unspent headroom, already folded back
+    into the post-drain stock, lands with the survivors) and the remainder
+    goes to the lowest LIVE ranks. With every replica live this reduces
+    bit-exactly to the unmasked formula (rank == replica id), and the sum
+    over slots equals ``q`` exactly either way — capacity is moved, never
+    manufactured.
     """
     q = jnp.asarray(s_quantity, jnp.int32)
     r = jnp.asarray(replica, jnp.int32)
-    return q // num_replicas + (r < q % num_replicas).astype(jnp.int32)
+    if alive is None:
+        return q // num_replicas + (r < q % num_replicas).astype(jnp.int32)
+    alive_i = jnp.asarray(alive, jnp.int32)                   # [R]
+    n_live = jnp.maximum(alive_i.sum(), 1)
+    rank = jnp.take(jnp.cumsum(alive_i) - 1, r)               # live rank
+    share = q // n_live + (rank < q % n_live).astype(jnp.int32)
+    return jnp.take(alive_i, r) * share
 
 
 def make_escrow_shares(s_quantity, num_replicas: int):
@@ -885,6 +900,142 @@ def apply_stock_updates_strict_tiered(state: TPCCState, hot_keys: Array,
                                 (mask & is_hot) | admit_cold, remote,
                                 restock=False)
     return state, rejects
+
+
+class RetryState(NamedTuple):
+    """Bounded on-device retry ring for owner-rejected remote-cold entries.
+
+    Fixed capacity C per owner shard; ``valid`` marks live lanes. Every
+    entry is, by construction, a cold cell OWNED by the holding shard (it
+    was rejected by this owner's own all-or-nothing drain), so re-presenting
+    it needs no routing and no collectives — the ring lives and dies inside
+    the owner's drain program. ``tries`` counts drain windows the entry has
+    already lost; at ``retry_max`` it surfaces as a FINAL reject instead of
+    silently dropping on the first miss.
+    """
+
+    dst_w: Array  # [C] int32 GLOBAL destination warehouse
+    i_id: Array   # [C] int32
+    qty: Array    # [C] int32
+    tries: Array  # [C] int32 drain windows already lost
+    valid: Array  # [C] bool
+
+
+def empty_retry(capacity: int) -> RetryState:
+    return RetryState(jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.bool_))
+
+
+def apply_stock_updates_strict_tiered_retry(
+        state: TPCCState, hot_keys: Array, dst_w: Array, i_idx: Array,
+        qty: Array, mask: Array, remote: Array, retry: RetryState,
+        n_items: int, w_lo: int = 0, retry_max: Array | int = 0
+        ) -> tuple[TPCCState, RetryState, Array]:
+    """Strict tiered drain with a bounded retry ring (two passes).
+
+    Pass 1 re-presents the ring (entries this owner rejected in earlier
+    windows — all cold, all owned here) with per-cell GREEDY-BY-AGE
+    admission: entries sort by (cell, tries desc, qty asc) and admit while
+    their cell's cumulative demand fits the current stock. Greedy (not the
+    window's all-or-nothing) is what makes retrying meaningful at all —
+    cold stock is monotone non-increasing under the strict regime, so a
+    cohort whose TOTAL was rejected once would be rejected forever; the
+    prefix rule instead lands whatever subset fits, oldest first. The
+    priority is a pure function of the entry (cell, tries, qty), so
+    admission depends only on the ring's entry MULTISET — lane order,
+    which differs between the fused ring and the dispatch driver's
+    windows, cannot change the outcome (entries tied on all three keys
+    are interchangeable).
+
+    Pass 2 is bit-identical to :func:`apply_stock_updates_strict_tiered`
+    over the fresh window, run against the post-pass-1 stock (per-cell
+    all-or-nothing on the window total, order-invariant as before).
+
+    Losers requeue: a ring entry that has now lost ``retry_max`` windows
+    becomes a FINAL reject; a fresh cold reject enqueues with tries=0 (or
+    final-rejects immediately when ``retry_max`` — a traced scalar, no
+    recompiles per value — is 0). The survivor set compacts ring-first into
+    the fixed [C] ring; overflow beyond C surfaces as final rejects rather
+    than silent drops. With ``retry_max=0`` and an empty ring this is
+    bit-exactly the non-retry drain (pass 1's masked scatter-adds of zero
+    are bitwise identity). Returns (state, retry', final-reject count).
+    """
+    retry_max = jnp.asarray(retry_max, jnp.int32)
+    C = retry.valid.shape[0]
+
+    # -- pass 1: ring entries (cold, owned here, remote to their senders) --
+    r_valid = retry.valid
+    r_w = jnp.where(r_valid, retry.dst_w - w_lo, 0)
+    r_i = jnp.where(r_valid, retry.i_id, 0)
+    r_cell = jnp.where(r_valid, retry.dst_w * n_items + retry.i_id,
+                       jnp.iinfo(jnp.int32).max)          # invalid sort last
+    order = jnp.lexsort((retry.qty, -retry.tries, r_cell))
+    c_s = r_cell[order]
+    q_s = jnp.where(r_valid, retry.qty, 0)[order]
+    v_s = r_valid[order]
+    csum = jnp.cumsum(q_s)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), c_s[1:] != c_s[:-1]])
+    # cumulative demand within each cell segment (incl. self): csum minus
+    # the running total at the segment's start — recoverable by cummax
+    # because csum is non-decreasing
+    prefix = csum - jax.lax.cummax(jnp.where(seg_start, csum - q_s, 0))
+    stock_s = state.s_quantity[
+        jnp.where(v_s, retry.dst_w[order] - w_lo, 0),
+        jnp.where(v_s, retry.i_id[order], 0)]
+    r_admit = jnp.zeros_like(r_valid).at[order].set(
+        v_s & (prefix <= stock_s))
+    state = apply_stock_updates(state, r_w, r_i, retry.qty, r_admit,
+                                jnp.ones_like(r_admit), restock=False)
+    r_rej = r_valid & ~r_admit
+    r_tries = retry.tries + 1
+    r_final = r_rej & (r_tries >= retry_max)
+    r_requeue = r_rej & (r_tries < retry_max)
+
+    # -- pass 2: fresh window vs post-pass-1 stock (same formulas as the
+    # non-retry drain) --
+    key = dst_w * n_items + i_idx
+    _, is_hot = hot_position(hot_keys, key)
+    w_idx = jnp.where(mask, dst_w - w_lo, 0)
+    i_l = jnp.where(mask, i_idx, 0)
+    cold = mask & ~is_hot
+    demand = jnp.zeros_like(state.s_quantity).at[
+        jnp.where(cold, w_idx, 0), jnp.where(cold, i_l, 0)].add(
+        jnp.where(cold, qty, 0))
+    admit_cold = cold & (demand <= state.s_quantity)[w_idx, i_l]
+    state = apply_stock_updates(state, w_idx, i_l, qty,
+                                (mask & is_hot) | admit_cold, remote,
+                                restock=False)
+    f_rej = cold & ~admit_cold
+    f_requeue = f_rej & (retry_max > 0)
+    f_final = f_rej & (retry_max <= 0)
+
+    # -- compact survivors ring-first into the fixed [C] ring --
+    cand_keep = jnp.concatenate([r_requeue, f_requeue])
+    cand_w = jnp.concatenate([retry.dst_w, dst_w])
+    cand_i = jnp.concatenate([retry.i_id, i_idx])
+    cand_q = jnp.concatenate([retry.qty, qty])
+    cand_t = jnp.concatenate([r_tries, jnp.zeros_like(dst_w)])
+    rank = jnp.cumsum(cand_keep.astype(jnp.int32)) - 1
+    keep = cand_keep & (rank < C)
+    overflow = cand_keep & (rank >= C)
+    # scatter through a [C+1] buffer: every dropped entry lands on the dump
+    # slot C (discarded by the slice), kept entries on their unique rank
+    slot = jnp.where(keep, rank, C)
+
+    def _pack(vals, fill_dtype):
+        buf = jnp.zeros((C + 1,), fill_dtype)
+        return buf.at[slot].set(
+            jnp.where(keep, vals, 0).astype(fill_dtype))[:C]
+
+    new_retry = RetryState(_pack(cand_w, jnp.int32), _pack(cand_i, jnp.int32),
+                           _pack(cand_q, jnp.int32), _pack(cand_t, jnp.int32),
+                           _pack(keep, jnp.bool_))
+    final = (r_final.sum() + f_final.sum() + overflow.sum()).astype(jnp.int32)
+    return state, new_retry, final
 
 
 # ---------------------------------------------------------------------------

@@ -85,6 +85,77 @@ def test_elastic_restore_new_sharding():
         assert jnp.array_equal(out["params"]["b"], s["params"]["b"])
 
 
+def test_mid_commit_crash_leaves_previous_committed(monkeypatch):
+    """Fault injection: the writer dies between bumping SEQUENCE and
+    publishing the committed manifest. With atomic (temp + os.replace)
+    writes the directory holds either the old commit or the new one —
+    ``latest_manifest`` must return the previous committed checkpoint,
+    never a parse error or a truncated manifest."""
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        man0 = ck.save(d, s, step=1)
+        committed0 = ck.assign_sequential(d, man0)        # ckpt-000000
+        man1 = ck.save(d, s, step=2)
+        real_replace = os.replace
+
+        def crash_on_manifest(src, dst):
+            if dst.endswith(".manifest.json"):
+                raise RuntimeError("killed mid-commit")   # power cut
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(ck.os, "replace", crash_on_manifest)
+        with pytest.raises(RuntimeError):
+            ck.assign_sequential(d, man1)
+        monkeypatch.setattr(ck.os, "replace", real_replace)
+        latest = ck.latest_manifest(d)
+        assert latest is not None
+        assert latest.seq_id == committed0.seq_id == 0
+        assert latest.step == 1
+        # the torn commit left no committed manifest at all (only tmp
+        # debris) — a fresh assigner can still commit cleanly
+        man2 = ck.assign_sequential(d, ck.save(d, s, step=3))
+        assert ck.latest_manifest(d).seq_id == man2.seq_id
+
+
+def test_truncated_manifests_and_sequence_are_skipped():
+    """Legacy (pre-atomic-write) corruption on disk: a truncated committed
+    manifest is skipped in favor of the previous committed one, and a
+    garbage SEQUENCE is re-derived from the committed IDs."""
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        man0 = ck.assign_sequential(d, ck.save(d, s, step=1))  # ckpt-000000
+        good = ck.save(d, s, step=2)
+        torn = os.path.join(d, "ckpt-000001.manifest.json")
+        with open(torn, "w") as f:
+            f.write(good.to_json()[:25])          # half-written JSON
+        latest = ck.latest_manifest(d)
+        assert latest.seq_id == man0.seq_id == 0  # fell back, no crash
+        with open(os.path.join(d, "SEQUENCE"), "w") as f:
+            f.write("1x")                         # truncated counter
+        man2 = ck.assign_sequential(d, ck.save(d, s, step=3))
+        assert man2.seq_id == 2                   # max committed id + 1
+        assert ck.latest_manifest(d).seq_id == 2
+
+
+def test_newest_temp_is_by_writer_time_not_filename():
+    """Regression: temp ids are random uuid hex, so lexicographic filename
+    order picks an arbitrary generation. Two temp generations written out
+    of lexical order must resolve to the newest writer_meta timestamp."""
+    def _write_temp(d, temp_id, t, step):
+        man = ck.Manifest(step=step, temp_id=temp_id,
+                          shards={"x": f"{temp_id}-w0.npz"},
+                          writer_meta={"w0": {"time": t, "n_shards": 1}})
+        with open(os.path.join(d, f"{temp_id}-w0.manifest.json"), "w") as f:
+            f.write(man.to_json())
+
+    with tempfile.TemporaryDirectory() as d:
+        _write_temp(d, "zz-old-gen", t=100.0, step=1)   # sorts LAST
+        _write_temp(d, "aa-new-gen", t=200.0, step=2)   # sorts first
+        latest = ck.latest_manifest(d)
+        assert latest.temp_id == "aa-new-gen"
+        assert latest.step == 2
+
+
 def test_digit_prefixed_temp_id_does_not_shadow_committed():
     """Regression: temp ids are random hex, so ~6% begin with six digits —
     a temp manifest (seq_id=None) must never sort above a committed

@@ -1,0 +1,299 @@
+"""Liveness-aware share reclamation property tests.
+
+Protocol level: a host-side model of escrow refresh with a liveness mask —
+dead replicas' slots refresh to ZERO and their headroom partitions among
+the survivors (``HotSetEscrow.make(..., alive=...)`` does the share math,
+so the code under test computes every partition).  For ARBITRARY
+interleavings of spends, drains, kills, recoveries, hot-set
+promote/demote, and reclaim-refreshes:
+
+* no cell's stock ever goes negative and total applied spend never exceeds
+  the initial inventory (reclamation never manufactures admission
+  capacity);
+* a recovered replica adopting the current share table via the
+  conservative join (min shares / max spent) never sees more headroom than
+  the table grants it;
+* shares partition their budgets EXACTLY through every promote / demote /
+  reclaim combination (conservation).
+
+The control: a NAIVE reclaim that folds dead headroom into survivors while
+keeping the dead row (what a max-join of old and new share tables would
+do) lets a resurrected replica spend its stale share on top of the
+reclaimed copy — provably overselling.  Zeroing the dead slot is the
+load-bearing half of reclamation, not an optimization.
+
+Deterministic seeded sweep always runs; hypothesis search runs where
+hypothesis is installed.
+"""
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: deterministic sweep only
+    HAVE_HYPOTHESIS = False
+
+from repro.core.lattice import HotSetEscrow
+
+R = 4          # replicas
+CELLS = 6      # keyspace (hot set is a subset chosen at refresh time)
+
+
+def _make_shares(keys: np.ndarray, budgets: np.ndarray,
+                 alive: np.ndarray) -> np.ndarray:
+    """The real share math: HotSetEscrow.make with the liveness mask."""
+    esc = HotSetEscrow.make(R, keys.astype(np.int32),
+                            budgets.astype(np.int32),
+                            alive=alive.astype(np.int32))
+    return np.asarray(esc.shares, np.int64)
+
+
+class _ReclaimModel:
+    """Escrow refresh/kill/recover replay over CELLS independent cells.
+
+    ``naive_reclaim=True`` is the oversell control: refresh computes the
+    survivor partition over the FULL budget but keeps dead rows at their
+    stale values (a max-join of the old and new share tables), so a
+    resurrected replica's stale share comes on top of the reclaimed copy.
+    """
+
+    def __init__(self, seed: int, naive_reclaim: bool = False):
+        rng = np.random.default_rng(seed)
+        self.q0 = rng.integers(5, 41, CELLS).astype(np.int64)
+        self.stock = self.q0.copy()          # authoritative (owner) stock
+        self.applied = np.zeros(CELLS, np.int64)
+        self.alive = np.ones(R, bool)
+        self.naive = naive_reclaim
+        self.oversold = False
+        self.hot = np.arange(CELLS)          # current hot set (cell ids)
+        self.shares = _make_shares(self.hot, self.stock[self.hot],
+                                   np.ones(R))
+        self.spent = np.zeros_like(self.shares)
+        # admitted-but-unshipped spends per replica: (cell, qty)
+        self.outbox = [[] for _ in range(R)]
+        # dead replicas' last table rows, snapshotted at refresh time
+        self._stale = {}
+
+    # -- ops -----------------------------------------------------------------
+
+    def spend(self, r: int, cell: int, amt: int) -> None:
+        if not self.alive[r]:
+            return
+        pos = np.where(self.hot == cell % CELLS)[0]
+        if pos.size == 0:
+            return                            # cell not hot this epoch
+        k = int(pos[0])
+        take = min(amt, int(self.shares[r, k] - self.spent[r, k]))
+        if take <= 0:
+            return
+        self.spent[r, k] += take
+        self.outbox[r].append((int(self.hot[k]), take))
+
+    def drain(self) -> None:
+        """Owners apply every live replica's shipped spends (hot entries
+        apply unconditionally — the shares are the admission)."""
+        for r in range(R):
+            if not self.alive[r]:
+                continue
+            for cell, qty in self.outbox[r]:
+                self.stock[cell] -= qty
+                self.applied[cell] += qty
+            self.outbox[r] = []
+        if np.any(self.stock < 0):
+            self.oversold = True
+
+    def kill(self, r: int) -> None:
+        """Crash: the replica's unshipped spends are lost with it (spent
+        share wasted — the safe direction)."""
+        self.alive[r] = False
+        self.outbox[r] = []
+
+    def recover(self, r: int) -> None:
+        """Rejoin via the conservative join of the replica's stale view
+        with the current table: min shares / max spent — never more
+        headroom than the current table grants.  (If the hot set churned
+        while the replica was dead, its stale view is not joinable
+        cellwise; it adopts the current — possibly zeroed — row, the
+        strictly conservative fallback.)  The naive control skips the
+        join: the table row it resurrected with (kept stale by the naive
+        refresh) is spendable as-is."""
+        self.alive[r] = True
+        if self.naive:
+            return
+        stale = self._stale.get(r)
+        if stale is None or stale[0].shape[0] != self.shares.shape[1]:
+            return
+        joined_shares = np.minimum(stale[0], self.shares[r])
+        joined_spent = np.maximum(stale[1], self.spent[r])
+        assert np.all(joined_shares - joined_spent
+                      <= self.shares[r] - self.spent[r]), \
+            "conservative join manufactured headroom"
+        self.shares[r] = joined_shares
+        self.spent[r] = joined_spent
+
+    def refresh(self, promote=None, demote=None) -> None:
+        """Drain-quiescent share refresh with reclamation; optionally
+        re-select the hot set (promote/demote) in the same epoch."""
+        self.drain()
+        self._stale = {r: (self.shares[r].copy(), self.spent[r].copy())
+                       for r in range(R) if not self.alive[r]}
+        hot = list(self.hot)
+        if demote is not None and len(hot) > 1:
+            hot.pop(demote % len(hot))
+        if promote is not None and (promote % CELLS) not in hot:
+            hot = sorted(hot + [promote % CELLS])
+        self.hot = np.asarray(sorted(hot))
+        budgets = self.stock[self.hot]
+        alive = self.alive.astype(np.int64)
+        new = _make_shares(self.hot, budgets, alive)
+        # conservation: live shares partition the budgets exactly, dead
+        # rows are zero (the min-join-safe half of reclamation); with NO
+        # survivors nothing is allocated at all — capacity is stranded,
+        # never manufactured
+        if self.alive.any():
+            assert np.array_equal(new.sum(0), budgets)
+        assert np.all(new[~self.alive] == 0)
+        if self.naive:
+            # keep stale dead rows on top of the reclaimed partition
+            for r in range(R):
+                if not self.alive[r]:
+                    old = self._stale[r][0]
+                    if old.shape[0] == new.shape[1]:
+                        new[r] = old
+        self.shares = new
+        self.spent = np.zeros_like(new)
+
+    def finish(self) -> None:
+        self.drain()
+        assert not self.oversold, "stock went negative"
+        assert np.all(self.applied <= self.q0), \
+            "total applied spend exceeds initial inventory"
+        assert np.array_equal(self.stock, self.q0 - self.applied)
+
+
+def _random_ops(rng: np.random.Generator, n: int) -> list:
+    ops = []
+    for _ in range(n):
+        k = rng.random()
+        if k < 0.45:
+            ops.append(("spend", int(rng.integers(R)),
+                        int(rng.integers(CELLS)), int(rng.integers(1, 21))))
+        elif k < 0.60:
+            ops.append(("drain",))
+        elif k < 0.70:
+            ops.append(("kill", int(rng.integers(R))))
+        elif k < 0.80:
+            ops.append(("recover", int(rng.integers(R))))
+        elif k < 0.88:
+            ops.append(("refresh",))
+        elif k < 0.94:
+            ops.append(("refresh_promote", int(rng.integers(CELLS))))
+        else:
+            ops.append(("refresh_demote", int(rng.integers(CELLS))))
+    return ops
+
+
+def _run_ops(model: _ReclaimModel, ops: list) -> None:
+    for op in ops:
+        kind = op[0]
+        if kind == "spend":
+            model.spend(op[1], op[2], op[3])
+        elif kind == "drain":
+            model.drain()
+        elif kind == "kill":
+            model.kill(op[1])
+        elif kind == "recover":
+            model.recover(op[1])
+        elif kind == "refresh_promote":
+            model.refresh(promote=op[1])
+        elif kind == "refresh_demote":
+            model.refresh(demote=op[1])
+        else:
+            model.refresh()
+    model.finish()
+
+
+def test_reclaim_interleavings_never_oversell_seeded():
+    """Deterministic sweep: 80 seeded schedules over spends, drains,
+    kills, recoveries, and reclaim-refreshes with hot-set churn — stock
+    never negative, conservation exact, joins conservative."""
+    for seed in range(80):
+        rng = np.random.default_rng(4000 + seed)
+        _run_ops(_ReclaimModel(seed), _random_ops(rng,
+                                                  int(rng.integers(5, 61))))
+
+
+def test_naive_reclaim_into_max_join_oversells():
+    """The control: reclaiming a dead replica's headroom WITHOUT zeroing
+    its slot (what a max-join of share tables would keep) lets the
+    resurrected replica spend its stale share on top of the reclaimed
+    copy — the budget is allocated twice and stock goes negative."""
+    m = _ReclaimModel(0, naive_reclaim=True)
+    m.stock[:] = 10
+    m.q0[:] = 10
+    m.refresh()                 # shares partition 10 over 4 live replicas
+    m.kill(1)
+    m.refresh()                 # survivors get ALL of 10; row 1 kept stale
+    assert m.shares[~m.alive].sum() > 0, "control must keep the stale row"
+    for r in (0, 2, 3):
+        m.spend(r, 0, 10)       # survivors exhaust the reclaimed budget
+    m.drain()
+    m.recover(1)                # resurrect WITHOUT the conservative join
+    m.spend(1, 0, 10)           # stale share admits on top
+    m.drain()
+    assert m.oversold, "naive reclaim must oversell"
+
+    # the same schedule under the real scheme stays safe
+    m2 = _ReclaimModel(0)
+    m2.stock[:] = 10
+    m2.q0[:] = 10
+    m2.refresh()
+    m2.kill(1)
+    m2.refresh()
+    assert np.all(m2.shares[1] == 0)
+    for r in (0, 2, 3):
+        m2.spend(r, 0, 10)
+    m2.drain()
+    m2.recover(1)               # min-join zeroes the stale share
+    m2.spend(1, 0, 10)
+    m2.finish()                 # no oversell, conservation exact
+
+
+def test_reclaimed_partition_is_exact_and_minjoin_safe():
+    """Direct laws of the alive-masked partition (the code under test is
+    HotSetEscrow.make): live rows partition the budget exactly, dead rows
+    are zero, and an all-live partition is identical to the unmasked one."""
+    rng = np.random.default_rng(7)
+    keys = np.arange(CELLS)
+    for _ in range(50):
+        budgets = rng.integers(0, 100, CELLS)
+        alive = (rng.random(R) < 0.7).astype(np.int64)
+        shares = _make_shares(keys, budgets, alive)
+        assert np.array_equal(shares.sum(0), budgets)
+        assert np.all(shares[alive == 0] == 0)
+    budgets = rng.integers(0, 100, CELLS)
+    masked = _make_shares(keys, budgets, np.ones(R))
+    unmasked = np.asarray(HotSetEscrow.make(
+        R, keys.astype(np.int32), budgets.astype(np.int32)).shares, np.int64)
+    assert np.array_equal(masked, unmasked)
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("spend"), st.integers(0, R - 1),
+                      st.integers(0, CELLS - 1), st.integers(1, 20)),
+            st.tuples(st.just("drain")),
+            st.tuples(st.just("kill"), st.integers(0, R - 1)),
+            st.tuples(st.just("recover"), st.integers(0, R - 1)),
+            st.tuples(st.just("refresh")),
+            st.tuples(st.just("refresh_promote"), st.integers(0, CELLS - 1)),
+            st.tuples(st.just("refresh_demote"), st.integers(0, CELLS - 1))),
+        min_size=5, max_size=60)
+
+    @settings(max_examples=80, deadline=None)
+    @given(seed=st.integers(0, 10_000), ops=_ops)
+    def test_reclaim_interleavings_never_oversell(seed, ops):
+        """Hypothesis search over kill/recover/reclaim interleavings."""
+        _run_ops(_ReclaimModel(seed), list(ops))
