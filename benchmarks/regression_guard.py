@@ -15,6 +15,11 @@ benchmark read. Guarded rows:
   * ``escrow_admission`` (BENCH_escrow_admit.json, field
     ``kernel_vs_scan``) — the two-level gate+kernel admission's best-cell
     speedup over the sequential-scan baseline at batch >= 256;
+  * ``megastep_fused`` (BENCH_megastep_fused.json, field
+    ``fused_vs_scan_effects``, tolerance 0.7) — the one-kernel megastep's
+    best-cell step-level speedup over the per-phase scan-effects path at
+    batch >= 256 (admission + committed effects + RAMP stamps fused over
+    one VMEM residency of the hot tiles);
   * ``obs_overhead`` (BENCH_obs_overhead.json, field ``metrics_on_vs_off``,
     tolerance 0.98) — the observability plane's throughput cost: metrics-on
     vs metrics-off closed-loop ratio, capped at 1.0 in the row (the

@@ -115,6 +115,47 @@ def escrow_admit(avail0, slot, qty, line_valid):
     return jax.lax.cond(fast.all(), everyone_fast, with_residue, None)
 
 
+def txn_megastep(avail0, slot, qty, line_valid, key_local, cell_local,
+                 local_line, remote_line, ramp_ts, price_row, *,
+                 n_keys: int, n_cells: int):
+    """One-kernel transaction megastep: gate (Level 1, vectorized jnp) +
+    residual FCFS + committed effects + RAMP stamps with the hot tiles
+    resident in VMEM across all phases (kernels/txn_megastep.py). Bit-exact
+    with the scan path's phase sequence (ref.txn_megastep_ref, property-
+    tested in tests/test_megastep_kernel.py).
+
+    Returns a MegastepOut: (committed, fully settled avail, rank, d_count,
+    stock slabs, ol_ts, amount) — see txn_megastep.py for shapes.
+
+    NOT jit-wrapped here, like escrow_admit: the caller (txn/tpcc.py
+    ``_neworder_fused_effects``) always sits inside a jitted
+    megastep/engine step, and an inner jit would break donation and
+    shard_map tracing.
+
+    Backend dispatch mirrors escrow_admit: on TPU one Pallas program runs
+    phases 2-4 (avail settles IN-kernel, so no outside scatter); off-TPU the
+    admission runs through ``escrow_admit`` (gate + jitted residual_fcfs)
+    and phases 3-4 through the vectorized ``megastep_effect_products``
+    lowering — same products, bit for bit.
+    """
+    from .escrow_admit import contention_gate, residual_order
+    from .txn_megastep import (MegastepOut, megastep_effect_products,
+                               txn_megastep_kernel)
+
+    if _interpret():
+        committed, avail = escrow_admit(avail0, slot, qty, line_valid)
+        return MegastepOut(committed, avail, *megastep_effect_products(
+            committed, qty, line_valid, key_local, cell_local, local_line,
+            remote_line, ramp_ts, price_row, n_keys=n_keys,
+            n_cells=n_cells))
+    fast, _, _ = contention_gate(avail0, slot, qty, line_valid)
+    res_idx, n_res = residual_order(fast)
+    return txn_megastep_kernel(
+        avail0, slot, qty, line_valid, fast, res_idx, n_res, key_local,
+        cell_local, local_line, remote_line, ramp_ts, price_row,
+        n_keys=n_keys, n_cells=n_cells)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows",))
 def ramp_read_select(req_ts, nlines, ol_ts, ol_vis, ol_prep, amount, i_id,
                      block_rows: int = 256):

@@ -101,6 +101,41 @@ def escrow_admit_ref(avail0: Array, slot: Array, qty: Array,
     return committed, avail
 
 
+def txn_megastep_ref(avail0: Array, slot: Array, qty: Array,
+                     line_valid: Array, key_local: Array, cell_local: Array,
+                     local_line: Array, remote_line: Array, ramp_ts: Array,
+                     price_row: Array, *, n_keys: int, n_cells: int):
+    """Fused-megastep oracle — the DEFINITIONAL composition of the scan
+    path's phases (kernels/txn_megastep.py): FCFS admission (the
+    ``escrow_admit_ref`` scan), the ``[B, B]`` committed-rank matrix and
+    per-district counts of ``tpcc._neworder_committed_effects``, plain
+    scatter-add stock slabs, and the elementwise RAMP stamps.
+
+    Returns (committed, avail, rank, d_count, stock_dec, stock_cnt,
+    stock_rcnt, ol_ts, amount) — the MegastepOut tuple, field for field.
+    """
+    committed, avail = escrow_admit_ref(avail0, slot, qty, line_valid)
+    B = qty.shape[0]
+    c32 = committed.astype(jnp.int32)
+
+    same = key_local[None, :] == key_local[:, None]
+    lower = jnp.tril(jnp.ones((B, B), jnp.bool_), k=-1)
+    rank = (same & lower & committed[None, :]).sum(axis=1).astype(jnp.int32)
+    d_count = jnp.zeros((n_keys,), jnp.int32).at[key_local].add(c32)
+
+    m = committed[:, None] & local_line
+    ids = jnp.where(m, cell_local, 0)
+    dec = jnp.zeros((n_cells,), jnp.int32).at[ids].add(jnp.where(m, qty, 0))
+    cnt = jnp.zeros((n_cells,), jnp.int32).at[ids].add(jnp.where(m, 1, 0))
+    rcnt = jnp.zeros((n_cells,), jnp.int32).at[ids].add(
+        jnp.where(m & remote_line, 1, 0))
+
+    ol_ts = jnp.where(line_valid, ramp_ts[:, None], -1).astype(jnp.int32)
+    amount = jnp.where(line_valid,
+                       price_row * qty.astype(price_row.dtype), 0.0)
+    return committed, avail, rank, d_count, dec, cnt, rcnt, ol_ts, amount
+
+
 def ramp_read_ref(req_ts: Array, nlines: Array, ol_ts: Array, ol_vis: Array,
                   ol_prep: Array, amount: Array, i_id: Array):
     """Fused RAMP read oracle (txn/ramp.py read_lines + aggregation).

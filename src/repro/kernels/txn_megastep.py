@@ -1,0 +1,271 @@
+"""Pallas TPU kernel: the one-kernel transaction megastep — admission +
+committed effects + RAMP stamping in a single VMEM-resident pipeline.
+
+PR 5 made the closed loop *effects-bound*: the two-level admission wins
+2-2.4x in the micro, but the committed-effect application — the per-district
+o_id rank, the district counter advance, the stock slab scatter-adds and the
+order/order-line inserts — still round-trips the hot state through HBM once
+per phase, erasing the win end-to-end. This kernel fuses the four phases of
+the strict-stock New-Order hot path over ONE residency of the hot tiles:
+
+  phase 1 — contention gate (kernels/escrow_admit.contention_gate, pure jnp
+            outside the kernel: one segmented sum classifies every
+            transaction; the monotone majority commits order-free);
+  phase 2 — residual FCFS admission: the `escrow_admit` walk verbatim, with
+            the availability vector resident in VMEM (dynamic trip count =
+            the contended handful);
+  phase 3 — committed effects, one pass over the batch in FCFS order while
+            `avail` is STILL resident: the fast path's reservations settle
+            in-place (so `avail` leaves the kernel fully settled, exactly
+            `admit_fcfs`'s contract), each transaction picks up its
+            committed per-district rank from a VMEM counter tile (the
+            batched increment-and-get), and the three stock slabs
+            (decrement / order count / remote count) accumulate into VMEM
+            scratch instead of three whole-table HBM scatter passes;
+  phase 4 — RAMP stamping, vectorized over the whole [B, L] window: the
+            write-set timestamp (`ol_ts`) and the line amounts from the
+            pre-gathered price row.
+
+The kernel returns effect PRODUCTS (rank, per-district counts, stock slabs,
+stamps), not mutated tables: the caller (txn/tpcc.py
+``_neworder_fused_effects``) lands them with dense vector adds and the
+unchanged order/order-line row scatters, which keeps the kernel's working
+set to the hot tiles and leaves the big append-mostly tables on their
+existing one-scatter-per-row path. Bit-exactness with the sequential scan
+path is the contract, phase by phase:
+
+  * rank / d_count — integer counting in batch order, identical to the
+    ``[B, B]`` committed-rank matrix of the scan path by construction;
+  * stock slabs — integer segment sums; scatter-add order cannot matter.
+    (s_ytd is f32 in the tables, but its addends are integers and TPC-C
+    year-to-date totals sit far below 2**24, where f32 integer sums are
+    exact in any association.)
+  * stamps — the same elementwise formulas as the scan path.
+
+``megastep_effect_products`` is the vectorized CPU lowering of phases 3-4
+(sort-based rank + ONE stacked [N, 3] segment sum for the three slabs) —
+interpret-mode Pallas pays ~100x per load/store, so off-TPU dispatch
+(ops.txn_megastep) runs the gate + `residual_fcfs` + this, bit-exact with
+the kernel (whose interpret-mode path the tests pin against the oracle).
+
+VMEM budget (int32 unless noted): avail [A] + 3 stock slabs [Wl*I] +
+d_count [Wl*D] + rank/committed/fast/res_idx/key [B] + 8 x [B, L] line
+tiles (slot/qty/lv/cell/loc/rem/ol_ts/amount f32) + ts/price. At spec scale
+on the production mesh (A ~ 712k cells, 2 local warehouses x 100k items,
+B = 32) that is ~5.3 MB — inside the ~16 MB/core VMEM (asserted by the
+dry-run's ``megastep_fused`` cell).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+class MegastepOut(NamedTuple):
+    """The megastep's effect products (identical for kernel / CPU lowering /
+    oracle — the caller lands them on the tables the same way either way)."""
+
+    committed: Array   # [B] bool — FCFS admission verdicts
+    avail: Array       # [A] int32 — fully settled availability vector
+    rank: Array        # [B] int32 — committed rank within the (w, d) key
+    d_count: Array     # [n_keys] int32 — committed txns per district key
+    stock_dec: Array   # [n_cells] int32 — admitted decrement per local cell
+    stock_cnt: Array   # [n_cells] int32 — admitted order lines per cell
+    stock_rcnt: Array  # [n_cells] int32 — admitted remote lines per cell
+    ol_ts: Array       # [B, L] int32 — RAMP write-set timestamp stamp
+    amount: Array      # [B, L] f32 — order-line amounts (price x qty)
+
+
+def megastep_effect_products(committed: Array, qty: Array, line_valid: Array,
+                             key_local: Array, cell_local: Array,
+                             local_line: Array, remote_line: Array,
+                             ramp_ts: Array, price_row: Array, *,
+                             n_keys: int, n_cells: int
+                             ) -> tuple[Array, ...]:
+    """Phases 3-4 as vectorized jnp — the CPU lowering of the kernel's
+    effect walk (admission happens upstream; see ops.txn_megastep).
+
+    * rank: sort-based committed prefix count per ``key_local`` group — a
+      stable argsort + segmented exclusive cumsum replaces the scan path's
+      ``[B, B]`` rank matrix (O(B log B) work instead of O(B^2));
+    * d_count: one segment sum of the commit mask over district keys;
+    * stock slabs: ONE stacked ``[N, 3]`` segment sum shares the admitted
+      line ids across the decrement / count / remote-count slabs (one
+      sort-free pass instead of three scatter-adds);
+    * stamps: the scan path's elementwise formulas verbatim.
+
+    Returns (rank, d_count, stock_dec, stock_cnt, stock_rcnt, ol_ts,
+    amount) — the MegastepOut tail.
+    """
+    B, _ = qty.shape
+    c32 = committed.astype(jnp.int32)
+
+    # committed rank among earlier same-key txns, via one stable sort:
+    # within a key group (contiguous after the sort) the rank is the
+    # group-local exclusive cumsum of the commit mask
+    order = jnp.argsort(key_local, stable=True)
+    ks = key_local[order]
+    cs = c32[order]
+    excl = jnp.cumsum(cs) - cs
+    start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), ks[1:] != ks[:-1]])
+    last_start = jax.lax.cummax(jnp.where(start, jnp.arange(B), 0))
+    rank = jnp.zeros((B,), jnp.int32).at[order].set(
+        (excl - excl[last_start]).astype(jnp.int32))
+
+    d_count = jax.ops.segment_sum(c32, key_local, num_segments=n_keys)
+
+    # stacked slab aggregation: admitted local lines only; masked-out lines
+    # redirect to cell 0 adding 0 (exact for integer sums)
+    m = committed[:, None] & local_line
+    ids = jnp.where(m, cell_local, 0).reshape(-1)
+    vals = jnp.stack([jnp.where(m, qty, 0).reshape(-1),
+                      jnp.where(m, 1, 0).reshape(-1),
+                      jnp.where(m & remote_line, 1, 0).reshape(-1)],
+                     axis=1).astype(jnp.int32)
+    slabs = jax.ops.segment_sum(vals, ids, num_segments=n_cells)
+
+    ol_ts = jnp.where(line_valid, ramp_ts[:, None], -1).astype(jnp.int32)
+    amount = jnp.where(line_valid,
+                       price_row * qty.astype(price_row.dtype), 0.0)
+    return (rank, d_count, slabs[:, 0], slabs[:, 1], slabs[:, 2], ol_ts,
+            amount)
+
+
+def _txn_megastep_body(n_res_ref, res_idx_ref, slot_ref, qty_ref, lv_ref,
+                       fast_ref, avail0_ref, key_ref, cell_ref, loc_ref,
+                       rem_ref, ts_ref, price_ref,
+                       committed_ref, avail_ref, rank_ref, dcnt_ref,
+                       dec_ref, cnt_ref, rcnt_ref, olts_ref, amt_ref):
+    """Four phases over one VMEM residency of the hot tiles. ``avail_ref``
+    doubles as the running reservation state across phases 2-3;
+    ``dcnt_ref`` doubles as the per-district increment-and-get counter."""
+    committed_ref[...] = fast_ref[...]
+    avail_ref[...] = avail0_ref[...]
+    dcnt_ref[...] = jnp.zeros(dcnt_ref.shape, jnp.int32)
+    dec_ref[...] = jnp.zeros(dec_ref.shape, jnp.int32)
+    cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+    rcnt_ref[...] = jnp.zeros(rcnt_ref.shape, jnp.int32)
+    L = slot_ref.shape[1]
+
+    # ---- phase 2: residual FCFS (the escrow_admit walk, verbatim) ----------
+    def residual_txn(i, carry):
+        t = res_idx_ref[i]
+        slots = pl.load(slot_ref, (pl.ds(t, 1), slice(None)))[0]
+        qtys = pl.load(qty_ref, (pl.ds(t, 1), slice(None)))[0]
+        lvs = pl.load(lv_ref, (pl.ds(t, 1), slice(None)))[0]
+        ok = jnp.bool_(True)
+        for l in range(L):
+            s, q, v = slots[l], qtys[l], lvs[l]
+            cur = pl.load(avail_ref, (pl.ds(s, 1),))[0]
+            new = cur - q
+            ok = ok & ((new >= 0) | ~v)
+            pl.store(avail_ref, (pl.ds(s, 1),), jnp.where(v, new, cur)[None])
+        for l in range(L):
+            s, q, v = slots[l], qtys[l], lvs[l]
+            cur = pl.load(avail_ref, (pl.ds(s, 1),))[0]
+            pl.store(avail_ref, (pl.ds(s, 1),),
+                     jnp.where(v & ~ok, cur + q, cur)[None])
+        pl.store(committed_ref, (pl.ds(t, 1),), ok[None])
+        return carry
+
+    jax.lax.fori_loop(0, n_res_ref[0], residual_txn, 0)
+
+    # ---- phase 3: committed effects, batch order, avail still resident -----
+    B = slot_ref.shape[0]
+
+    def effect_txn(t, carry):
+        c = pl.load(committed_ref, (pl.ds(t, 1),))[0]
+        fast_t = pl.load(fast_ref, (pl.ds(t, 1),))[0]
+        # per-district increment-and-get: rank is the count of committed
+        # earlier same-key txns (stored for every txn, like the scan path —
+        # aborted rows' o_ids are computed there too and dropped downstream)
+        key = pl.load(key_ref, (pl.ds(t, 1),))[0]
+        kcnt = pl.load(dcnt_ref, (pl.ds(key, 1),))[0]
+        pl.store(rank_ref, (pl.ds(t, 1),), kcnt[None])
+        pl.store(dcnt_ref, (pl.ds(key, 1),),
+                 (kcnt + jnp.where(c, 1, 0))[None])
+        slots = pl.load(slot_ref, (pl.ds(t, 1), slice(None)))[0]
+        qtys = pl.load(qty_ref, (pl.ds(t, 1), slice(None)))[0]
+        lvs = pl.load(lv_ref, (pl.ds(t, 1), slice(None)))[0]
+        cells = pl.load(cell_ref, (pl.ds(t, 1), slice(None)))[0]
+        locs = pl.load(loc_ref, (pl.ds(t, 1), slice(None)))[0]
+        rems = pl.load(rem_ref, (pl.ds(t, 1), slice(None)))[0]
+        for l in range(L):
+            q, v = qtys[l], lvs[l]
+            # settle the fast path's reservation in-place: avail leaves the
+            # kernel fully settled (admit_fcfs's contract), no outside
+            # scatter needed
+            s = slots[l]
+            cur = pl.load(avail_ref, (pl.ds(s, 1),))[0]
+            pl.store(avail_ref, (pl.ds(s, 1),),
+                     jnp.where(v & fast_t, cur - q, cur)[None])
+            # stock slabs: admitted local lines; masked lines redirect to
+            # cell 0 adding 0 (exact for integer accumulation)
+            m = c & locs[l]
+            cell = jnp.where(m, cells[l], 0)
+            d0 = pl.load(dec_ref, (pl.ds(cell, 1),))[0]
+            pl.store(dec_ref, (pl.ds(cell, 1),),
+                     (d0 + jnp.where(m, q, 0))[None])
+            c0 = pl.load(cnt_ref, (pl.ds(cell, 1),))[0]
+            pl.store(cnt_ref, (pl.ds(cell, 1),),
+                     (c0 + jnp.where(m, 1, 0))[None])
+            r0 = pl.load(rcnt_ref, (pl.ds(cell, 1),))[0]
+            pl.store(rcnt_ref, (pl.ds(cell, 1),),
+                     (r0 + jnp.where(m & rems[l], 1, 0))[None])
+        return carry
+
+    jax.lax.fori_loop(0, B, effect_txn, 0)
+
+    # ---- phase 4: RAMP stamps, vectorized over the whole window ------------
+    lv = lv_ref[...]
+    olts_ref[...] = jnp.where(lv, ts_ref[...][:, None], -1).astype(jnp.int32)
+    amt_ref[...] = jnp.where(
+        lv, price_ref[...] * qty_ref[...].astype(price_ref.dtype), 0.0)
+
+
+def txn_megastep_kernel(avail0: Array, slot: Array, qty: Array,
+                        line_valid: Array, fast: Array, res_idx: Array,
+                        n_res: Array, key_local: Array, cell_local: Array,
+                        local_line: Array, remote_line: Array,
+                        ramp_ts: Array, price_row: Array, *,
+                        n_keys: int, n_cells: int,
+                        interpret: bool = False) -> MegastepOut:
+    """The fused megastep (phases 2-4; the gate runs outside as vectorized
+    jnp). ``avail0`` [A] int32; ``slot``/``qty``/``line_valid`` [B, L];
+    ``fast``/``res_idx``/``n_res`` from the gate + residual_order;
+    ``key_local`` [B] district keys in [0, n_keys); ``cell_local`` [B, L]
+    local stock cells in [0, n_cells) (masked by ``local_line``);
+    ``remote_line`` [B, L]; ``ramp_ts`` [B] int32; ``price_row`` [B, L] f32.
+
+    Returns :class:`MegastepOut` with ``avail`` FULLY settled (fast +
+    residual reservations — bit-identical to ``admit_fcfs``'s output).
+    """
+    B, L = slot.shape
+    A = avail0.shape[0]
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
+    f32 = price_row.dtype
+    out = pl.pallas_call(
+        _txn_megastep_body,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + [vmem] * 12,
+        out_specs=[vmem] * 9,
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.bool_),
+                   jax.ShapeDtypeStruct((A,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_keys,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_cells,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_cells,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_cells,), jnp.int32),
+                   jax.ShapeDtypeStruct((B, L), jnp.int32),
+                   jax.ShapeDtypeStruct((B, L), f32)],
+        interpret=interpret,
+    )(n_res, res_idx, slot, qty, line_valid, fast, avail0, key_local,
+      cell_local, local_line, remote_line, ramp_ts, price_row)
+    return MegastepOut(*out)

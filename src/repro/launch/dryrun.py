@@ -200,8 +200,15 @@ def lower_tpcc(mesh, batch_per_shard: int = 16, chunk_len: int = 4):
     eng_admit = Engine(scale, mesh, axes, stock_invariant="strict",
                        admission="kernel")
     admission = eng_admit.lowered_neworder_escrow(batch_per_shard)
+    # the ONE-KERNEL megastep (effects="fused"): admission + committed
+    # effects + RAMP stamps over one VMEM residency of the hot tiles
+    # (kernels/txn_megastep.py), lowered at spec scale
+    eng_fused = Engine(scale, mesh, axes, stock_invariant="strict",
+                       admission="kernel", effects="fused")
+    fused_effects = eng_fused.lowered_neworder_escrow(batch_per_shard)
     return (eng.lowered_neworder(batch_per_shard), reads, megastep, escrow,
-            escrow_megastep, eng_escrow, admission, eng_admit)
+            escrow_megastep, eng_escrow, admission, eng_admit,
+            fused_effects, eng_fused, batch_per_shard)
 
 
 _ESCROW_AUDIT_MEMO: dict = {}
@@ -328,7 +335,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
     if arch == "tpcc":
         try:
             (lowered, reads, megastep, escrow, escrow_megastep,
-             eng_escrow, admission, eng_admit) = lower_tpcc(mesh)
+             eng_escrow, admission, eng_admit, fused_effects, eng_fused,
+             bps) = lower_tpcc(mesh)
             cell.update(analyze(lowered, mesh, "tpcc-neworder", ()))
             # the RAMP read transactions must compile collective-free at
             # spec scale — the structural atomic-visibility-without-
@@ -399,6 +407,29 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
             if 4 * A > 16 * 2 ** 20:
                 raise AssertionError(
                     f"admission avail vector ({4 * A / 2**20:.1f} MB) "
+                    f"exceeds the ~16 MB VMEM budget")
+            # the ONE-KERNEL megastep (effects="fused") at spec scale: the
+            # fused admission+effects+stamps hot path must also compile
+            # collective-free, and the kernel's WHOLE VMEM working set —
+            # avail + the three stock slabs + the district counter tile +
+            # the per-batch line tiles — must fit a TPU core's ~16 MB
+            fm = analyze(fused_effects, mesh, "tpcc-megastep-fused", ())
+            cell["megastep_fused"] = fm
+            if fm["collectives"]["counts"]:
+                raise AssertionError(
+                    f"fused megastep effects path has collectives at spec "
+                    f"scale: {fm['collectives']['describe']}")
+            sc = eng_fused.scale
+            Wl = eng_fused.w_per_shard
+            Af = (eng_fused.hot_keys.shape[0] + Wl * sc.n_items + 1)
+            # int32 words: avail + 3 stock slabs + d_count + 5 [B] vectors
+            # (committed/fast/rank/res_idx/key) + 9 [B, L] line tiles
+            vmem = 4 * (Af + 3 * Wl * sc.n_items + Wl * sc.districts
+                        + 5 * bps + 9 * bps * sc.max_lines)
+            fm["megastep_vmem_bytes"] = vmem
+            if vmem > 16 * 2 ** 20:
+                raise AssertionError(
+                    f"fused megastep working set ({vmem / 2**20:.1f} MB) "
                     f"exceeds the ~16 MB VMEM budget")
             # OBSERVABILITY PLANE at spec scale: the metrics-on escrow
             # megastep (the only regime where metrics change the program —

@@ -88,8 +88,22 @@ class Engine:
         demand vs headroom, order-free where it fits) + the Pallas FCFS
         kernel over the residual transactions with the availability vector
         resident in VMEM (kernels/escrow_admit.py);
-      * "auto" (default) — per-batch static choice: the gate+kernel
-        pipeline at batch >= tpcc.AUTO_KERNEL_MIN_BATCH, the scan below.
+      * "auto" (default) — per-batch-shape static choice: the memoized
+        one-shot backend autotune (tpcc.resolve_admission_cutover) times
+        scan vs kernel at first use; tpcc.AUTO_KERNEL_MIN_BATCH is the
+        no-autotune fallback.
+
+    ``effects`` selects the ESCROW regime's committed-effects strategy
+    (both layouts, bit-identical results):
+
+      * "fused" (default) — the one-kernel megastep
+        (kernels/txn_megastep.py): admission, committed effects and the
+        RAMP write-set stamp run over one VMEM residency of the hot tiles,
+        and the tables take dense vector adds from the kernel's effect
+        products;
+      * "scan" — the definitional per-phase dispatch path
+        (tpcc._neworder_committed_effects), kept as the bit-exactness
+        baseline and comparison row (BENCH_megastep_fused.json).
     """
 
     scale: TPCCScale
@@ -99,6 +113,7 @@ class Engine:
     escrow_layout: str = "sparse"
     hot_items: int | None = None
     admission: str = "auto"
+    effects: str = "fused"
 
     def __post_init__(self):
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
@@ -135,6 +150,9 @@ class Engine:
         if self.admission not in tpcc.ADMISSION_MODES:
             raise ValueError(f"unknown admission {self.admission!r}; "
                              f"choose from {tpcc.ADMISSION_MODES}")
+        if self.effects not in tpcc.EFFECTS_MODES:
+            raise ValueError(f"unknown effects {self.effects!r}; "
+                             f"choose from {tpcc.EFFECTS_MODES}")
         if self.hot_items is None:
             self.hot_items = tpcc.default_hot_items(self.scale)
         if self.escrow_layout == "sparse":
@@ -238,7 +256,8 @@ class Engine:
                             batch, self.scale, w_lo=w_lo,
                             w_hi=w_lo + self.w_per_shard,
                             replica=idx, num_replicas=self.n_shards,
-                            admission=self.admission)
+                            admission=self.admission,
+                            effects=self.effects)
                 else:
                     state, spent, delta, total, ok = \
                         tpcc.apply_neworder_escrow(
@@ -246,7 +265,8 @@ class Engine:
                             self.scale, w_lo=w_lo,
                             w_hi=w_lo + self.w_per_shard,
                             replica=idx, num_replicas=self.n_shards,
-                            admission=self.admission)
+                            admission=self.admission,
+                            effects=self.effects)
                 return (state, esc._replace(spent=spent[None]), delta, total,
                         ok)
 

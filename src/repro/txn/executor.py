@@ -268,13 +268,13 @@ class FusedExecutor:
                             no_b, scale, w_lo=w_lo,
                             w_hi=w_lo + eng.w_per_shard,
                             replica=idx, num_replicas=eng.n_shards,
-                            admission=eng.admission)
+                            admission=eng.admission, effects=eng.effects)
                 else:
                     state, spent, delta, _, ok = tpcc.apply_neworder_escrow(
                         state, esc.shares[0], esc.spent[0], no_b, scale,
                         w_lo=w_lo, w_hi=w_lo + eng.w_per_shard,
                         replica=idx, num_replicas=eng.n_shards,
-                        admission=eng.admission)
+                        admission=eng.admission, effects=eng.effects)
                 esc = esc._replace(spent=spent[None])
                 ring = OutboxRing(*(
                     jax.lax.dynamic_update_index_in_dim(r, v, i % rows, 0)

@@ -340,6 +340,30 @@ def apply_stock_updates(state: TPCCState, w_idx: Array, i_idx: Array,
 # ---------------------------------------------------------------------------
 
 
+class FlatLines(NamedTuple):
+    """Flattened ``[B*L]`` order-line views shared by admission, effects and
+    the outbox build — the mask-INDEPENDENT parts, computed once per batch.
+    Call sites apply their own masks (validity, commit, locality) on top."""
+
+    w: Array       # [N] int32 supply warehouse (GLOBAL id)
+    i: Array       # [N] int32 item id
+    q: Array       # [N] int32 quantity
+    local: Array   # [N] bool — supply warehouse within [w_lo, w_hi)
+    remote: Array  # [N] bool — supply warehouse != the order's home w
+
+
+def flatten_order_lines(batch: NewOrderBatch, w_lo: int,
+                        w_hi: int) -> FlatLines:
+    """THE order-line flattening (one definition: apply_neworder, the
+    committed-effects tail, and the fused megastep all consume it, so the
+    locality/remoteness conventions can never drift apart)."""
+    flat_w = batch.supply_w.reshape(-1)
+    return FlatLines(
+        w=flat_w, i=batch.i_id.reshape(-1), q=batch.qty.reshape(-1),
+        local=(flat_w >= w_lo) & (flat_w < w_hi),
+        remote=(batch.supply_w != batch.w[:, None]).reshape(-1))
+
+
 def apply_neworder(state: TPCCState, batch: NewOrderBatch,
                    scale: TPCCScale,
                    w_lo: int = 0, w_hi: int | None = None,
@@ -423,23 +447,19 @@ def apply_neworder(state: TPCCState, batch: NewOrderBatch,
         o_ts=o_ts, ol_ts=ol_ts, ol_vis=ol_vis)
 
     # ---- STOCK: local now, remote via outbox -------------------------------
-    flat_w = batch.supply_w.reshape(-1)
-    flat_i = batch.i_id.reshape(-1)
-    flat_q = batch.qty.reshape(-1)
+    flat = flatten_order_lines(batch, w_lo, w_hi)
     flat_valid = line_valid.reshape(-1)
-    is_local = (flat_w >= w_lo) & (flat_w < w_hi)
-    is_remote_line = (batch.supply_w != batch.w[:, None]).reshape(-1)
 
-    state = apply_stock_updates(state, flat_w - w_lo, flat_i, flat_q,
-                                flat_valid & is_local, is_remote_line)
+    state = apply_stock_updates(state, flat.w - w_lo, flat.i, flat.q,
+                                flat_valid & flat.local, flat.remote)
 
     # outbox: entries stay in batch-position order, valid-masked — the drain
     # applies by mask, so the old argsort compaction was pure overhead on the
     # hot path
-    rmask = flat_valid & ~is_local
-    delta = StockDelta(dst_w=jnp.where(rmask, flat_w, 0),
-                       i_id=jnp.where(rmask, flat_i, 0),
-                       qty=jnp.where(rmask, flat_q, 0),
+    rmask = flat_valid & ~flat.local
+    delta = StockDelta(dst_w=jnp.where(rmask, flat.w, 0),
+                       i_id=jnp.where(rmask, flat.i, 0),
+                       qty=jnp.where(rmask, flat.q, 0),
                        valid=rmask)
 
     # ---- total amount (returned to the client) -----------------------------
@@ -509,22 +529,104 @@ def make_escrow_shares(s_quantity, num_replicas: int):
 
 ADMISSION_MODES = ("auto", "scan", "kernel")
 
-# "auto" threshold: below this per-shard batch the B-step scan is cheaper
-# than the gate's pre-pass + kernel launch; above it the gate collapses the
-# sequential depth to the contended handful
+# no-autotune fallback threshold: below this per-shard batch the B-step scan
+# is cheaper than the gate's pre-pass + kernel launch; above it the gate
+# collapses the sequential depth to the contended handful. The live "auto"
+# decision is the measured resolve_admission_cutover below; this constant is
+# what it falls back to when autotuning is disabled or fails.
 AUTO_KERNEL_MIN_BATCH = 64
 
+# one flip disables the measured cut-over everywhere (tests pin it off to
+# keep strategy choice deterministic across hosts)
+ADMISSION_AUTOTUNE = True
 
-def resolve_admission(admission: str, batch: int) -> str:
+_CUTOVER_CACHE: dict[tuple, str] = {}
+
+
+def resolve_admission_cutover(batch: int, n_lines: int = 15, *,
+                              cells: int = 4096, trials: int = 3) -> str:
+    """One-shot BACKEND-DERIVED admission cut-over (ROADMAP item 2): time
+    the scan vs the gate+kernel pipeline once per (backend, batch shape) on
+    a synthetic admission problem of that shape, memoize the winner.
+
+    Replaces the CPU-tuned ``AUTO_KERNEL_MIN_BATCH`` constant as the live
+    "auto" decision: the crossover moves with the backend (a TPU's kernel
+    launch amortizes differently than interpret-mode CPU), so it is measured
+    where the program will actually run, at first use, and cached for the
+    process lifetime. Timing happens OUTSIDE any trace in the sense that the
+    probe arrays are fresh concrete values — calling the two jitted probes
+    while an outer trace is live is legal and leaves no residue in the outer
+    program (the resolved mode is a static Python string, exactly like the
+    constant it replaces). Any failure (e.g. an exotic backend that refuses
+    one strategy) falls back to the constant threshold.
+    """
+    key = (jax.default_backend(), batch, n_lines)
+    hit = _CUTOVER_CACHE.get(key)
+    if hit is not None:
+        return hit
+    fallback = "kernel" if batch >= AUTO_KERNEL_MIN_BATCH else "scan"
+    try:
+        import time
+
+        rng = np.random.default_rng(0)
+        # the TPC-C regime the engine actually runs: plentiful stock under a
+        # skewed access profile, contention the exception (the CALM gate's
+        # design point) — probing a starved problem instead would measure a
+        # workload the hot path never sees and flatter the scan
+        avail0 = jnp.asarray(rng.integers(100, 500, size=cells), jnp.int32)
+        slot = jnp.asarray(
+            (cells * rng.power(4.0, size=(batch, n_lines))).astype(np.int64)
+            % cells, jnp.int32)
+        qty = jnp.asarray(rng.integers(1, 10, size=(batch, n_lines)),
+                          jnp.int32)
+        lv = jnp.asarray(rng.random((batch, n_lines)) < 0.8)
+        # small batches run in tens of microseconds — repeat enough that the
+        # measured wall is timer-resolvable, not scheduler noise
+        reps = max(trials, 1024 // max(batch, 1))
+        walls = {}
+        for mode in ("scan", "kernel"):
+            probe = jax.jit(lambda a, s, q, v, mode=mode: admit_fcfs(
+                a, s, q, v, admission=mode))
+            jax.block_until_ready(probe(avail0, slot, qty, lv))  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(probe(avail0, slot, qty, lv))
+            walls[mode] = time.perf_counter() - t0
+        choice = min(walls, key=walls.get)
+    except Exception:
+        choice = fallback
+    _CUTOVER_CACHE[key] = choice
+    return choice
+
+
+def resolve_admission(admission: str, batch: int,
+                      n_lines: int | None = None) -> str:
     """Resolve the ``admission=`` knob to a concrete strategy for a batch
-    size (static at trace time): "auto" picks the gate+kernel pipeline at
-    ``batch >= AUTO_KERNEL_MIN_BATCH`` and the scan below it."""
+    shape (static at trace time): "auto" asks the memoized backend autotune
+    (:func:`resolve_admission_cutover`) when the line width is known and
+    autotuning is on, else falls back to the ``AUTO_KERNEL_MIN_BATCH``
+    constant."""
     if admission not in ADMISSION_MODES:
         raise ValueError(f"unknown admission {admission!r}; "
                          f"choose from {ADMISSION_MODES}")
     if admission == "auto":
+        if n_lines is not None and ADMISSION_AUTOTUNE:
+            return resolve_admission_cutover(batch, n_lines)
         return "kernel" if batch >= AUTO_KERNEL_MIN_BATCH else "scan"
     return admission
+
+
+EFFECTS_MODES = ("scan", "fused")
+
+
+def resolve_effects(effects: str) -> str:
+    """Validate the ``effects=`` knob: "scan" is the definitional per-phase
+    dispatch path; "fused" routes the strict-stock New-Order through the
+    one-kernel megastep (kernels/txn_megastep.py), bit-identically."""
+    if effects not in EFFECTS_MODES:
+        raise ValueError(f"unknown effects {effects!r}; "
+                         f"choose from {EFFECTS_MODES}")
+    return effects
 
 
 def admit_fcfs(avail0: Array, slot: Array, qty: Array, line_valid: Array,
@@ -546,9 +648,10 @@ def admit_fcfs(avail0: Array, slot: Array, qty: Array, line_valid: Array,
       (the oversubscribed handful at TPC-C skew) run FCFS, inside a Pallas
       kernel with ``avail`` resident in VMEM (a dynamic trip count: the
       sequential depth is the residual count, not B).
-    * ``"auto"`` — :func:`resolve_admission` picks per batch size.
+    * ``"auto"`` — :func:`resolve_admission` picks per batch shape (the
+      memoized backend autotune, or the constant threshold as fallback).
     """
-    admission = resolve_admission(admission, slot.shape[0])
+    admission = resolve_admission(admission, slot.shape[0], slot.shape[1])
     if admission == "kernel":
         from repro.kernels.ops import escrow_admit
         return escrow_admit(avail0, slot, qty, line_valid)
@@ -577,7 +680,7 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
                           batch: NewOrderBatch, scale: TPCCScale,
                           w_lo: int = 0, w_hi: int | None = None,
                           replica: Array | int = 0, num_replicas: int = 1,
-                          admission: str = "scan"
+                          admission: str = "scan", effects: str = "scan"
                           ) -> tuple[TPCCState, Array, StockDelta, Array, Array]:
     """Strict-stock New-Order: ``s_quantity >= 0`` with NO restock.
 
@@ -604,6 +707,9 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
     ``admission`` selects the :func:`admit_fcfs` strategy ("scan" is the
     bit-exact sequential baseline; "kernel"/"auto" route through the
     contention gate + Pallas FCFS kernel with identical results).
+    ``effects`` selects the committed-effects strategy ("scan" is the
+    per-phase dispatch baseline; "fused" runs admission + effects + RAMP
+    stamping through the one-kernel megastep, bit-identically).
 
     Returns (state, spent', remote outbox, totals, committed mask [B]).
     """
@@ -620,6 +726,14 @@ def apply_neworder_escrow(state: TPCCState, shares: Array, spent: Array,
     # share of every (warehouse, item) cell, flattened w-major
     avail0 = (shares - spent).reshape(-1)
     slot = batch.supply_w * I + batch.i_id                         # [B, L]
+
+    if resolve_effects(effects) == "fused":
+        state, avail, delta, total, committed = _neworder_fused_effects(
+            state, batch, scale, avail0, slot, line_valid, ramp_ts,
+            w_lo, w_hi, admission)
+        return state, shares - avail.reshape(shares.shape), delta, total, \
+            committed
+
     committed, avail = admit_fcfs(avail0, slot, batch.qty, line_valid,
                                   admission)
     spent = shares - avail.reshape(shares.shape)
@@ -689,21 +803,17 @@ def _neworder_committed_effects(state: TPCCState, batch: NewOrderBatch,
         o_ts=o_ts, ol_ts=ol_ts, ol_vis=ol_vis)
 
     # ---- STOCK: admitted spends — local applied now, remote via outbox -----
-    flat_w = batch.supply_w.reshape(-1)
-    flat_i = batch.i_id.reshape(-1)
-    flat_q = batch.qty.reshape(-1)
+    flat = flatten_order_lines(batch, w_lo, w_hi)
     flat_ok = line_ok.reshape(-1)
-    is_local = (flat_w >= w_lo) & (flat_w < w_hi)
-    is_remote_line = (batch.supply_w != batch.w[:, None]).reshape(-1)
 
-    state = apply_stock_updates(state, flat_w - w_lo, flat_i, flat_q,
-                                flat_ok & is_local, is_remote_line,
+    state = apply_stock_updates(state, flat.w - w_lo, flat.i, flat.q,
+                                flat_ok & flat.local, flat.remote,
                                 restock=False)
 
-    rmask = flat_ok & ~is_local
-    delta = StockDelta(dst_w=jnp.where(rmask, flat_w, 0),
-                       i_id=jnp.where(rmask, flat_i, 0),
-                       qty=jnp.where(rmask, flat_q, 0),
+    rmask = flat_ok & ~flat.local
+    delta = StockDelta(dst_w=jnp.where(rmask, flat.w, 0),
+                       i_id=jnp.where(rmask, flat.i, 0),
+                       qty=jnp.where(rmask, flat.q, 0),
                        valid=rmask)
 
     # ---- total amount (0 for aborted txns) ---------------------------------
@@ -712,6 +822,130 @@ def _neworder_committed_effects(state: TPCCState, batch: NewOrderBatch,
     total = amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
     total = jnp.where(committed, total, 0.0)
     return state, delta, total
+
+
+def _neworder_fused_effects(state: TPCCState, batch: NewOrderBatch,
+                            scale: TPCCScale, avail0: Array, slot: Array,
+                            line_valid: Array, ramp_ts: Array,
+                            w_lo: int, w_hi: int, admission: str
+                            ) -> tuple[TPCCState, Array, StockDelta, Array,
+                                       Array]:
+    """The FUSED strict-stock New-Order: admission + committed effects +
+    RAMP stamping through one megastep (kernels/txn_megastep.py) instead of
+    the per-phase dispatch sequence — shared by the dense and sparse escrow
+    layouts exactly like ``_neworder_committed_effects`` (the two entry
+    points reduce their state to the same (avail0, slot) admission problem
+    and hand it here).
+
+    The megastep returns effect PRODUCTS over the hot tiles (admission
+    verdicts + settled avail, committed per-district ranks and counts, the
+    three stock slabs, the RAMP stamps); this function lands them:
+
+      * district counters advance by ONE dense vector add (the [B, B] rank
+        matrix and the d_next scatter-add of the scan path are gone);
+      * the stock tables take four dense [Wl, I] vector adds (the scan
+        path's four masked whole-table scatter passes are gone);
+      * the order/order-line row inserts keep their existing one-scatter-
+        per-row path — they are append-mostly table writes, not hot-tile
+        state, and the kernel would gain nothing by owning them.
+
+    Bit-exactness with the scan path holds phase by phase: admission is the
+    shared FCFS core; rank/d_count/slabs are integer sums in identical
+    batch order; s_ytd's f32 adds have integer addends far below 2**24,
+    where any association is exact; stamps/amounts/totals are the scan
+    path's elementwise formulas on identical inputs.
+
+    Returns (state, settled avail, outbox, totals, committed) — the caller
+    derives its layout's spent from ``avail``.
+    """
+    B, L = batch.i_id.shape
+    D, OC, I = scale.districts, scale.order_capacity, scale.n_items
+    Wl = state.s_quantity.shape[0]
+    wl = batch.w - w_lo
+
+    flat = flatten_order_lines(batch, w_lo, w_hi)
+    is_local = flat.local.reshape(B, L)
+    remote_line = flat.remote.reshape(B, L)
+    local_line = line_valid & is_local
+    key_local = (wl * D + batch.d).astype(jnp.int32)               # [B]
+    cell_local = jnp.where(
+        local_line, (batch.supply_w - w_lo) * I + batch.i_id, 0
+    ).astype(jnp.int32)                                            # [B, L]
+    price = state.i_price[wl[:, None], batch.i_id]                 # [B, L]
+    n_keys, n_cells = Wl * D, Wl * I
+
+    if resolve_admission(admission, B, L) == "kernel":
+        from repro.kernels.ops import txn_megastep
+        out = txn_megastep(avail0, slot, batch.qty, line_valid, key_local,
+                           cell_local, local_line, remote_line, ramp_ts,
+                           price, n_keys=n_keys, n_cells=n_cells)
+    else:
+        # scan admission + the vectorized effect-product lowering (the
+        # megastep's products are strategy-independent, so the fused/scan
+        # choice composes freely with the admission choice)
+        from repro.kernels.txn_megastep import (MegastepOut,
+                                                megastep_effect_products)
+        committed, avail = admit_fcfs(avail0, slot, batch.qty, line_valid,
+                                      "scan")
+        out = MegastepOut(committed, avail, *megastep_effect_products(
+            committed, batch.qty, line_valid, key_local, cell_local,
+            local_line, remote_line, ramp_ts, price, n_keys=n_keys,
+            n_cells=n_cells))
+
+    committed = out.committed
+    line_ok = line_valid & committed[:, None]
+
+    # ---- district counters: one gather + one dense vector add --------------
+    o_id = state.d_next_o_id[wl, batch.d] + out.rank               # [B]
+    d_next = state.d_next_o_id + out.d_count.reshape(Wl, D)
+
+    # aborted txns scatter out of range and are dropped (scan path verbatim)
+    slot_o = jnp.where(committed, o_id % OC, OC)                   # [B]
+    at = lambda arr: arr.at[wl, batch.d, slot_o]
+    o_valid = at(state.o_valid).set(True, mode="drop")
+    o_c_id = at(state.o_c_id).set(batch.c, mode="drop")
+    o_ol_cnt = at(state.o_ol_cnt).set(batch.n_lines, mode="drop")
+    o_carrier = at(state.o_carrier).set(-1, mode="drop")
+    o_entry_d = at(state.o_entry_d).set(batch.ts, mode="drop")
+    no_valid = at(state.no_valid).set(True, mode="drop")
+    o_ts = at(state.o_ts).set(ramp_ts, mode="drop")
+
+    ol_valid = at(state.ol_valid).set(line_valid, mode="drop")
+    ol_i_id = at(state.ol_i_id).set(batch.i_id, mode="drop")
+    ol_supply = at(state.ol_supply_w).set(batch.supply_w, mode="drop")
+    ol_qty = at(state.ol_qty).set(
+        jnp.where(line_valid, batch.qty, 0), mode="drop")
+    ol_amount = at(state.ol_amount).set(out.amount, mode="drop")
+    ol_ts = at(state.ol_ts).set(out.ol_ts, mode="drop")
+    ol_vis = at(state.ol_vis).set(line_valid, mode="drop")
+
+    # ---- stock tables: four dense vector adds from the slabs ---------------
+    dec = out.stock_dec.reshape(Wl, I)
+    s_q = state.s_quantity - dec
+    s_ytd = state.s_ytd + dec.astype(state.s_ytd.dtype)
+    s_ocnt = state.s_order_cnt + out.stock_cnt.reshape(Wl, I)
+    s_rcnt = state.s_remote_cnt + out.stock_rcnt.reshape(Wl, I)
+
+    rmask = line_ok.reshape(-1) & ~flat.local
+    delta = StockDelta(dst_w=jnp.where(rmask, flat.w, 0),
+                       i_id=jnp.where(rmask, flat.i, 0),
+                       qty=jnp.where(rmask, flat.q, 0),
+                       valid=rmask)
+
+    disc = state.c_discount[wl, batch.d, batch.c]
+    tax = state.w_tax[wl] + state.d_tax[wl, batch.d]
+    total = out.amount.sum(axis=1) * (1.0 - disc) * (1.0 + tax)
+    total = jnp.where(committed, total, 0.0)
+
+    state = state._replace(
+        d_next_o_id=d_next, o_valid=o_valid, o_c_id=o_c_id,
+        o_ol_cnt=o_ol_cnt, o_carrier=o_carrier, o_entry_d=o_entry_d,
+        no_valid=no_valid, ol_valid=ol_valid, ol_i_id=ol_i_id,
+        ol_supply_w=ol_supply, ol_qty=ol_qty, ol_amount=ol_amount,
+        o_ts=o_ts, ol_ts=ol_ts, ol_vis=ol_vis,
+        s_quantity=s_q, s_ytd=s_ytd, s_order_cnt=s_ocnt,
+        s_remote_cnt=s_rcnt)
+    return state, out.avail, delta, total, committed
 
 
 # ---------------------------------------------------------------------------
@@ -809,7 +1043,8 @@ def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
                                  w_lo: int = 0, w_hi: int | None = None,
                                  replica: Array | int = 0,
                                  num_replicas: int = 1,
-                                 admission: str = "scan"
+                                 admission: str = "scan",
+                                 effects: str = "scan"
                                  ) -> tuple[TPCCState, Array, StockDelta,
                                             Array, Array]:
     """Strict-stock New-Order over the TWO-TIER escrow layout.
@@ -833,7 +1068,9 @@ def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
 
     Everything is replica-local: zero collectives. ``admission`` selects
     the :func:`admit_fcfs` strategy ("scan" baseline vs the contention
-    gate + Pallas FCFS kernel, bit-identical). Returns
+    gate + Pallas FCFS kernel, bit-identical); ``effects`` selects the
+    committed-effects strategy ("scan" dispatch vs the one-kernel megastep,
+    bit-identical). Returns
     (state, hot_spent', remote outbox, totals, committed mask [B]).
     """
     w_hi = scale.n_warehouses if w_hi is None else w_hi
@@ -848,6 +1085,12 @@ def apply_neworder_escrow_sparse(state: TPCCState, hot_keys: Array,
     avail0, slot = sparse_admission_problem(
         state.s_quantity, hot_keys, hot_shares - hot_spent,
         batch.supply_w, batch.i_id, I, w_lo, w_hi)
+
+    if resolve_effects(effects) == "fused":
+        state, avail, delta, total, committed = _neworder_fused_effects(
+            state, batch, scale, avail0, slot, line_valid, ramp_ts,
+            w_lo, w_hi, admission)
+        return state, hot_shares - avail[:K], delta, total, committed
 
     # slots identify cells (hot < K <= cold local < sentinel; remote-cold
     # collisions on the sentinel only over-count against BIG, which cannot

@@ -79,6 +79,12 @@ def test_dryrun_tpcc_zero_collective_hot_path():
         assert cells[0]["escrow_audit"]["audit_ok"]
         assert cells[0]["escrow_audit"]["committed"] > 0
         assert cells[0]["escrow_audit"]["escrow_layout"] == "sparse"
+        # the ONE-KERNEL megastep (effects="fused"): the fused admission +
+        # effects + RAMP-stamp hot path compiles collective-free at spec
+        # scale and its whole VMEM working set fits the ~16 MB budget
+        fm = cells[0]["megastep_fused"]
+        assert fm["collectives"]["counts"] == {}
+        assert 0 < fm["megastep_vmem_bytes"] <= 16 * 2 ** 20
 
 
 @pytest.mark.slow
