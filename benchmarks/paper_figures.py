@@ -904,6 +904,97 @@ def escrow_failures() -> tuple[list, dict]:
                    f"audit + exact cold ledger on both runs"}
 
 
+def liveness() -> tuple[list, dict]:
+    """Self-detecting degraded-mode serving (the PR-10 acceptance row).
+
+    Same seeded stream twice through the escrow pod simulator in
+    SELF-DETECTING mode (lease monitor derives the alive mask from
+    heartbeat stamps — NOBODY passes a liveness mask) with last-retry
+    reservations on: once steady, once with one replica killed for the
+    middle third and revived (remounting the successor-maintained durable
+    image, not a checkpoint).  The fleet must detect the kill within the
+    lease bound, re-key the dead shard to its ring-order successor, keep
+    committing degraded, and hand the shard back on revival — with the
+    audit, the exact cold ledger, AND the reservation extension
+    (res_granted == res_completed at quiescence) all holding.
+
+    The guarded ratio is deterministic committed counts: degraded /
+    steady.  One of four frontends silent for a third of the run plus
+    detection lag bounds the naive floor near (1 - 1/4 * 1/3) ~ 0.92 of
+    steady minus detection windows; the acceptance floor is 0.6.
+
+    Committed as ``BENCH_liveness.json``; guarded in CI by
+    benchmarks/regression_guard.py (field ``degraded_vs_steady``).
+    """
+    from repro.runtime.failures import EscrowPodSimulator
+    from repro.txn.audit import check_cold_ledger
+    from repro.txn.tpcc import TPCCScale
+
+    scale = TPCCScale(n_warehouses=4, districts=2, customers=16,
+                      n_items=64, order_capacity=1024, max_lines=15)
+    windows, batch = 12, 16
+
+    def run(kill: bool) -> dict:
+        sim = EscrowPodSimulator(scale, n_replicas=4, retry_cap=128,
+                                 retry_max=3, seed=11, stock_scale=3,
+                                 liveness=True, reserve=True)
+        detected_in = None
+        for t in range(windows):
+            if kill and t == windows // 3:
+                sim.kill(2)
+                killed_at = t
+            if kill and t == 2 * windows // 3:
+                sim.revive(2)
+            sim.step(batch, remote_frac=0.5, item_skew=1.2)
+            sim.drain()
+            sim.refresh()
+            if kill and detected_in is None and not sim.alive[2]:
+                detected_in = t - killed_at + 1
+        sim.quiesce()
+        sim.refresh()
+        led = sim.cold_ledger()
+        check_cold_ledger(led, quiescent=True)
+        rep = sim.audit()
+        out = {"mode": "degraded" if kill else "steady",
+               "committed": sim.committed,
+               "final_rejects": led["final_rejects"],
+               "res_granted": led["res_granted"],
+               "res_completed": led["res_completed"],
+               "cold_ledger_exact": led["exact"],
+               "reservations_exact": led["reservations_exact"],
+               "audit_ok": rep.ok}
+        if kill:
+            out["detected_in_windows"] = detected_in
+            out["detection_bound"] = sim.monitor.detection_bound
+            out["detection_lags"] = sim.monitor.detection_lags()
+            out["handback_ok"] = sim.owner_of[2] == 2 and sim.alive[2]
+        return out
+
+    steady = run(kill=False)
+    degraded = run(kill=True)
+    assert steady["audit_ok"] and degraded["audit_ok"]
+    assert degraded["detected_in_windows"] is not None \
+        and degraded["detected_in_windows"] <= degraded["detection_bound"]
+    assert degraded["handback_ok"], "shard not handed back after revival"
+    ratio = degraded["committed"] / steady["committed"]
+    assert ratio >= 0.6, ratio
+    summary = {"mode": "summary",
+               "degraded_vs_steady": ratio,
+               "steady_committed": steady["committed"],
+               "degraded_committed": degraded["committed"],
+               "detected_in_windows": degraded["detected_in_windows"],
+               "detection_bound": degraded["detection_bound"],
+               "outage_windows": windows // 3,
+               "windows": windows}
+    return [summary, steady, degraded], {
+        "name": "liveness", "us_per_call": 0.0,
+        "derived": f"self-detected kill in {degraded['detected_in_windows']}"
+                   f"/{degraded['detection_bound']} windows; degraded run "
+                   f"retains {ratio:.1%} of steady committed work "
+                   f"({degraded['committed']}/{steady['committed']}), audit "
+                   f"+ reservation-extended exact ledger on both runs"}
+
+
 def megastep_fused() -> tuple[list, dict]:
     """The one-kernel megastep (``effects="fused"``: admission + committed
     effects + RAMP stamping over one residency of the hot tiles,
@@ -1126,4 +1217,4 @@ ALL = [table2, fig3_commitment, tpcc_invariants, fig4_neworder,
        fig5_distributed, fig6_scaling, ramp_read, fused_vs_dispatch,
        escrow_vs_2pc, escrow_sparse_vs_dense, escrow_admission,
        megastep_fused, obs_overhead, theorem1_dynamics, straggler_merge,
-       escrow_failures]
+       escrow_failures, liveness]

@@ -30,7 +30,14 @@ benchmark read. Guarded rows:
     through a kill -> reclaim -> recover cycle vs the identical steady run;
     DETERMINISTIC transaction counts (not walls), so the tight tolerance
     costs no flakiness — a drop means share reclamation or the retry ring
-    stopped recovering work.
+    stopped recovering work;
+  * ``liveness`` (BENCH_liveness.json, field ``degraded_vs_steady``,
+    tolerance 0.95) — committed-work retention while the fleet SELF-detects
+    a killed replica from heartbeat stamps (no caller-provided mask),
+    re-keys its shard to the ring successor, and serves degraded until
+    revival; deterministic committed counts again, and the row itself
+    asserts detection within the lease bound plus the reservation-extended
+    exact cold ledger.
 
 The committed baseline only RATCHETS UP: ``--promote`` overwrites it with
 the fresh measurement when the fresh value is higher, and leaves it alone

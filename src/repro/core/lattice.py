@@ -27,6 +27,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 PyTree = Any
@@ -623,6 +624,75 @@ register_lattice("versioned", VersionedSlots.join, VersionedSlots.make)
 
 
 # ---------------------------------------------------------------------------
+# Lease lattice — liveness as a CALM computation (heartbeat high-water marks)
+# ---------------------------------------------------------------------------
+
+
+_LEASE_EPOCH_SHIFT = 32
+
+
+def pack_lease_stamp(epoch, seq):
+    """Pack an (epoch, seq) heartbeat into one monotone int64 stamp.
+
+    ``epoch`` is the replica's incarnation number (bumped on every rejoin)
+    and ``seq`` its heartbeat sequence within the incarnation; the packed
+    stamp is strictly increasing across a replica's lifetime, so the fleet
+    view of it is a MaxReg.  Stamps are host-resident numpy int64 (they
+    ride the drain exchange as metadata, not device tensors — and numpy
+    keeps 64-bit math regardless of the jax_enable_x64 flag)."""
+    return (np.asarray(epoch, np.int64) << _LEASE_EPOCH_SHIFT) | (
+        np.asarray(seq, np.int64) & ((1 << _LEASE_EPOCH_SHIFT) - 1))
+
+
+def unpack_lease_stamp(stamp):
+    stamp = np.asarray(stamp, np.int64)
+    return (stamp >> _LEASE_EPOCH_SHIFT,
+            stamp & ((1 << _LEASE_EPOCH_SHIFT) - 1))
+
+
+class LeaseLattice(NamedTuple):
+    """Per-replica heartbeat high-water marks — membership without rounds.
+
+    Slot r holds the highest (epoch, seq) stamp ever observed from replica
+    r (see :func:`pack_lease_stamp`); the join is the elementwise MaxReg.
+    Heartbeats are monotone, so every fleet member's view only grows and
+    joins commute/associate/idempote — liveness *knowledge* propagates
+    coordination-free by riding any existing exchange (here: the
+    anti-entropy drain). The non-monotone part — declaring a replica dead
+    when its lease expires — is a LOCAL threshold over this lattice
+    (``runtime/liveness.LeaseMonitor``), never a negotiated decision, which
+    is exactly the CALM boundary: monotone facts merge, the sole
+    non-monotone inference is derived independently (and identically) by
+    each observer from its own join state.
+
+    Stamps live host-side as numpy int64: a fleet's worth of them is [R]
+    scalars piggybacked on the drain window, and numpy arithmetic keeps the
+    full 64-bit epoch<<32|seq packing even when jax_enable_x64 is off.
+    """
+
+    stamps: np.ndarray  # [R] int64 packed (epoch, seq) high-water marks
+
+    @staticmethod
+    def make(n_replicas: int) -> "LeaseLattice":
+        return LeaseLattice(np.zeros((n_replicas,), np.int64))
+
+    def beat(self, replica, epoch, seq) -> "LeaseLattice":
+        """Record replica's own heartbeat (a monotone local write)."""
+        stamps = np.asarray(self.stamps, np.int64).copy()
+        stamps[replica] = max(int(stamps[replica]),
+                              int(pack_lease_stamp(epoch, seq)))
+        return LeaseLattice(stamps)
+
+    @staticmethod
+    def join(a: "LeaseLattice", b: "LeaseLattice") -> "LeaseLattice":
+        return LeaseLattice(np.maximum(np.asarray(a.stamps, np.int64),
+                                       np.asarray(b.stamps, np.int64)))
+
+
+register_lattice("lease", LeaseLattice.join, LeaseLattice.make)
+
+
+# ---------------------------------------------------------------------------
 # Pytree-level merge: apply a named join leafwise over matching pytrees
 # ---------------------------------------------------------------------------
 
@@ -659,7 +729,8 @@ def tree_join_flat(names: tuple, a: PyTree, b: PyTree) -> PyTree:
         a, is_leaf=lambda x: isinstance(x, (GCounter, PNCounter, LWWRegister,
                                             TwoPhaseSet, EscrowCounter,
                                             HotSetEscrow, VersionedSlots,
-                                            CounterLattice, HistogramLattice)))
+                                            CounterLattice, HistogramLattice,
+                                            LeaseLattice)))
     b_leaves = treedef.flatten_up_to(b)
     if len(names) != len(a_leaves):
         raise ValueError(f"{len(names)} names for {len(a_leaves)} state groups")

@@ -26,16 +26,19 @@ import numpy as np
 
 from .ledger import CoordinationLedger, build_ledger
 from .metrics import (N_TXN_TYPES, OBS_BINS, TXN_TYPES, ObsMetrics,
-                      add_cold_rejects, init_obs_metrics, item_access_summary,
-                      latency_summary, make_obs_metrics, obs_metrics_join,
-                      obs_metrics_specs, obs_partition_specs)
+                      add_cold_rejects, heartbeat_lag_histogram,
+                      heartbeat_lag_summary, init_obs_metrics,
+                      item_access_summary, latency_summary, make_obs_metrics,
+                      obs_metrics_join, obs_metrics_specs,
+                      obs_partition_specs)
 from .trace import PhaseTracer
 
 __all__ = [
     "ObsSession", "PhaseTracer", "CoordinationLedger", "build_ledger",
     "ObsMetrics", "make_obs_metrics", "init_obs_metrics", "obs_metrics_join",
     "obs_metrics_specs", "obs_partition_specs", "add_cold_rejects",
-    "latency_summary", "item_access_summary", "TXN_TYPES", "N_TXN_TYPES",
+    "latency_summary", "item_access_summary", "heartbeat_lag_histogram",
+    "heartbeat_lag_summary", "TXN_TYPES", "N_TXN_TYPES",
     "OBS_BINS",
 ]
 
@@ -59,6 +62,7 @@ class ObsSession:
         self.tracer = PhaseTracer(enabled=trace, sync=sync_spans)
         self.device_metrics: ObsMetrics | None = None
         self.metrics: ObsMetrics | None = None   # host copy, set at finish
+        self.heartbeat_lag = None                # HistogramLattice | None
         self.ledger: CoordinationLedger | None = None
         self.stats = None
         self._engine = None
@@ -116,6 +120,22 @@ class ObsSession:
             return None
         return item_access_summary(self.metrics, top_k)
 
+    def record_heartbeat_lags(self, lags) -> None:
+        """Fold detection-latency samples (``LeaseMonitor.detection_lags``,
+        in drain windows) into the session's heartbeat-lag histogram.
+        Repeated records are the LOCAL monotone write (bin adds on this
+        session's lane); merging views from *distinct* observers is the
+        lattice join (``HistogramLattice.join`` over their lanes)."""
+        hist = heartbeat_lag_histogram(lags)
+        self.heartbeat_lag = hist if self.heartbeat_lag is None else \
+            self.heartbeat_lag._replace(
+                counts=self.heartbeat_lag.counts + hist.counts)
+
+    def detection_latency_summary(self) -> dict | None:
+        if self.heartbeat_lag is None:
+            return None
+        return heartbeat_lag_summary(self.heartbeat_lag)
+
     def snapshot(self) -> dict:
         """The full JSON-ready snapshot: closed-loop stats, per-txn-type
         latency quantiles, counters, item-access profile, phase spans, and
@@ -138,6 +158,8 @@ class ObsSession:
                     np.asarray(self.metrics.cold_rejects.slots).tolist(),
             }
             snap["item_access"] = self.item_access_summary()
+        if self.heartbeat_lag is not None:
+            snap["detection_latency"] = self.detection_latency_summary()
         snap["spans"] = self.tracer.snapshot()
         if self.ledger is not None:
             snap["ledger"] = self.ledger.snapshot()

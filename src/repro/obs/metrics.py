@@ -269,6 +269,32 @@ def latency_summary(metrics_host, step_wall_s: float | None = None) -> dict:
     return out
 
 
+def heartbeat_lag_histogram(lags, n_bins: int = OBS_BINS) -> HistogramLattice:
+    """Detection-latency samples (``LeaseMonitor.detection_lags``, in drain
+    windows) folded into a 1-lane HistogramLattice — same log2-spaced bins
+    and join discipline as the latency-proxy histograms, so monitor views
+    from many observers (or many runs) merge commutatively and the snapshot
+    layer summarizes them with the one quantile helper."""
+    import numpy as np
+    hist = HistogramLattice.make(1, n_bins)
+    lags = jnp.asarray(np.asarray(lags, np.int64).reshape(-1))
+    if lags.size == 0:
+        return hist
+    counts = _bin_counts(hist, lags, jnp.ones_like(lags))
+    return hist._replace(counts=hist.counts.at[0].add(
+        counts.astype(hist.counts.dtype)))
+
+
+def heartbeat_lag_summary(hist: HistogramLattice) -> dict:
+    """p50/p99/max-bin detection latency (in drain windows) from a merged
+    heartbeat-lag histogram."""
+    import numpy as np
+    merged = np.asarray(hist.counts).sum(axis=0)
+    return {"count": int(merged.sum()),
+            "p50_windows": histogram_quantile(hist.edges, merged, 0.50),
+            "p99_windows": histogram_quantile(hist.edges, merged, 0.99)}
+
+
 def item_access_summary(metrics_host, top_k: int = 10) -> dict:
     """The live Zipf profile: merged per-item demand, top-K items, and the
     hot fraction — the hot-set re-keying input (ROADMAP item 2)."""

@@ -38,21 +38,28 @@ class PodSimulator:
 
     setup: object          # coord.TrainSetup built on a pod-free mesh
     n_pods: int
-    states: list = None
-    alive: list = None
+    states: list = dataclasses.field(default_factory=list)
+    alive: list = dataclasses.field(default_factory=list)
+    metric_joined: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
-        self.states = [self.setup.init_fn(jax.random.PRNGKey(7))
-                       for _ in range(self.n_pods)]
-        self.alive = [True] * self.n_pods
+        # default_factory (not a shared default, not an unconditional
+        # overwrite): two simulators never alias the same list, and a
+        # caller-provided fleet image survives construction
+        if not self.states:
+            self.states = [self.setup.init_fn(jax.random.PRNGKey(7))
+                           for _ in range(self.n_pods)]
+        if not self.alive:
+            self.alive = [True] * self.n_pods
         # host-side G-counter view of the fleet's metrics: slot i is pod
         # i's contribution as of its last merge (slotwise max-join — each
         # pod only ever grows its own slot)
-        self.metric_joined = {
-            "loss": np.zeros(self.n_pods),
-            "tokens": np.zeros(self.n_pods),
-            "grad_norm": np.zeros(self.n_pods),
-        }
+        if not self.metric_joined:
+            self.metric_joined = {
+                "loss": np.zeros(self.n_pods),
+                "tokens": np.zeros(self.n_pods),
+                "grad_norm": np.zeros(self.n_pods),
+            }
 
     def step(self, batches: list) -> None:
         for i in range(self.n_pods):
@@ -189,6 +196,33 @@ class EscrowPodSimulator:
     frozen image, since only the owner writes its slice — then its queue
     drains through its ring and the twelve audit criteria hold on the
     reassembled state (tests/test_failures.py).
+
+    **Self-detecting mode** (``liveness=True``): nobody calls ``kill`` on
+    the fleet's behalf — ``kill``/``stall`` only flip the replica's OWN
+    process state, and the fleet finds out through the heartbeat/lease
+    lattice (``runtime.liveness.LeaseMonitor``).  Each drain window every
+    serving replica beats (a monotone (epoch, seq) stamp joined through the
+    same anti-entropy exchange that carries the outboxes); the monitor
+    derives the alive mask locally with hysteresis, so a straggler that
+    stalls for one window survives while a dead replica is detected within
+    ``monitor.detection_bound`` windows.  On detection the fleet degrades
+    elastically instead of freezing the dead owner's shard: ``owner_of``
+    re-keys each shard to its ring-order successor among monitor-alive
+    replicas, and the successor mounts the dead shard's durable image
+    (slice + ring + queue — only the owner ever wrote them) and keeps
+    draining its cold traffic.  ``revive`` hands the shard back (epoch
+    bump keeps stamps monotone); a falsely-suspected replica self-fences
+    (it stops serving while the fleet's view says dead — the lease
+    discipline that prevents split-brain with a live successor) but keeps
+    beating, so it is re-admitted automatically.
+
+    **Reservations** (``reserve=True``): a cold ring entry on its LAST
+    permitted retry converts to an owner-granted reservation instead of a
+    final reject — stock is debited at grant (smallest-first per cell, so
+    a grant never oversells) and the entry completes one window later,
+    bounding tail starvation for small lines stuck behind never-fitting
+    blockers.  The cold ledger extends with
+    ``res_granted == res_completed + reserved_in_ring`` and stays exact.
     """
 
     scale: object               # tpcc.TPCCScale
@@ -198,6 +232,10 @@ class EscrowPodSimulator:
     hot_items: int | None = None
     seed: int = 0
     stock_scale: int = 1        # plump inventory (decouple from exhaustion)
+    reserve: bool = False       # last-retry owner-granted reservations
+    liveness: bool = False      # self-detecting lease mode (no caller mask)
+    lease_expiry: int = 1       # windows without a beat before SUSPECT
+    lease_hysteresis: int = 1   # suspect windows absorbed before DEAD
 
     def __post_init__(self):
         from repro.core.lattice import HotSetEscrow
@@ -225,13 +263,26 @@ class EscrowPodSimulator:
                                      self._hot_budgets())
         self.rings = [tpcc.empty_retry(self.retry_cap) for _ in range(R)]
         self.pending = [[] for _ in range(R)]   # owner -> [(dst_w,i,qty)]
-        self.alive = [True] * R
+        self.alive = [True] * R     # the fleet's VIEW (derived in liveness mode)
         self.ts0 = [0] * R
+        # replica process truth (what the lease lattice must discover):
+        self.up = [True] * R        # kill() flips this, never alive[]
+        self.stalled = [0] * R      # windows this replica will miss
+        self.hb_seq = [0] * R       # heartbeat sequence (beats each window)
+        self.epoch = [0] * R        # bumped on revive/recover (monotone stamps)
+        self.owner_of = list(range(R))   # shard -> serving replica
+        self.monitor = None
+        if self.liveness:
+            from repro.runtime.liveness import LeaseMonitor
+            self.monitor = LeaseMonitor(R, expiry=self.lease_expiry,
+                                        hysteresis=self.lease_hysteresis)
         # exact cold-tier ledger: sent == applied + final + queued + in-ring
         self.cold_sent = 0
         self.cold_applied = 0
         self.final_rejects = 0
         self.committed = 0          # New-Orders admitted fleet-wide
+        self.res_granted = 0        # reservations granted (stock debited)
+        self.res_completed = 0      # reservations completed (left the ring)
 
     # -- internal helpers ----------------------------------------------------
 
@@ -258,7 +309,75 @@ class EscrowPodSimulator:
     # -- replica lifecycle ---------------------------------------------------
 
     def kill(self, replica: int) -> None:
-        self.alive[replica] = False
+        """Crash one replica's process.  In liveness mode this touches ONLY
+        the replica's own ``up`` bit — the fleet's ``alive`` view changes
+        when (and only when) the lease monitor detects the missing beats;
+        the legacy path keeps the omniscient instant flip."""
+        self.up[replica] = False
+        if not self.liveness:
+            self.alive[replica] = False
+
+    def stall(self, replica: int, windows: int) -> None:
+        """Straggler injection: the replica misses ``windows`` drain windows
+        (no serving, no beats) but is NOT dead — whether the fleet falsely
+        suspects it depends on the lease hysteresis."""
+        self.stalled[replica] = windows
+
+    def revive(self, replica: int) -> None:
+        """Rejoin: remount the shard's CURRENT durable image (a successor
+        may have applied work to it — restoring a checkpoint here would
+        lose that) and resume beating under a bumped epoch so the revived
+        stamps stay strictly above everything the old incarnation wrote."""
+        self.up[replica] = True
+        self.stalled[replica] = 0
+        self.epoch[replica] += 1
+        self.hb_seq[replica] = 0
+        if not self.liveness:
+            self.alive[replica] = True
+
+    def _serving(self, replica: int) -> bool:
+        """A replica serves iff its process is healthy AND its own lease
+        view says it is alive (self-fencing: once the fleet could have
+        re-keyed its shard to a successor, a falsely-suspected replica must
+        not also write — the split-brain guard)."""
+        return (self.up[replica] and self.stalled[replica] == 0
+                and self.alive[replica])
+
+    def _tick_liveness(self) -> None:
+        """One lease window: healthy replicas beat, stalls age one window,
+        the monitor joins the fleet's stamps (riding the drain exchange —
+        no extra collective) and re-derives the alive mask, and shard
+        ownership re-keys to ring-order successors."""
+        from repro.core.lattice import pack_lease_stamp
+        R = self.n_replicas
+        for r in range(R):
+            if self.up[r] and self.stalled[r] == 0:
+                self.hb_seq[r] += 1
+            if self.stalled[r] > 0:
+                self.stalled[r] -= 1
+        stamps = np.asarray([int(pack_lease_stamp(self.epoch[r],
+                                                  self.hb_seq[r]))
+                             for r in range(R)], np.int64)
+        self.monitor.observe(stamps)
+        self.alive = [bool(a) for a in self.monitor.tick()]
+        self._rekey_owners()
+
+    def _rekey_owners(self) -> None:
+        """Deterministic successor election, no negotiation: every observer
+        with the same lease view computes the same map — a monitor-alive
+        shard owner keeps (or takes back) its shard; a dead owner's shard
+        goes to the next monitor-alive replica in ring order; with nobody
+        alive the shard freezes in place."""
+        R = self.n_replicas
+        for s in range(R):
+            if self.alive[s]:
+                self.owner_of[s] = s
+                continue
+            for k in range(1, R):
+                cand = (s + k) % R
+                if self.alive[cand]:
+                    self.owner_of[s] = cand
+                    break
 
     def checkpoint(self, directory: str, step: int):
         """Full run image (reassembled state + escrow + stacked rings)
@@ -282,17 +401,24 @@ class EscrowPodSimulator:
         if rr.retry is not None:
             self.rings[replica] = jax.tree.map(
                 lambda x: jnp.asarray(x[replica]), rr.retry)
-        self.alive[replica] = True
+        self.up[replica] = True
+        self.stalled[replica] = 0
+        self.epoch[replica] += 1
+        self.hb_seq[replica] = 0
+        if not self.liveness:
+            self.alive[replica] = True
 
     # -- the run -------------------------------------------------------------
 
     def step(self, batch_size: int, remote_frac: float = 0.3,
              item_skew: float = 1.2) -> None:
-        """One New-Order batch on every LIVE replica; remote lines route to
-        the owners' pending queues (messages in flight)."""
+        """One New-Order batch on every SERVING replica; remote lines route
+        to the owners' pending queues (messages in flight).  A killed or
+        stalled replica's frontend is silent; a self-fenced (falsely
+        suspected) replica admits nothing until re-admitted."""
         tpcc = self._tpcc
         for r in range(self.n_replicas):
-            if not self.alive[r]:
+            if not self._serving(r):
                 continue
             batch = tpcc.generate_neworder(
                 self.rng, self.scale, batch_size, remote_frac=remote_frac,
@@ -318,13 +444,21 @@ class EscrowPodSimulator:
                         self.cold_sent += 1
 
     def drain(self) -> None:
-        """Every LIVE owner applies its queued entries through its retry
-        ring (dead owners' queues and rings stay frozen)."""
+        """Each shard's queued entries apply through its retry ring when
+        its SERVING replica (``owner_of`` — the owner itself, or its
+        adopted successor once the monitor re-keyed) is up; otherwise the
+        shard's queue and ring freeze in place.  With ``reserve`` on,
+        last-retry entries convert to reservations (granted now, completed
+        next window) and the extended ledger counters track them.  In
+        liveness mode the window closes with one lease tick: beats join,
+        the alive view re-derives, ownership re-keys."""
         tpcc = self._tpcc
-        for r in range(self.n_replicas):
-            if not self.alive[r]:
+        for s in range(self.n_replicas):
+            server = self.owner_of[s]
+            if not (self.up[server] and self.stalled[server] == 0
+                    and self.alive[server]):
                 continue
-            q = self.pending[r]
+            q = self.pending[s]
             width = 8
             while width < max(len(q), 1):
                 width *= 2                  # pad: bounded recompile count
@@ -332,23 +466,43 @@ class EscrowPodSimulator:
             iid = np.zeros(width, np.int32)
             qty = np.zeros(width, np.int32)
             mask = np.zeros(width, bool)
-            for j, (w, i, s) in enumerate(q):
-                dst[j], iid[j], qty[j], mask[j] = w, i, s, True
+            for j, (w, i, sz) in enumerate(q):
+                dst[j], iid[j], qty[j], mask[j] = w, i, sz, True
             new_cold = sum(1 for (w, i, _) in q if self._is_cold(w, i))
-            ring_before = int(np.asarray(self.rings[r].valid).sum())
+            ring = self.rings[s]
+            ring_before = int(np.asarray(ring.valid).sum())
+            res_before = int(np.asarray(ring.valid & ring.reserved).sum())
             st, ring, final = tpcc.apply_stock_updates_strict_tiered_retry(
-                self.slices[r], self.hot_keys, jnp.asarray(dst),
+                self.slices[s], self.hot_keys, jnp.asarray(dst),
                 jnp.asarray(iid), jnp.asarray(qty), jnp.asarray(mask),
-                jnp.ones(width, jnp.bool_), self.rings[r],
-                self.scale.n_items, w_lo=r * self.wp,
-                retry_max=self.retry_max)
-            self.slices[r], self.rings[r] = st, ring
-            self.pending[r] = []
+                jnp.ones(width, jnp.bool_), ring,
+                self.scale.n_items, w_lo=s * self.wp,
+                retry_max=self.retry_max,
+                reserve=1 if self.reserve else 0)
+            self.slices[s], self.rings[s] = st, ring
+            self.pending[s] = []
             final = int(final)
             ring_after = int(np.asarray(ring.valid).sum())
+            res_after = int(np.asarray(ring.valid & ring.reserved).sum())
             self.final_rejects += final
+            # reserved entries count APPLIED at completion (the pass-0
+            # drop), which is exactly when they leave the ring — the base
+            # conservation identity needs no reservation special-casing
             self.cold_applied += (ring_before + new_cold
                                   - ring_after - final)
+            if self.reserve:
+                self.res_completed += res_before   # pass 0 completed these
+                self.res_granted += res_after      # pass 3 granted these
+        if self.liveness:
+            self._tick_liveness()
+
+    def quiesce(self, rounds: int | None = None) -> None:
+        """Drain until every in-flight and in-ring entry has resolved —
+        ``retry_max`` windows to exhaust retries plus one for a last-window
+        reservation to complete, with one window of slack."""
+        for _ in range(rounds if rounds is not None
+                       else self.retry_max + 3):
+            self.drain()
 
     def refresh(self) -> None:
         """Liveness-aware share refresh: dead rows reclaim to survivors,
@@ -370,11 +524,20 @@ class EscrowPodSimulator:
                      for q in self.pending)
         in_ring = sum(int(np.asarray(ring.valid).sum())
                       for ring in self.rings)
+        reserved_in_ring = sum(
+            int(np.asarray(ring.valid & ring.reserved).sum())
+            for ring in self.rings)
         return {"sent": self.cold_sent, "applied": self.cold_applied,
                 "final_rejects": self.final_rejects, "queued": queued,
                 "in_ring": in_ring,
+                "reserved_in_ring": reserved_in_ring,
+                "res_granted": self.res_granted,
+                "res_completed": self.res_completed,
                 "exact": (self.cold_sent == self.cold_applied
-                          + self.final_rejects + queued + in_ring)}
+                          + self.final_rejects + queued + in_ring),
+                "reservations_exact": (self.res_granted
+                                       == self.res_completed
+                                       + reserved_in_ring)}
 
     def audit(self):
         from repro.txn.audit import assert_audit

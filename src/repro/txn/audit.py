@@ -131,3 +131,28 @@ def assert_audit(state: TPCCState, **kwargs) -> AuditReport:
     rep = audit_tpcc(state, **kwargs)
     assert rep.ok, f"TPC-C audit failed: {rep.failures}"
     return rep
+
+
+def check_cold_ledger(ledger: dict, *, quiescent: bool = False) -> None:
+    """Validate a cold-tier ledger dict (``EscrowPodSimulator.cold_ledger``)
+    including its reservation extension.
+
+    Always: every optimistically admitted cold line is accounted for
+    (sent == applied + final_rejects + queued + in_ring) and each
+    granted reservation is either completed or still riding a ring
+    (res_granted == res_completed + reserved_in_ring).  With
+    ``quiescent=True``, additionally nothing may still be in flight:
+    queued == in_ring == reserved_in_ring == 0, so the exactness is the
+    strong two-way split sent == applied + final_rejects and
+    res_granted == res_completed.
+    """
+    assert ledger["exact"], (
+        "cold ledger leak: sent != applied + final + queued + in_ring: "
+        f"{ledger}")
+    assert ledger.get("reservations_exact", True), (
+        f"reservation ledger leak: granted != completed + in_ring: {ledger}")
+    if quiescent:
+        assert ledger["queued"] == 0 and ledger["in_ring"] == 0, (
+            f"ledger not quiescent: {ledger}")
+        assert ledger.get("reserved_in_ring", 0) == 0, (
+            f"reservation still in flight at quiescence: {ledger}")

@@ -281,7 +281,8 @@ def run_loop(engine, state: TPCCState, esc=None, *,
              deliveries: bool = False, fused: bool = True,
              legacy: bool = False, audit: bool = False, obs=None,
              retry_cap: int = 0, retry_max: int = 0, retry=None,
-             alive=None, final_flush: bool = True,
+             alive=None, liveness=None, retry_reserve: int = 0,
+             final_flush: bool = True,
              return_retry: bool = False,
              ) -> tuple[TPCCState, object, MixStats]:
     """Drive the engine's plan-selected regime over a pre-generated stream.
@@ -313,7 +314,15 @@ def run_loop(engine, state: TPCCState, esc=None, *,
     FINAL ``cold_rejects`` (``retry`` resumes a checkpointed ring;
     ``final_flush=False`` leaves run-end pending entries in the returned
     ring instead of flushing them to the reject count). ``alive``
-    ([n_shards] mask) threads share reclamation into every refresh.
+    ([n_shards] mask) threads share reclamation into every refresh;
+    ``liveness`` (a ``runtime.liveness.LeaseMonitor``) replaces the caller-
+    provided mask with a SELF-DERIVED one — the monitor is ticked once per
+    drain window and its alive mask feeds the refresh, so kill -> detect ->
+    reclaim closes with no omniscient caller. ``retry_reserve=1`` enables
+    owner-granted reservations: a ring entry on its last permitted retry is
+    granted stock ahead of the young cold queue (smallest-first per cell)
+    instead of final-rejecting, bounding tail starvation; ``retry_reserve=0``
+    is bit-identical to the pre-reservation path.
     ``return_retry=True`` appends the retry ring to the return tuple.
     """
     escrow = engine.stock_regime is CoordClass.ESCROW
@@ -355,6 +364,7 @@ def run_loop(engine, state: TPCCState, esc=None, *,
             refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
             escrow=escrow, obs=obs, retry_cap=retry_cap,
             retry_max=retry_max, retry=retry, alive=alive,
+            liveness=liveness, retry_reserve=retry_reserve,
             final_flush=final_flush)
     else:
         state, esc, stats, retry = _dispatch_loop(
@@ -364,6 +374,7 @@ def run_loop(engine, state: TPCCState, esc=None, *,
             refresh_abort_rate=refresh_abort_rate, deliveries=deliveries,
             escrow=escrow, legacy=legacy, retry_cap=retry_cap,
             retry_max=retry_max, retry=retry, alive=alive,
+            liveness=liveness, retry_reserve=retry_reserve,
             final_flush=final_flush)
 
     if audit:
@@ -393,7 +404,8 @@ def run_loop(engine, state: TPCCState, esc=None, *,
 def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                 merge_every, refresh_every, refresh_abort_rate, deliveries,
                 escrow, obs=None, retry_cap=0, retry_max=0, retry=None,
-                alive=None, final_flush=True):
+                alive=None, liveness=None, retry_reserve=0,
+                final_flush=True):
     from .executor import get_fused_executor, stack_chunks
 
     chunks = stack_chunks(no_b, pay_b, os_b, sl_b, merge_every)
@@ -403,7 +415,8 @@ def _fused_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
         state, esc, counters, wall, refreshes, cold, retry = ex.run_escrow(
             state, esc, chunks, refresh_every=refresh_every,
             refresh_abort_rate=refresh_abort_rate, obs=obs, retry=retry,
-            retry_max=retry_max, alive=alive, final_flush=final_flush)
+            retry_max=retry_max, alive=alive, liveness=liveness,
+            reserve=retry_reserve, final_flush=final_flush)
         return state, esc, counters_to_stats(
             counters, anti_entropy_rounds=len(chunks), wall_seconds=wall,
             refreshes=refreshes, cold_rejects=cold), retry
@@ -416,7 +429,7 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
                    batch_per_shard, merge_every, refresh_every,
                    refresh_abort_rate, deliveries, escrow, legacy,
                    retry_cap=0, retry_max=0, retry=None, alive=None,
-                   final_flush=True):
+                   liveness=None, retry_reserve=0, final_flush=True):
     """The per-batch dispatch baseline (one jitted call per transaction type
     per batch) — the comparison target the fused executor is measured
     against, and the reference semantics for bit-exactness tests."""
@@ -457,7 +470,8 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
         wwin.put(outbox)
         if use_retry:
             warm, _, _ = engine.drain_strict_retry(
-                warm, wwin.flat(), engine.init_retry(retry_cap), retry_max)
+                warm, wwin.flat(), engine.init_retry(retry_cap), retry_max,
+                retry_reserve)
         elif escrow:
             warm, _ = engine.drain_strict(warm, wwin.flat())
         else:
@@ -535,7 +549,7 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
             # regime legacy mode keeps the seed's one jitted call per outbox
             if use_retry:
                 state, retry, rej = engine.drain_strict_retry(
-                    state, window.flat(), retry, retry_max)
+                    state, window.flat(), retry, retry_max, retry_reserve)
                 rej_acc = rej_acc + (int(rej.sum()) if legacy
                                      else rej.sum().astype(jnp.int32))
                 window.clear()
@@ -554,6 +568,11 @@ def _dispatch_loop(engine, state, esc, no_b, pay_b, os_b, sl_b, *,
             stats.anti_entropy_rounds += 1
             rounds += 1
             if escrow:
+                if liveness is not None:
+                    # self-derived mask: one monitor tick per drain window,
+                    # feeding the reclamation refresh below — no caller-
+                    # provided omniscient view
+                    alive = liveness.tick().astype(np.int32)
                 if adaptive:
                     # the one host read adaptive control costs, per window
                     commits_now = np.asarray(jax.device_get(pr_commit),

@@ -317,25 +317,28 @@ class Engine:
             self._refresh_escrow = jax.jit(_refresh, donate_argnums=1)
             self._drain_strict = jax.jit(_drain_strict, donate_argnums=0)
 
-            self.retry_spec = tpcc.RetryState(*([P(self.axis_names)] * 5))
+            self.retry_spec = tpcc.RetryState(*([P(self.axis_names)] * 6))
 
             @functools.partial(
                 shard_map, mesh=self.mesh,
                 in_specs=(self.state_spec, self.batch_spec,
-                          self.retry_spec, P()),
+                          self.retry_spec, P(), P()),
                 out_specs=(self.state_spec, self.retry_spec,
                            self.batch_spec),
                 check_vma=False)
             def _drain_strict_retry(state: TPCCState, outbox: StockDelta,
-                                    retry, retry_max):
+                                    retry, retry_max, reserve):
                 # strict drain with the bounded owner-side retry ring: ring
                 # entries are re-presented first, fresh cold rejects requeue
-                # (up to retry_max windows) instead of silently dropping.
-                # Sparse-only (dense has no cold tier).
+                # (up to retry_max windows) instead of silently dropping;
+                # reserve > 0 adds the owner-granted reservation round-trip
+                # for last-chance losers. Sparse-only (dense has no cold
+                # tier).
                 w_lo = self._shard_index() * self.w_per_shard
                 return gather_and_apply_outbox_strict_retry(
                     state, outbox, retry, self.hot_keys, ax, w_lo,
-                    self.w_per_shard, self.scale.n_items, retry_max)
+                    self.w_per_shard, self.scale.n_items, retry_max,
+                    reserve)
 
             if sparse:
                 self._drain_strict_retry = jax.jit(_drain_strict_retry,
@@ -438,24 +441,27 @@ class Engine:
 
     def retry_input_specs(self, retry_cap: int) -> tpcc.RetryState:
         i32 = jax.ShapeDtypeStruct((self.n_shards, retry_cap), jnp.int32)
-        return tpcc.RetryState(
-            i32, i32, i32, i32,
-            jax.ShapeDtypeStruct((self.n_shards, retry_cap), jnp.bool_))
+        b = jax.ShapeDtypeStruct((self.n_shards, retry_cap), jnp.bool_)
+        return tpcc.RetryState(i32, i32, i32, i32, b, b)
 
     def drain_strict_retry(self, state: TPCCState, outbox: StockDelta,
-                           retry: tpcc.RetryState, retry_max=0
+                           retry: tpcc.RetryState, retry_max=0, reserve=0
                            ) -> tuple[TPCCState, tpcc.RetryState, Array]:
         """Strict drain with the bounded cold-retry ring: owner-rejected
         remote-cold entries are re-presented for up to ``retry_max`` drain
         windows (a traced scalar — no recompile per value) before counting
-        as FINAL rejects. Returns (state, retry', per-shard final-reject
-        counts [n_shards]). Sparse layout only (dense has no cold tier)."""
+        as FINAL rejects; ``reserve`` > 0 (also traced) converts
+        last-chance losers into owner-granted reservations instead (see
+        tpcc.apply_stock_updates_strict_tiered_retry). Returns (state,
+        retry', per-shard final-reject counts [n_shards]). Sparse layout
+        only (dense has no cold tier)."""
         self._require_escrow()
         if self.escrow_layout != "sparse":
             raise RuntimeError("drain_strict_retry requires the sparse "
                                "(two-tier) escrow layout")
         return self._drain_strict_retry(state, outbox, retry,
-                                        jnp.asarray(retry_max, jnp.int32))
+                                        jnp.asarray(retry_max, jnp.int32),
+                                        jnp.asarray(reserve, jnp.int32))
 
     def escrow_bytes_per_device(self) -> dict:
         """Per-device escrow residency of this engine's layout vs the dense
@@ -658,15 +664,17 @@ def gather_and_apply_outbox_strict(state: TPCCState, outbox, hot_keys,
 def gather_and_apply_outbox_strict_retry(state: TPCCState, outbox, retry,
                                          hot_keys, axis_names, w_lo,
                                          w_per_shard, n_items: int,
-                                         retry_max) -> tuple[
+                                         retry_max, reserve=0) -> tuple[
                                              TPCCState, "tpcc.RetryState",
                                              Array]:
     """The retry-aware sparse strict-drain body, shared by
     Engine.drain_strict_retry and the fused executor's retry ring drain:
     all-gather every shard's outbox and strictly apply the entries this
     shard owns, re-presenting this owner's bounded retry ring first
-    (tpcc.apply_stock_updates_strict_tiered_retry). ``retry`` arrives as
-    the per-shard [1, C] view; returns (state, retry', final-rejects [1])."""
+    (tpcc.apply_stock_updates_strict_tiered_retry; ``reserve`` > 0 enables
+    the owner-granted reservation round-trip for last-chance losers).
+    ``retry`` arrives as the per-shard [1, C] view; returns (state, retry',
+    final-rejects [1])."""
     gathered = jax.tree.map(
         lambda x: _multi_axis_all_gather(x, axis_names), outbox)
     dst = gathered.dst_w.reshape(-1)
@@ -677,7 +685,7 @@ def gather_and_apply_outbox_strict_retry(state: TPCCState, outbox, retry,
     ring = jax.tree.map(lambda x: x[0], retry)
     state, ring, final = tpcc.apply_stock_updates_strict_tiered_retry(
         state, hot_keys, dst, i_id, qty, own, jnp.ones_like(own), ring,
-        n_items, w_lo=w_lo, retry_max=retry_max)
+        n_items, w_lo=w_lo, retry_max=retry_max, reserve=reserve)
     return state, jax.tree.map(lambda x: x[None], ring), final.reshape(1)
 
 

@@ -420,23 +420,25 @@ class FusedExecutor:
                 valid=jnp.zeros_like(ring.valid)), esc, rej
 
         retry_spec = tpcc.RetryState(
-            *([jax.sharding.PartitionSpec(ax)] * 5))
+            *([jax.sharding.PartitionSpec(ax)] * 6))
 
         @functools.partial(
             shard_map, mesh=eng.mesh,
             in_specs=(state_spec, shard1_spec, retry_spec,
+                      jax.sharding.PartitionSpec(),
                       jax.sharding.PartitionSpec()),
             out_specs=(state_spec, shard1_spec, retry_spec, count_spec),
             check_vma=False)
         def _drain_strict_retry(state: TPCCState, ring: OutboxRing, retry,
-                                retry_max):
+                                retry_max, reserve):
             # strict ring drain + bounded retry: the owner's rejected cold
             # entries re-present first, fresh rejects requeue up to
-            # retry_max windows (sparse-only; built when retry_cap > 0)
+            # retry_max windows; reserve > 0 grants last-chance losers an
+            # owner reservation (sparse-only; built when retry_cap > 0)
             w_lo = eng._shard_index() * eng.w_per_shard
             state, retry, rej = gather_and_apply_outbox_strict_retry(
                 state, ring, retry, eng.hot_keys, ax, w_lo, eng.w_per_shard,
-                scale.n_items, retry_max)
+                scale.n_items, retry_max, reserve)
             return state, ring._replace(
                 valid=jnp.zeros_like(ring.valid)), retry, rej
 
@@ -444,19 +446,20 @@ class FusedExecutor:
             shard_map, mesh=eng.mesh,
             in_specs=(state_spec, shard1_spec, retry_spec, esc_spec,
                       jax.sharding.PartitionSpec(),
+                      jax.sharding.PartitionSpec(),
                       jax.sharding.PartitionSpec()),
             out_specs=(state_spec, shard1_spec, retry_spec, esc_spec,
                        count_spec),
             check_vma=False)
         def _drain_refresh_retry(state: TPCCState, ring: OutboxRing, retry,
-                                 esc, alive, retry_max):
+                                 esc, alive, retry_max, reserve):
             # fused retry drain + reclaiming share refresh — still one
             # collective program per refresh boundary
             idx = eng._shard_index()
             w_lo = idx * eng.w_per_shard
             state, retry, rej = gather_and_apply_outbox_strict_retry(
                 state, ring, retry, eng.hot_keys, ax, w_lo, eng.w_per_shard,
-                scale.n_items, retry_max)
+                scale.n_items, retry_max, reserve)
             esc = gather_and_refresh_hot_shares(
                 state, esc.keys, ax, idx, eng.n_shards, scale.n_items,
                 w_lo, eng.w_per_shard, alive=alive)
@@ -559,15 +562,17 @@ class FusedExecutor:
         return self.engine.init_retry(self.retry_cap)
 
     def drain_strict_retry(self, state: TPCCState, ring: OutboxRing,
-                           retry, retry_max=0):
+                           retry, retry_max=0, reserve=0):
         """Retry-aware strict ring drain. Returns (state, ring, retry',
         per-shard FINAL-reject counts) — entries still in the ring are
-        pending, not rejected."""
+        pending, not rejected. ``reserve`` > 0 (traced) enables the
+        owner-granted reservation round-trip for last-chance losers."""
         return self._drain_strict_retry(state, ring, retry,
-                                        jnp.asarray(retry_max, jnp.int32))
+                                        jnp.asarray(retry_max, jnp.int32),
+                                        jnp.asarray(reserve, jnp.int32))
 
     def drain_refresh_retry(self, state: TPCCState, ring: OutboxRing,
-                            retry, esc, alive=None, retry_max=0):
+                            retry, esc, alive=None, retry_max=0, reserve=0):
         """Retry-aware drain + reclaiming share refresh (one collective
         program). Returns (state, ring, retry', esc, per-shard final
         rejects)."""
@@ -575,7 +580,8 @@ class FusedExecutor:
             alive = self.engine._alive_all
         return self._drain_refresh_retry(state, ring, retry, esc,
                                          jnp.asarray(alive, jnp.int32),
-                                         jnp.asarray(retry_max, jnp.int32))
+                                         jnp.asarray(retry_max, jnp.int32),
+                                         jnp.asarray(reserve, jnp.int32))
 
     def run(self, state: TPCCState, chunks: Sequence[MixChunk],
             *, warmup: bool = True, obs=None
@@ -647,6 +653,7 @@ class FusedExecutor:
                    refresh_abort_rate: float | None = None,
                    warmup: bool = True, obs=None,
                    retry=None, retry_max: int = 0, alive=None,
+                   reserve: int = 0, liveness=None,
                    final_flush: bool = True
                    ) -> tuple[TPCCState, object, MixCounters,
                               float, int, int, object]:
@@ -663,8 +670,13 @@ class FusedExecutor:
         ``cold_rejects`` counts FINAL rejects only; ``final_flush`` adds the
         run-end pending ring entries to that count (set False when the ring
         is checkpointed and the run will resume). ``alive`` ([n_shards]
-        mask) threads share reclamation into each refresh. Returns (state,
-        esc, counters, wall_seconds, refreshes, cold_rejects, retry)."""
+        mask) threads share reclamation into each refresh; ``liveness`` (a
+        ``runtime.liveness.LeaseMonitor``) DERIVES that mask instead — the
+        monitor ticks once per chunk (one drain window) and its
+        lease-expiry view feeds every refresh, so no caller-provided mask
+        is needed. ``reserve`` > 0 (traced — same compiled drain) enables
+        the cold-line reservation round-trip. Returns (state, esc,
+        counters, wall_seconds, refreshes, cold_rejects, retry)."""
         if not self._escrow:
             raise RuntimeError("executor is not in the escrow regime "
                                "(engine plan says merge) — use run()")
@@ -697,9 +709,10 @@ class FusedExecutor:
                                              chunk)
                 if use_retry:
                     w2 = self.drain_refresh_retry(w[0], w[1], copy(retry),
-                                                  w[3], alive, retry_max)
+                                                  w[3], alive, retry_max,
+                                                  reserve)
                     jax.block_until_ready(self.drain_strict_retry(
-                        w2[0], w2[1], w2[2], retry_max))
+                        w2[0], w2[1], w2[2], retry_max, reserve))
                 else:
                     w2 = self.drain_refresh(w[0], w[1], w[3], alive)
                     jax.block_until_ready(self.drain_strict(w2[0], w2[1]))
@@ -745,12 +758,19 @@ class FusedExecutor:
                     txns_at_refresh = txns_so_far
             else:
                 due = (ci + 1) % refresh_every == 0
+            if liveness is not None:
+                # the liveness monitor ticks once per drain window: its
+                # stamp source joins the fleet's heartbeat high-water marks
+                # (riding the drain — no extra collective) and the derived
+                # lease-expiry mask feeds the next share refresh
+                alive = liveness.tick().astype(np.int32)
             if due:
                 with span("share-refresh"):
                     if use_retry:
                         state, ring, retry, esc, rej = \
                             self.drain_refresh_retry(state, ring, retry,
-                                                     esc, alive, retry_max)
+                                                     esc, alive, retry_max,
+                                                     reserve)
                     else:
                         state, ring, esc, rej = self.drain_refresh(
                             state, ring, esc, alive)
@@ -761,7 +781,7 @@ class FusedExecutor:
                 with span("outbox-drain"):
                     if use_retry:
                         state, ring, retry, rej = self.drain_strict_retry(
-                            state, ring, retry, retry_max)
+                            state, ring, retry, retry_max, reserve)
                     else:
                         state, ring, rej = self.drain_strict(state, ring)
                     if obs is not None:
@@ -915,6 +935,7 @@ class FusedExecutor:
             tpcc.state_shape_dtypes(self.engine.scale),
             self._ring_specs(batch_per_shard),
             self.engine.retry_input_specs(self.retry_cap),
+            jax.ShapeDtypeStruct((), jnp.int32),
             jax.ShapeDtypeStruct((), jnp.int32)).compile().as_text()
         return collective_stats(text)
 

@@ -136,15 +136,15 @@ def restore_run(directory: str, engine=None, *,
     if retry_names:
         shape = _peek_shape(directory, man, retry_names[0])
         i32 = jax.ShapeDtypeStruct(shape, jnp.int32)
-        abstract["retry"] = tpcc.RetryState(
-            i32, i32, i32, i32, jax.ShapeDtypeStruct(shape, jnp.bool_))
+        b = jax.ShapeDtypeStruct(shape, jnp.bool_)
+        abstract["retry"] = tpcc.RetryState(i32, i32, i32, i32, b, b)
         if engine is not None:
             # engine rings are [n_shards, C] on the owner dim; anything
             # else (host-side per-replica rings) restores replicated
             lanes = (NamedSharding(engine.mesh, P(engine.axis_names))
                      if len(shape) == 2 and shape[0] == engine.n_shards
                      else NamedSharding(engine.mesh, P()))
-            shardings["retry"] = tpcc.RetryState(*([lanes] * 5))
+            shardings["retry"] = tpcc.RetryState(*([lanes] * 6))
 
     if not ckpt.is_complete(man, abstract):
         missing = ({n for n, _ in _leaf_names(abstract)} - names)

@@ -1157,11 +1157,14 @@ class RetryState(NamedTuple):
     silently dropping on the first miss.
     """
 
-    dst_w: Array  # [C] int32 GLOBAL destination warehouse
-    i_id: Array   # [C] int32
-    qty: Array    # [C] int32
-    tries: Array  # [C] int32 drain windows already lost
-    valid: Array  # [C] bool
+    dst_w: Array     # [C] int32 GLOBAL destination warehouse
+    i_id: Array      # [C] int32
+    qty: Array       # [C] int32
+    tries: Array     # [C] int32 drain windows already lost
+    valid: Array     # [C] bool
+    reserved: Array  # [C] bool owner-granted reservation (stock already
+    #                  debited; completes — frees the lane and counts as
+    #                  applied — at the next drain window)
 
 
 def empty_retry(capacity: int) -> RetryState:
@@ -1169,13 +1172,15 @@ def empty_retry(capacity: int) -> RetryState:
                       jnp.zeros((capacity,), jnp.int32),
                       jnp.zeros((capacity,), jnp.int32),
                       jnp.zeros((capacity,), jnp.int32),
+                      jnp.zeros((capacity,), jnp.bool_),
                       jnp.zeros((capacity,), jnp.bool_))
 
 
 def apply_stock_updates_strict_tiered_retry(
         state: TPCCState, hot_keys: Array, dst_w: Array, i_idx: Array,
         qty: Array, mask: Array, remote: Array, retry: RetryState,
-        n_items: int, w_lo: int = 0, retry_max: Array | int = 0
+        n_items: int, w_lo: int = 0, retry_max: Array | int = 0,
+        reserve: Array | int = 0
         ) -> tuple[TPCCState, RetryState, Array]:
     """Strict tiered drain with a bounded retry ring (two passes).
 
@@ -1205,9 +1210,35 @@ def apply_stock_updates_strict_tiered_retry(
     than silent drops. With ``retry_max=0`` and an empty ring this is
     bit-exactly the non-retry drain (pass 1's masked scatter-adds of zero
     are bitwise identity). Returns (state, retry', final-reject count).
+
+    ``reserve`` (traced scalar, default 0 = off) bounds tail starvation
+    under sustained contention with an owner-granted RESERVATION
+    round-trip. Pass 1's prefix rule head-of-line blocks: the cumulative
+    demand includes rejected entries, so a small line sorted behind a big
+    never-fitting blocker at the same cell is rejected every window even
+    while raw stock covers it — greedy-by-age alone final-rejects it. With
+    ``reserve`` on, an entry that has now lost its ``retry_max - 1``'th
+    window instead bids for the window's LEFTOVER stock (smallest-first
+    within the cell, free of the blocker's prefix): a grant debits stock
+    immediately (the reservation IS the admission — never-oversell and
+    stock conservation are preserved at every instant) and the entry rides
+    the ring one more window flagged ``reserved``; the next drain's pass 0
+    completes it (frees the lane — it then counts as applied, not final).
+    A failed bid requeues normally and final-rejects on its next loss.
+    With ``reserve=0`` every reservation mask is statically false and the
+    drain is bit-identical to the reservation-free path.
     """
     retry_max = jnp.asarray(retry_max, jnp.int32)
+    reserve = jnp.asarray(reserve, jnp.int32)
     C = retry.valid.shape[0]
+
+    # -- pass 0: complete reservations granted last window (the round-trip's
+    # second leg). Their stock was debited at grant time, so completion is
+    # pure bookkeeping: the lane frees and the entry leaves the ring without
+    # touching the final-reject count — the exact ledger counts it applied.
+    done = retry.valid & retry.reserved & (reserve > 0)
+    retry = retry._replace(valid=retry.valid & ~done,
+                           reserved=jnp.zeros_like(retry.reserved))
 
     # -- pass 1: ring entries (cold, owned here, remote to their senders) --
     r_valid = retry.valid
@@ -1256,12 +1287,39 @@ def apply_stock_updates_strict_tiered_retry(
     f_requeue = f_rej & (retry_max > 0)
     f_final = f_rej & (retry_max <= 0)
 
+    # -- pass 3 (reservations): last-chance ring losers bid for the window's
+    # leftover stock. Candidates are entries whose NEXT loss would be final;
+    # the bid is a per-cell cumulative prefix over candidates only, sorted
+    # smallest-qty-first — the big blocker that starves them in pass 1 can
+    # never fit here either, but it no longer poisons the prefix. Grants
+    # debit stock NOW and mark the lane reserved; pass 0 of the next drain
+    # completes them (the owner-granted round-trip).
+    last_chance = r_requeue & (r_tries >= retry_max - 1) & (reserve > 0)
+    g_cell = jnp.where(last_chance, retry.dst_w * n_items + retry.i_id,
+                       jnp.iinfo(jnp.int32).max)
+    g_order = jnp.lexsort((retry.qty, g_cell))
+    gq_s = jnp.where(last_chance, retry.qty, 0)[g_order]
+    gc_s = g_cell[g_order]
+    gv_s = last_chance[g_order]
+    gcsum = jnp.cumsum(gq_s)
+    g_seg = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), gc_s[1:] != gc_s[:-1]])
+    g_prefix = gcsum - jax.lax.cummax(jnp.where(g_seg, gcsum - gq_s, 0))
+    g_stock = state.s_quantity[
+        jnp.where(gv_s, retry.dst_w[g_order] - w_lo, 0),
+        jnp.where(gv_s, retry.i_id[g_order], 0)]
+    granted = jnp.zeros_like(last_chance).at[g_order].set(
+        gv_s & (g_prefix <= g_stock))
+    state = apply_stock_updates(state, r_w, r_i, retry.qty, granted,
+                                jnp.ones_like(granted), restock=False)
+
     # -- compact survivors ring-first into the fixed [C] ring --
     cand_keep = jnp.concatenate([r_requeue, f_requeue])
     cand_w = jnp.concatenate([retry.dst_w, dst_w])
     cand_i = jnp.concatenate([retry.i_id, i_idx])
     cand_q = jnp.concatenate([retry.qty, qty])
     cand_t = jnp.concatenate([r_tries, jnp.zeros_like(dst_w)])
+    cand_r = jnp.concatenate([granted, jnp.zeros_like(mask)])
     rank = jnp.cumsum(cand_keep.astype(jnp.int32)) - 1
     keep = cand_keep & (rank < C)
     overflow = cand_keep & (rank >= C)
@@ -1276,7 +1334,7 @@ def apply_stock_updates_strict_tiered_retry(
 
     new_retry = RetryState(_pack(cand_w, jnp.int32), _pack(cand_i, jnp.int32),
                            _pack(cand_q, jnp.int32), _pack(cand_t, jnp.int32),
-                           _pack(keep, jnp.bool_))
+                           _pack(keep, jnp.bool_), _pack(cand_r, jnp.bool_))
     final = (r_final.sum() + f_final.sum() + overflow.sum()).astype(jnp.int32)
     return state, new_retry, final
 
